@@ -1,0 +1,57 @@
+"""Fig. 4 reproduction: cosine similarity gamma_t over sampling time.
+
+Claim validated: gamma_t rises (near-monotonically) toward 1 during the
+denoising process — the convergence AG exploits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import N_CLASSES, emit, get_trained_dit
+from repro.core import policy as pol
+from repro.diffusion.sampler import dit_eps_model, sample_with_policy
+from repro.diffusion.solvers import get_solver
+
+
+def main(steps: int = 20, scale: float = 4.0, n_batches: int = 4, batch: int = 8):
+    cfg, api, params, sched = get_trained_dit()
+    model = dit_eps_model(api)
+    solver = get_solver("dpmpp_2m", sched)
+    key = jax.random.PRNGKey(0)
+    gammas = []
+    for _ in range(n_batches):
+        key, k1, k2 = jax.random.split(key, 3)
+        x_T = jax.random.normal(k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+        cond = jax.random.randint(k2, (batch,), 0, N_CLASSES)
+        _, info = sample_with_policy(
+            model, params, solver, pol.cfg_policy(steps, scale), x_T, cond, collect=True
+        )
+        gammas.append(np.asarray(info["gammas"]))
+    g = np.concatenate(gammas, axis=1)  # (steps, N)
+    mean, std = g.mean(1), g.std(1)
+    print("# step, gamma_mean, gamma_std  (sampling order T -> 0)")
+    for i in range(steps):
+        print(f"fig4_gamma_step{i:02d},{mean[i]:.6f},{std[i]:.6f}")
+    inc_frac = float(np.mean(np.diff(mean) >= -1e-3))
+    emit("fig4_cosine_final", 0.0,
+         f"gamma_end={mean[-1]:.6f};gamma_start={mean[0]:.6f};gamma_min={mean.min():.6f};frac_nondecreasing={inc_frac:.2f}")
+
+    # ablation: the paper says AG "is independent of the particular time
+    # schedule and solver" — verify gamma convergence holds across solvers
+    for sname in ("ddim", "euler"):
+        sv = get_solver(sname, sched)
+        key2, k1, k2 = jax.random.split(jax.random.PRNGKey(42), 3)
+        x_T = jax.random.normal(k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+        cond = jax.random.randint(k2, (batch,), 0, N_CLASSES)
+        _, inf = sample_with_policy(
+            model, params, sv, pol.cfg_policy(steps, scale), x_T, cond, collect=True
+        )
+        g2 = np.asarray(inf["gammas"]).mean(1)
+        emit(f"fig4_ablation_{sname}", 0.0,
+             f"gamma_end={g2[-1]:.6f};gamma_min={g2.min():.6f};"
+             f"converges={int(g2[-1] >= g2.min())}")
+    return {"mean": mean, "std": std}
+
+
+if __name__ == "__main__":
+    main()

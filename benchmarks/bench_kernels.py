@@ -1,0 +1,44 @@
+"""Kernel microbenches (footnote-1 latency economics on the TPU target).
+
+On CPU the Pallas kernels run in interpret mode (a correctness vehicle, not
+a timing one), so we report: (i) allclose vs oracle, (ii) the HBM-traffic
+model that motivates the fusion (bytes naive vs fused), and (iii) wall time
+of the XLA-fused reference as the us_per_call column.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.guidance import cfg_combine_with_gamma
+from repro.kernels import fused_guidance, linear_combine
+from repro.kernels.ref import fused_guidance_ref, linear_combine_ref
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    B, N = 8, 4 * 64 * 64  # EMU-768-like latent rows
+    u = jax.random.normal(key, (B, N), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(1), (B, N), jnp.float32)
+
+    out, gamma = fused_guidance(u, c, 7.5)
+    ro, rg = fused_guidance_ref(u, c, 7.5)
+    ok = bool(jnp.allclose(out, ro, atol=1e-5) and jnp.allclose(gamma, rg, atol=1e-5))
+    elem = B * N * 4
+    naive_traffic = 5 * elem + elem  # combine(2r+1w) + dot(2r) + 2 norms(~1r ea, fused)
+    fused_traffic = 2 * elem + elem
+    us = timed(jax.jit(lambda a, b: cfg_combine_with_gamma(a, b, 7.5)), u, c)
+    emit("kernel_fused_guidance", us,
+         f"allclose={int(ok)};traffic_cut={naive_traffic/fused_traffic:.2f}x")
+
+    K = 21
+    h = jax.random.normal(key, (K, N), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (K,))
+    lc = linear_combine(h, b)
+    ok2 = bool(jnp.allclose(lc, linear_combine_ref(h, b)[0], atol=1e-4))
+    us2 = timed(jax.jit(lambda hh, bb: jnp.einsum("k,kn->n", bb, hh)), h, b)
+    emit("kernel_linear_combine", us2, f"allclose={int(ok2)};K={K}")
+
+
+if __name__ == "__main__":
+    main()

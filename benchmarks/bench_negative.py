@@ -1,0 +1,83 @@
+"""Fig. 7 / Fig. 11 reproduction: AG with non-empty negative prompts.
+
+The paper's key advantage over Guidance Distillation is that AG handles
+*dynamic* negative prompts: the unconditional branch is replaced by a
+negative condition, CFG steers away from it, and AG still truncates when
+the two branches converge.
+
+Setup: the class-conditioned DiT; the negative "prompt" is another class id
+fed to the uncond branch.  Validations:
+  (i)  negative guidance steers: the sample correlates LESS with the
+       negative class's template than an unguided conditional sample does;
+  (ii) AG with negative prompts replicates full negative-CFG (SSIM) while
+       saving NFEs — "AG produces similar results to CFG when using
+       non-empty negative prompts" (Fig. 7).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import N_CLASSES, emit, get_trained_dit
+from repro.core import policy as pol
+from repro.core.adaptive import ag_sample, calibrate_gamma_bar
+from repro.data.synthetic import ImageDataset
+from repro.diffusion.sampler import dit_eps_model, sample_with_policy
+from repro.diffusion.solvers import get_solver
+from repro.metrics.ssim import ssim
+
+
+def _corr(a, b):
+    a = np.asarray(a, np.float64).reshape(a.shape[0], -1)
+    b = np.asarray(b, np.float64).reshape(b.shape[0], -1)
+    a = a - a.mean(1, keepdims=True)
+    b = b - b.mean(1, keepdims=True)
+    return (a * b).sum(1) / np.sqrt((a ** 2).sum(1) * (b ** 2).sum(1))
+
+
+def main(steps: int = 20, scale: float = 4.0, batch: int = 8):
+    cfg, api, params, sched = get_trained_dit()
+    model = dit_eps_model(api)
+    solver = get_solver("dpmpp_2m", sched)
+    ds = ImageDataset(num_classes=N_CLASSES, channels=cfg.latent_ch, hw=cfg.latent_hw)
+
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x_T = jax.random.normal(k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+    cond = jax.random.randint(k2, (batch,), 0, N_CLASSES)
+    neg = (cond + N_CLASSES // 2) % N_CLASSES  # a far-away class as negative
+
+    # baseline: full CFG with negative prompt on the uncond branch
+    base, _ = sample_with_policy(
+        model, params, solver, pol.cfg_policy(steps, scale), x_T, cond, neg_cond=neg
+    )
+    # plain conditional (no guidance) for the steering comparison
+    plain, _ = sample_with_policy(
+        model, params, solver, pol.cond_policy(steps), x_T, cond
+    )
+    neg_template = ds.render(neg, k3)
+    c_base = _corr(base, neg_template)
+    c_plain = _corr(plain, neg_template)
+    emit(
+        "fig7_negative_steers", 0.0,
+        f"corr_negcfg={c_base.mean():.4f};corr_plain={c_plain.mean():.4f};"
+        f"steered_away={int(c_base.mean() < c_plain.mean())}",
+    )
+
+    gb = calibrate_gamma_bar(
+        model, params, solver, steps, scale, x_T, cond, neg_cond=neg, target_frac=0.5
+    )
+    x_ag, info = ag_sample(
+        model, params, solver, steps, scale, gb, x_T, cond, neg_cond=neg
+    )
+    nfes = np.asarray(info["nfes"])
+    s = np.asarray(ssim(x_ag, base))
+    emit(
+        "fig7_negative_ag", 0.0,
+        f"gamma_bar={gb:.6f};nfe_mean={nfes.mean():.1f};cfg_nfe={2*steps};"
+        f"savings_pct={100*(1-nfes.mean()/(2*steps)):.1f};ssim={s.mean():.4f}",
+    )
+    return {"steer": (c_base, c_plain), "ssim": s, "nfes": nfes}
+
+
+if __name__ == "__main__":
+    main()

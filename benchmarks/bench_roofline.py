@@ -1,0 +1,36 @@
+"""Section Roofline table: aggregates experiments/dryrun/*.json into the
+per-(arch x shape x mesh) roofline report."""
+import glob
+import json
+import os
+
+
+def main(path: str = "experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "skipped":
+            rows.append((r["arch"], r["shape"], r["multi_pod"], "SKIP", None))
+            continue
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], r["multi_pod"], "ERR", None))
+            continue
+        rows.append((r["arch"], r["shape"], r["multi_pod"], "ok", r))
+    print("# arch, shape, mesh, bottleneck, t_compute_s, t_memory_s, t_coll_s, mem_GiB, fits, useful_ratio")
+    for arch, shape, mp, status, r in rows:
+        mesh = "2x16x16" if mp else "16x16"
+        if r is None:
+            print(f"roofline_{arch}_{shape}_{mesh},0.0,status={status}")
+            continue
+        ro = r["roofline"]
+        print(
+            f"roofline_{arch}_{shape}_{mesh},0.0,"
+            f"bottleneck={ro['bottleneck']};tc={ro['t_compute_s']:.3e};"
+            f"tm={ro['t_memory_s']:.3e};tx={ro['t_collective_s']:.3e};"
+            f"mem={r['memory']['peak_est_bytes']/2**30:.2f}GiB;fits={int(r['fits_hbm'])};"
+            f"useful={ro['useful_ratio']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Table 1 reproduction (SSIM proxy for the human eval): adaptive AG at a
+gamma_bar tuned for ~25% NFE savings vs the 2T-NFE CFG baseline.
+
+Claims validated: (i) ~25% fewer NFEs, (ii) replication quality at the
+level the paper reports (SSIM ~= 0.91 between *independent* CFG runs is the
+paper's quality bar; we report AG-vs-baseline SSIM which must be >= that).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import N_CLASSES, emit, get_trained_dit
+from repro.core import policy as pol
+from repro.core.adaptive import ag_sample
+from repro.diffusion.sampler import dit_eps_model, sample_with_policy
+from repro.diffusion.solvers import get_solver
+from repro.metrics.ssim import ssim
+
+
+def main(steps: int = 20, scale: float = 4.0, batch: int = 16, gamma_bar: float = None):
+    cfg, api, params, sched = get_trained_dit()
+    model = dit_eps_model(api)
+    solver = get_solver("dpmpp_2m", sched)
+    key = jax.random.PRNGKey(2)
+    k1, k2 = jax.random.split(key)
+    x_T = jax.random.normal(k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+    cond = jax.random.randint(k2, (batch,), 0, N_CLASSES)
+    baseline, binfo = sample_with_policy(
+        model, params, solver, pol.cfg_policy(steps, scale), x_T, cond
+    )
+
+    if gamma_bar is None:
+        # calibrate gamma_bar for ~25% savings (the paper's 0.991 at 20
+        # steps); absolute gamma scale is model-dependent (see bench_cosine)
+        from repro.core.adaptive import calibrate_gamma_bar
+
+        gamma_bar = calibrate_gamma_bar(
+            model, params, solver, steps, scale, x_T, cond, target_frac=0.5
+        )
+
+    x_ag, info = ag_sample(model, params, solver, steps, scale, gamma_bar, x_T, cond)
+    nfes = np.asarray(info["nfes"])
+    s = np.asarray(ssim(x_ag, baseline))
+    save = 100 * (1 - nfes.mean() / (2 * steps))
+    emit(
+        "table1_ag", 0.0,
+        f"gamma_bar={gamma_bar};nfe_mean={nfes.mean():.1f};nfe_std={nfes.std():.1f};"
+        f"cfg_nfe={2*steps};savings_pct={save:.1f};ssim_mean={s.mean():.4f};ssim_std={s.std():.4f}",
+    )
+    # paper-matched operating point: exactly ~25% savings (30/40 NFEs at
+    # 20 steps) via the static AG policy at T/2 truncation
+    x_25, _ = sample_with_policy(
+        model, params, solver, pol.ag_policy(steps, scale, truncate_at=steps // 2),
+        x_T, cond,
+    )
+    s25 = np.asarray(ssim(x_25, baseline))
+    emit(
+        "table1_ag_paper_point", 0.0,
+        f"nfe={int(1.5 * steps)};cfg_nfe={2*steps};savings_pct=25.0;"
+        f"ssim_mean={s25.mean():.4f};ssim_std={s25.std():.4f}",
+    )
+    # paper Table 1: CFG 40 NFE vs AG 29.6 +- 1.3 NFE at equal quality
+    return {"gamma_bar": gamma_bar, "nfes": nfes, "ssim": s}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Shared benchmark infrastructure.
+
+``get_trained_dit()`` trains the reduced LDM-DiT once on the synthetic
+conditioned dataset and caches the checkpoint under experiments/ — every
+paper-figure benchmark loads the same model, mirroring how the paper runs
+everything on one LDM-512.  ``get_trained_lm()`` does the same for the
+guided-decoding transfer benchmarks.
+
+Output convention (benchmarks/run.py): ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import ImageDataset, TokenDataset
+from repro.diffusion.schedule import cosine_schedule
+from repro.models import build
+from repro.training import checkpoint
+from repro.training.optim import adamw
+from repro.training.train_loop import make_dit_train_step, make_lm_train_step
+
+CKPT_DIR = os.environ.get("REPRO_CKPT_DIR", "experiments/ckpts")
+# number of condition classes actually used for training/eval: small and
+# well-separated so a 2-layer DiT can learn conditioning that matters
+# (the config's vocab_size bounds the embedding table, not the task)
+N_CLASSES = 8
+DIT_STEPS = int(os.environ.get("REPRO_DIT_STEPS", "600"))
+LM_STEPS = int(os.environ.get("REPRO_LM_STEPS", "300"))
+SCHED_T = 200
+
+
+def get_trained_dit(steps: int = None, seed: int = 0):
+    steps = steps or DIT_STEPS
+    cfg = get_config("ldm-dit").reduced()
+    api = build(cfg)
+    sched = cosine_schedule(SCHED_T)
+    params = api.init(jax.random.PRNGKey(seed))
+    path = os.path.join(CKPT_DIR, f"dit_reduced_{steps}_c{N_CLASSES}.npz")
+    if os.path.exists(path):
+        params = checkpoint.load(path, params)
+        return cfg, api, params, sched
+    ds = ImageDataset(num_classes=N_CLASSES, channels=cfg.latent_ch, hw=cfg.latent_hw)
+    opt = adamw(lr=2e-3, warmup=50)
+    st = opt.init(params)
+    step = make_dit_train_step(api, sched, opt)
+    key = jax.random.PRNGKey(seed + 1)
+    t0 = time.time()
+    for i in range(steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        x0, cond = ds.sample(k1, 32)
+        params, st, m = step(params, st, {"x0": x0, "cond": cond}, k2)
+        if i % 100 == 0:
+            print(f"  [dit-train] step {i} loss={float(m['loss']):.4f} ({time.time()-t0:.0f}s)")
+    checkpoint.save(path, params)
+    print(f"  [dit-train] done loss={float(m['loss']):.4f}, cached -> {path}")
+    return cfg, api, params, sched
+
+
+def get_trained_lm(steps: int = None, seed: int = 0, arch: str = "llama3.2-1b"):
+    steps = steps or LM_STEPS
+    cfg = get_config(arch).reduced()
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    path = os.path.join(CKPT_DIR, f"lm_{arch.replace('.', '_')}_{steps}.npz")
+    if os.path.exists(path):
+        params = checkpoint.load(path, params)
+        return cfg, api, params
+    ds = TokenDataset(vocab_size=cfg.vocab_size)
+    opt = adamw(lr=2e-3, warmup=30)
+    st = opt.init(params)
+    step = make_lm_train_step(api, opt)
+    key = jax.random.PRNGKey(seed + 1)
+    for i in range(steps):
+        key, k1 = jax.random.split(key)
+        toks, cond = ds.sample(k1, 16, 65)
+        params, st, m = step(params, st, {"tokens": toks[:, :-1], "labels": toks[:, 1:]})
+        if i % 100 == 0:
+            print(f"  [lm-train] step {i} loss={float(m['loss']):.4f}")
+    checkpoint.save(path, params)
+    return cfg, api, params
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, reps: int = 3):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6

@@ -1,0 +1,79 @@
+"""Render experiments/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def fmt_t(x):
+    return f"{x:.2e}"
+
+
+def load(path="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def dryrun_table(recs, multi_pod: bool) -> str:
+    rows = [
+        "| arch | shape | status | mem/dev (GiB) | fits 16G | all-gather | all-reduce | reduce-scatter | all-to-all | permute |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["multi_pod"] != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP (DESIGN.md) | – | – | – | – | – | – | – |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | – | – | – | – | – | – | – |")
+            continue
+        m = r["memory"]["peak_est_bytes"] / 2 ** 30
+        c = r["collectives"]
+        gb = lambda x: f"{x/2**20:.1f}M" if x < 2 ** 30 else f"{x/2**30:.2f}G"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {m:.2f} | {'yes' if r['fits_hbm'] else 'NO'} "
+            f"| {gb(c['all-gather'])} | {gb(c['all-reduce'])} | {gb(c['reduce-scatter'])} "
+            f"| {gb(c['all-to-all'])} | {gb(c['collective-permute'])} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(recs) -> str:
+    rows = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | bottleneck | MODEL_FLOPS | useful ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["multi_pod"] or r["status"] != "ok":
+            if not r["multi_pod"] and r["status"] == "skipped":
+                rows.append(f"| {r['arch']} | {r['shape']} | – | – | – | SKIP | – | – |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(ro['t_compute_s'])} | {fmt_t(ro['t_memory_s'])} "
+            f"| {fmt_t(ro['t_collective_s'])} | **{ro['bottleneck']}** | {ro['model_flops']:.2e} "
+            f"| {ro['useful_ratio']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    recs = load()
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table(recs, False))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(recs, True))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs))
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs)
+    print(f"\ncombos: ok={n_ok} skip={n_skip} error={n_err} total={len(recs)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--in-process]
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Each benchmark runs in its own subprocess by default: long-lived processes
+accumulate XLA-JIT code sections until LLVM section-memory allocation fails
+in this container ("Failed to materialize symbols"), so isolation is the
+reliable mode.
+"""
+import argparse
+import os
+import subprocess
+import sys
+import time
+import traceback
+
+
+BENCHES = [
+    ("fig4_cosine", "benchmarks.bench_cosine"),
+    ("fig5_ag_vs_naive", "benchmarks.bench_ag_ssim"),
+    ("table1_ag", "benchmarks.bench_table1"),
+    ("fig15_ols", "benchmarks.bench_ols"),
+    ("fig8_linear_ag", "benchmarks.bench_linear_ag"),
+    ("fig3_nas", "benchmarks.bench_nas"),
+    ("fig7_negative", "benchmarks.bench_negative"),
+    ("appB_pix2pix", "benchmarks.bench_pix2pix"),
+    ("llm_ag", "benchmarks.bench_llm_ag"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--in-process", action="store_true")
+    args = ap.parse_args()
+    import importlib
+
+    failures = []
+    for name, mod_name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ({mod_name}) ===", flush=True)
+        t0 = time.time()
+        if args.in_process:
+            try:
+                importlib.import_module(mod_name).main()
+                ok = True
+            except Exception as e:
+                ok = False
+                print(f"# {name} FAILED: {type(e).__name__}: {e}")
+                traceback.print_exc()
+        else:
+            env = dict(os.environ)
+            env.setdefault("PYTHONPATH", "src")
+            proc = subprocess.run(
+                [sys.executable, "-u", "-m", mod_name], env=env
+            )
+            ok = proc.returncode == 0
+            if not ok:
+                print(f"# {name} FAILED: exit {proc.returncode}")
+        if ok:
+            print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+        else:
+            failures.append(name)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""LinearAG (section 5.1): replace unconditional NFEs with OLS predictions.
+
+Stores CFG trajectories, fits the per-step scalar regressions of Eq. 8,
+then samples with the Eq. 11 policy and compares against the naive
+CFG/conditional alternation at equal NFEs.
+
+Run:  PYTHONPATH=src python examples/linear_ag_demo.py
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")  # benchmarks/ lives at the repo root
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--scale", type=float, default=4.0)
+    ap.add_argument("--train-trajs", type=int, default=6)
+    args = ap.parse_args()
+
+    from benchmarks.common import N_CLASSES, get_trained_dit
+    from benchmarks.bench_ols import collect
+    from repro.core import policy as pol
+    from repro.core.linear_ag import fit_ols, linear_ag_sample
+    from repro.diffusion.sampler import dit_eps_model, sample_with_policy
+    from repro.diffusion.solvers import get_solver
+    from repro.metrics.ssim import ssim
+
+    cfg, api, params, sched = get_trained_dit()
+    model = dit_eps_model(api)
+    solver = get_solver("dpmpp_2m", sched)
+    S, sc = args.steps, args.scale
+
+    print("== collect CFG trajectories + fit per-step OLS (Eq. 8) ==")
+    eps_c, eps_u = collect(model, params, solver, S, sc, args.train_trajs, 8,
+                           jax.random.PRNGKey(0), cfg)
+    coeffs, train_mse = fit_ols(eps_c, eps_u)
+    print(f"  per-step train MSE: {np.array2string(train_mse, precision=5)}")
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x_T = jax.random.normal(k1, (8, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+    cond = jax.random.randint(k2, (8,), 0, N_CLASSES)
+    baseline, _ = sample_with_policy(model, params, solver, pol.cfg_policy(S, sc), x_T, cond)
+
+    print("== LinearAG sampling (Eq. 11) ==")
+    x_lag, info = linear_ag_sample(model, params, solver, S, sc, coeffs, x_T, cond)
+    s_lag = float(np.mean(np.asarray(ssim(x_lag, baseline))))
+    print(f"  NFEs {info['nfe']} (CFG: {2 * S}), SSIM vs baseline {s_lag:.4f}")
+
+    x_alt, _ = sample_with_policy(model, params, solver, pol.alternating_policy(S, sc), x_T, cond)
+    s_alt = float(np.mean(np.asarray(ssim(x_alt, baseline))))
+    print(f"  naive alternation ({pol.alternating_policy(S, sc).nfes()} NFEs): SSIM {s_alt:.4f}")
+    print(f"  => LinearAG {'captures path regularity (wins)' if s_lag > s_alt else 'did not beat naive here'}")
+
+
+if __name__ == "__main__":
+    main()

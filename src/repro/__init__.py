@@ -1,0 +1,3 @@
+"""repro: Adaptive Guidance (AAAI 2025) — JAX/Pallas reproduction framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ALL_ARCH_NAMES,
+    ARCH_NAMES,
+    SHAPES,
+    ArchConfig,
+    InputShape,
+    get_config,
+    get_shape,
+)
+
+__all__ = [
+    "ALL_ARCH_NAMES",
+    "ARCH_NAMES",
+    "SHAPES",
+    "ArchConfig",
+    "InputShape",
+    "get_config",
+    "get_shape",
+]

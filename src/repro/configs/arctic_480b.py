@@ -1,0 +1,25 @@
+"""Snowflake Arctic 480B [hf:Snowflake/snowflake-arctic-base].
+
+Dense-MoE hybrid: every layer has a dense residual MLP (d_ff=4864) in
+parallel with a 128-expert top-2 MoE (expert d_ff=4864). 35L d_model=7168
+56H (GQA kv=8) vocab=32000.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    num_experts=128,
+    experts_per_token=2,
+    moe_d_ff=4864,
+    dense_residual=True,
+    router_aux_loss=0.01,
+    source="hf:Snowflake/snowflake-arctic-base",
+)

@@ -1,0 +1,261 @@
+"""Config system: architecture configs + canonical input shapes.
+
+Every assigned architecture gets one module in this package defining a
+module-level ``CONFIG: ArchConfig`` with the exact assigned numbers (source
+cited in the docstring).  ``repro.configs.get_config(name)`` resolves ids.
+
+``reduced()`` produces the smoke-test variant (<=2 layers, d_model<=512,
+<=4 experts) exercised on CPU; the full configs are only ever lowered with
+ShapeDtypeStruct inputs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | dit
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""
+
+    # attention features
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    sliding_window: Optional[int] = None  # decode-time window for long_500k
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    moe_layer_period: int = 1  # every n-th layer is MoE (hybrid archs)
+    router_aux_loss: float = 0.0  # load-balance loss coefficient
+
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (jamba): layer l is attention iff l % attn_layer_period == attn_layer_offset
+    attn_layer_period: int = 0
+    attn_layer_offset: int = 0
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0
+
+    # VLM (paligemma): frontend stub feeds precomputed patch embeddings
+    num_image_tokens: int = 0
+    vision_embed_dim: int = 0
+
+    # DiT (paper's own LDM-style model)
+    latent_hw: int = 0  # latent spatial side (pre-patch)
+    latent_ch: int = 0
+    patch: int = 0
+    cond_dim: int = 0
+    timesteps: int = 1000
+
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.family != "encoder"
+
+    def supports_shape(self, shape_name: str) -> bool:
+        """Which canonical shapes run for this arch (skips noted in DESIGN.md)."""
+        if shape_name == "long_500k":
+            if self.family == "encdec":
+                return False  # whisper: no coherent 512k decode semantics
+            # dense/moe/vlm run long_500k via sliding-window attention;
+            # ssm/hybrid run natively.
+            return True
+        return True
+
+    def for_shape(self, shape_name: str) -> "ArchConfig":
+        """Shape-specialized variant (e.g. sliding window for long_500k)."""
+        if shape_name == "long_500k" and self.family in (
+            "dense",
+            "moe",
+            "vlm",
+        ):
+            return dataclasses.replace(self, sliding_window=8192)
+        return self
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family/features, laptop-scale."""
+        d_model = min(self.d_model, 256)
+        head_dim = 32
+        num_heads = max(2, min(4, self.num_heads))
+        num_kv_heads = max(1, min(num_heads, self.num_kv_heads))
+        ssm_heads = max(2, d_model * self.ssm_expand // 64) if self.ssm_heads else 0
+        return dataclasses.replace(
+            self,
+            num_layers=2,
+            d_model=d_model,
+            num_heads=num_heads,
+            num_kv_heads=num_kv_heads,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2)
+            if self.experts_per_token
+            else 0,
+            moe_d_ff=min(self.moe_d_ff, 256) if self.moe_d_ff else 0,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_heads=ssm_heads,
+            ssm_head_dim=64 if self.ssm_head_dim else 0,
+            attn_layer_period=2 if self.attn_layer_period else 0,
+            attn_layer_offset=1 if self.attn_layer_period else 0,
+            moe_layer_period=min(self.moe_layer_period, 2),
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq_len=min(self.encoder_seq_len, 64)
+            if self.encoder_seq_len
+            else 0,
+            num_image_tokens=min(self.num_image_tokens, 16)
+            if self.num_image_tokens
+            else 0,
+            vision_embed_dim=min(self.vision_embed_dim, 128)
+            if self.vision_embed_dim
+            else 0,
+            latent_hw=min(self.latent_hw, 16) if self.latent_hw else 0,
+            cond_dim=min(self.cond_dim, 128) if self.cond_dim else 0,
+            dtype="float32",
+        )
+
+    # rough param count (for 6ND roofline sanity)
+    def param_count(self) -> int:
+        d = self.d_model
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        n_attn_layers = self.num_layers
+        n_ssm_layers = 0
+        if self.family == "ssm":
+            n_attn_layers, n_ssm_layers = 0, self.num_layers
+        elif self.attn_layer_period:
+            n_attn_layers = len(
+                [
+                    l
+                    for l in range(self.num_layers)
+                    if l % self.attn_layer_period == self.attn_layer_offset
+                ]
+            )
+            n_ssm_layers = self.num_layers - n_attn_layers
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        total = emb + n_attn_layers * attn
+        if n_ssm_layers:
+            # mamba2: in_proj -> [z, x, B, C, dt] with n_groups=1, plus out_proj
+            d_in = d * self.ssm_expand
+            ssm = d * (2 * d_in + 2 * self.ssm_state + self.ssm_heads) + d_in * d
+            total += n_ssm_layers * ssm
+        # FFN / MoE
+        for l in range(self.num_layers):
+            is_moe = self.num_experts and (l % self.moe_layer_period == 0)
+            if is_moe:
+                per_layer = 3 * d * self.moe_d_ff * self.num_experts
+                if self.dense_residual:
+                    per_layer += 3 * d * self.d_ff
+            else:
+                per_layer = 3 * d * self.d_ff
+            total += per_layer
+        if self.family == "encdec":
+            # encoder layers: self-attn + ffn; decoder cross-attn already counted? add both
+            total += self.encoder_layers * (attn + 3 * d * self.d_ff)
+            total += self.num_layers * attn  # decoder cross-attention
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        n_moe = len(
+            [l for l in range(self.num_layers) if l % self.moe_layer_period == 0]
+        )
+        all_experts = n_moe * 3 * d * self.moe_d_ff * self.num_experts
+        active = n_moe * 3 * d * self.moe_d_ff * self.experts_per_token
+        return int(full - all_experts + active)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ARCH_MODULES = {
+    "qwen3-14b": "qwen3_14b",
+    "paligemma-3b": "paligemma_3b",
+    "whisper-base": "whisper_base",
+    "starcoder2-3b": "starcoder2_3b",
+    "llama3.2-1b": "llama3_2_1b",
+    "arctic-480b": "arctic_480b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "ldm-dit": "ldm_dit",
+}
+
+ARCH_NAMES = [n for n in _ARCH_MODULES if n != "ldm-dit"]  # the 10 assigned
+ALL_ARCH_NAMES = list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    import importlib
+
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG

@@ -1,0 +1,31 @@
+"""Jamba-1.5-Large 398B [arXiv:2403.19887] — hybrid Mamba+attention 1:7, MoE.
+
+72L d_model=8192; attention layer every 8th layer (offset 4), others are
+Mamba (SSD-style here; see DESIGN.md).  MoE 16 experts top-2 on every other
+layer, d_ff=24576. 64H GQA kv=8, vocab=65536.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_d_ff=24576,
+    moe_layer_period=2,
+    router_aux_loss=0.01,
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_heads=256,  # d_model*expand/head_dim = 8192*2/64
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,27 @@
+"""LDM-DiT — the paper's own model family (conditional latent diffusion).
+
+Stand-in for LDM-512 (900M params, latent 4x64x64): a text/class-conditioned
+Diffusion Transformer (DiT-XL/2-like). This is the arch on which the paper's
+headline experiments (Figs. 3-5, Table 1, OLS/LinearAG) are reproduced; the
+reduced() variant is what gets trained on CPU.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="ldm-dit",
+    family="dit",
+    num_layers=28,
+    d_model=1152,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=72,
+    d_ff=4608,
+    vocab_size=1000,  # condition classes; id 1000 = learned null (CFG)
+    use_rope=False,
+    latent_hw=64,
+    latent_ch=4,
+    patch=2,
+    cond_dim=1152,
+    timesteps=1000,
+    source="arXiv:2212.09748 (DiT) standing in for LDM-512 [45]",
+)

@@ -1,0 +1,25 @@
+"""Mamba2-2.7B [arXiv:2405.21060] — attention-free SSD (state-space duality).
+
+64L d_model=2560, ssm_state=128, expand=2, head_dim=64 ->
+heads = 2*2560/64 = 80. vocab=50280 (GPT-NeoX tokenizer).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    use_rope=False,
+    tie_embeddings=True,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_heads=80,
+    source="arXiv:2405.21060",
+)

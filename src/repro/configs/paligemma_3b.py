@@ -1,0 +1,24 @@
+"""PaliGemma-3B [arXiv:2407.07726] — SigLIP frontend (stub) + gemma decoder.
+
+Backbone only per the assignment: 18L d_model=2048 8H (GQA kv=1, gemma
+head_dim=256) d_ff=16384 vocab=257216.  input_specs() supplies 256 SigLIP
+patch embeddings (dim 1152) which a linear projector maps into the decoder.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    num_image_tokens=256,
+    vision_embed_dim=1152,
+    source="arXiv:2407.07726",
+)

@@ -1,0 +1,24 @@
+"""Qwen3-MoE 235B-A22B [hf:Qwen/Qwen3-30B-A3B family] — 128 experts top-8.
+
+94L d_model=4096 64H (GQA kv=4) expert d_ff=1536, vocab=151936, qk-norm.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    num_experts=128,
+    experts_per_token=8,
+    moe_d_ff=1536,
+    router_aux_loss=0.001,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

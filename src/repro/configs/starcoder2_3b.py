@@ -1,0 +1,16 @@
+"""StarCoder2-3B [arXiv:2402.19173] — dense, GQA kv=2, RoPE."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    rope_theta=100_000.0,
+    source="arXiv:2402.19173",
+)

@@ -1,0 +1,24 @@
+"""Whisper-base [arXiv:2212.04356] — enc-dec; mel/conv frontend stubbed.
+
+Backbone only: 6L decoder (plus 6L encoder), d_model=512 8H d_ff=2048
+vocab=51865.  input_specs() supplies 1500 precomputed frame embeddings.
+Whisper uses learned absolute positions -> use_rope=False (sinusoidal here).
+long_500k is skipped (DESIGN.md: no coherent 512k decode for enc-dec).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="encdec",
+    num_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    use_rope=False,
+    encoder_layers=6,
+    encoder_seq_len=1500,
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,56 @@
+"""Guidance algebra: CFG combine, cosine diagnostic, negative prompts, pix2pix.
+
+This is Eq. 3 / Eq. 7 / Eq. 9 of the paper, shared by the diffusion sampler
+and the LLM guided-decoding path.  The fused Pallas kernel in
+``repro.kernels`` computes ``cfg_combine`` + ``cosine_similarity`` in one
+HBM pass; these jnp versions are the reference semantics (and the oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cfg_combine(eps_u, eps_c, scale):
+    """Classifier-free guidance, Eq. 3:  eps_u + s * (eps_c - eps_u).
+
+    ``scale`` may be a python float or a traced scalar/per-sample (B,) array.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim == 1:
+        scale = scale.reshape((-1,) + (1,) * (eps_u.ndim - 1))
+    u = eps_u.astype(jnp.float32)
+    c = eps_c.astype(jnp.float32)
+    return (u + scale * (c - u)).astype(eps_u.dtype)
+
+
+def cosine_similarity(a, b, eps: float = 1e-12):
+    """Per-sample cosine similarity over all non-batch axes, Eq. 7 (gamma_t)."""
+    a = a.astype(jnp.float32).reshape(a.shape[0], -1)
+    b = b.astype(jnp.float32).reshape(b.shape[0], -1)
+    dot = jnp.sum(a * b, axis=-1)
+    na = jnp.sqrt(jnp.sum(a * a, axis=-1))
+    nb = jnp.sqrt(jnp.sum(b * b, axis=-1))
+    return dot / jnp.maximum(na * nb, eps)
+
+
+def cfg_combine_with_gamma(eps_u, eps_c, scale):
+    """Fused semantics: returns (eps_cfg, gamma). One pass on TPU (kernels/)."""
+    return cfg_combine(eps_u, eps_c, scale), cosine_similarity(eps_c, eps_u)
+
+
+def pix2pix_combine(eps_uu, eps_ui, eps_ci, s_text, s_image):
+    """InstructPix2Pix 3-term guidance, Eq. 9.
+
+    eps_uu = eps(x, 0, 0); eps_ui = eps(x, 0, I); eps_ci = eps(x, c, I).
+    """
+    uu = eps_uu.astype(jnp.float32)
+    ui = eps_ui.astype(jnp.float32)
+    ci = eps_ci.astype(jnp.float32)
+    out = uu + s_text * (ci - ui) + s_image * (ui - uu)
+    return out.astype(eps_uu.dtype)
+
+
+def pix2pix_gamma(eps_ui, eps_ci):
+    """Convergence diagnostic for the pix2pix pair that AG may truncate."""
+    return cosine_similarity(eps_ci, eps_ui)

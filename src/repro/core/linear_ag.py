@@ -1,0 +1,115 @@
+"""LinearAG — §5.1 / Appendix C: replacing NFEs with affine transformations.
+
+Per sampling step t, the unconditional score is regressed (scalar
+coefficients, Eq. 8) on the past conditional/unconditional scores:
+
+    eps_hat(x_t, 0) = sum_{i<=t} beta_i^c eps(x_i, c) + sum_{i<t} beta_i^0 eps(x_i, 0)
+
+Coefficients come from plain OLS over a small set of stored CFG
+trajectories (the paper uses 200; fitting takes seconds).  During sampling
+an LR-based CFG step (Eq. 10) costs 1 NFE instead of 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as pol
+from repro.core.guidance import cfg_combine
+
+
+@dataclasses.dataclass
+class OLSCoeffs:
+    """betas[i] is a (2i+1,) coefficient vector for step i: the regressors
+    are [eps_c_0..eps_c_i, eps_u_0..eps_u_{i-1}] in that order."""
+
+    betas: list
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.betas)
+
+
+def _design(eps_c, eps_u, i):
+    """Regressor list for step i from (N, steps, ...) trajectories."""
+    regs = [eps_c[:, j] for j in range(i + 1)]
+    regs += [eps_u[:, j] for j in range(i)]
+    return regs
+
+
+def fit_ols(eps_c, eps_u, *, ridge: float = 1e-6) -> tuple[OLSCoeffs, np.ndarray]:
+    """Fit per-step OLS on stored trajectories.
+
+    eps_c, eps_u: (N, steps, *dims) arrays from ``collect_pair_trajectory``.
+    Returns (coeffs, train_mse[steps]).
+    """
+    eps_c = np.asarray(eps_c, np.float64)
+    eps_u = np.asarray(eps_u, np.float64)
+    N, steps = eps_c.shape[:2]
+    betas, mses = [], []
+    for i in range(steps):
+        regs = _design(eps_c, eps_u, i)
+        X = np.stack([r.reshape(-1) for r in regs], axis=-1)  # (N*D, R)
+        y = eps_u[:, i].reshape(-1)
+        XtX = X.T @ X + ridge * np.eye(X.shape[1])
+        Xty = X.T @ y
+        beta = np.linalg.solve(XtX, Xty)
+        pred = X @ beta
+        betas.append(beta)
+        mses.append(float(np.mean((pred - y) ** 2)))
+    return OLSCoeffs(betas=betas), np.asarray(mses)
+
+
+def eval_ols(coeffs: OLSCoeffs, eps_c, eps_u) -> np.ndarray:
+    """Test MSE per step on held-out trajectories (Fig. 15)."""
+    eps_c = np.asarray(eps_c, np.float64)
+    eps_u = np.asarray(eps_u, np.float64)
+    steps = coeffs.num_steps
+    out = []
+    for i in range(steps):
+        regs = _design(eps_c, eps_u, i)
+        X = np.stack([r.reshape(-1) for r in regs], axis=-1)
+        pred = X @ coeffs.betas[i]
+        out.append(float(np.mean((pred - eps_u[:, i].reshape(-1)) ** 2)))
+    return np.asarray(out)
+
+
+def lr_predictor(coeffs: OLSCoeffs):
+    """Closure for ``sample_with_policy``'s CFG_LR steps.
+
+    history = {"eps_c": [len i+1], "eps_u": [len i]} — the *realized*
+    histories; once upstream steps were LR-approximated these contain
+    estimates, so errors accumulate autoregressively (per the paper).
+    """
+
+    def predict(history, i):
+        beta = jnp.asarray(coeffs.betas[i], jnp.float32)
+        regs = list(history["eps_c"][: i + 1]) + list(history["eps_u"][:i])
+        assert len(regs) == beta.shape[0], (len(regs), beta.shape)
+        out = jnp.zeros_like(regs[0], dtype=jnp.float32)
+        for b, r in zip(beta, regs):
+            out = out + b * r.astype(jnp.float32)
+        return out.astype(regs[0].dtype)
+
+    return predict
+
+
+def linear_ag_sample(model, params, solver, steps, scale, coeffs, x_T, cond, **kw):
+    """Convenience wrapper: run the Eq. 11 LinearAG policy."""
+    from repro.diffusion.sampler import sample_with_policy
+
+    policy = pol.linear_ag_policy(steps, scale)
+    return sample_with_policy(
+        model,
+        params,
+        solver,
+        policy,
+        x_T,
+        cond,
+        lr_predictor=lr_predictor(coeffs),
+        **kw,
+    )

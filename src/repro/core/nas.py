@@ -1,0 +1,167 @@
+"""Gradient-based guidance-policy search (§4) — DARTS over the diffusion DAG.
+
+The T-step sampler is unrolled; every step t gets a trainable score vector
+alpha_t over the option set F_t = [uncond, cond, cfg(s_1)...cfg(s_k)]
+(Eq. 5: the solver input is the softmax(alpha_t)-weighted mixture).  The
+search objective (Eq. 6) is a replication loss against the CFG teacher plus
+lambda * ReLU(gumbel-softmax NFE proxy - target).  alpha is optimized with
+Lion (the paper's §4.1 choice); model weights stay frozen.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.guidance import cfg_combine
+from repro.diffusion.sampler import EpsModel
+from repro.diffusion.schedule import timestep_subsequence
+from repro.diffusion.solvers import Solver
+
+# per-option NFE cost: uncond=1, cond=1, cfg(s)=2 (Eq. 6 discussion)
+def option_costs(num_scales: int) -> jnp.ndarray:
+    return jnp.asarray([1.0, 1.0] + [2.0] * num_scales, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    steps: int
+    scales: tuple  # the k cfg guidance strengths
+
+    @property
+    def num_options(self) -> int:
+        return 2 + len(self.scales)
+
+    def init_alpha(self, key) -> jnp.ndarray:
+        # i.i.d. uniform init (paper §4)
+        return jax.random.uniform(key, (self.steps, self.num_options), jnp.float32)
+
+
+def soft_sample(
+    model: EpsModel,
+    params,
+    solver: Solver,
+    space: SearchSpace,
+    alpha,
+    x_T,
+    cond,
+    *,
+    remat: bool = True,
+):
+    """Differentiable student forward pass (Eq. 5): the solver consumes the
+    softmax(alpha_t)-weighted mixture of all options at every step."""
+    ts = timestep_subsequence(solver.schedule.T, space.steps + 1)
+    B = x_T.shape[0]
+    x = x_T
+    state = solver.init(x.shape)
+
+    def one_step(x, state, a_t, i):
+        t_cur = jnp.full((B,), int(ts[i]), jnp.int32)
+        eps_c, eps_u = model.eps_pair(params, x, t_cur, cond)
+        opts = [eps_u, eps_c] + [
+            cfg_combine(eps_u, eps_c, s) for s in space.scales
+        ]
+        w = jax.nn.softmax(a_t)
+        eps = sum(
+            w[o] * opts[o].astype(jnp.float32) for o in range(space.num_options)
+        ).astype(x.dtype)
+        x, state = solver.step(
+            x,
+            eps,
+            jnp.asarray(int(ts[i]), jnp.int32),
+            jnp.asarray(int(ts[i + 1]), jnp.int32),
+            state,
+        )
+        return x, state
+
+    step_fn = jax.checkpoint(one_step, static_argnums=(3,)) if remat else one_step
+    for i in range(space.steps):
+        x, state = step_fn(x, state, alpha[i], i)
+    return x
+
+
+def nfe_proxy(alpha, space: SearchSpace, key, *, tau: float = 1.0) -> jnp.ndarray:
+    """Differentiable total-NFE proxy g(zeta(alpha)) via Gumbel-softmax."""
+    g = -jnp.log(-jnp.log(jax.random.uniform(key, alpha.shape) + 1e-20) + 1e-20)
+    y = jax.nn.softmax((alpha + g) / tau, axis=-1)
+    return jnp.sum(y @ option_costs(len(space.scales)))
+
+
+def search_loss(
+    alpha,
+    model: EpsModel,
+    params,
+    solver: Solver,
+    space: SearchSpace,
+    x_T,
+    cond,
+    x0_target,
+    key,
+    *,
+    lam: float = 0.05,
+    cost_target: float = None,
+    tau: float = 1.0,
+):
+    """Eq. 6: replication distance + lambda * ReLU(cost proxy - target)."""
+    x0 = soft_sample(model, params, solver, space, alpha, x_T, cond)
+    d = jnp.mean(jnp.square(x0.astype(jnp.float32) - x0_target.astype(jnp.float32)))
+    if cost_target is None:
+        cost_target = 1.5 * space.steps  # default: 25% below full CFG (2T)
+    g = nfe_proxy(alpha, space, key, tau=tau)
+    penalty = jax.nn.relu(g - cost_target)
+    return d + lam * penalty, (d, g)
+
+
+def search(
+    model: EpsModel,
+    params,
+    solver: Solver,
+    space: SearchSpace,
+    dataset,
+    key,
+    *,
+    epochs: int = 5,
+    lr: float = 3e-2,
+    lam: float = 0.05,
+    cost_target: float = None,
+):
+    """Run the DARTS search over a dataset of (x_T, cond, x0_target) triples.
+
+    Returns (alpha, history).  ``dataset`` is a list of pytrees (generated
+    by the teacher model, §4: 10k noise-image pairs in the paper).
+    """
+    from repro.training.optim import lion
+
+    opt = lion(lr=lr)
+    alpha = space.init_alpha(key)
+    opt_state = opt.init(alpha)
+    grad_fn = jax.jit(
+        jax.grad(
+            lambda a, xT, c, x0, k: search_loss(
+                a, model, params, solver, space, xT, c, x0, k,
+                lam=lam, cost_target=cost_target,
+            )[0]
+        )
+    )
+    loss_fn = jax.jit(
+        lambda a, xT, c, x0, k: search_loss(
+            a, model, params, solver, space, xT, c, x0, k,
+            lam=lam, cost_target=cost_target,
+        )
+    )
+    history = []
+    for ep in range(epochs):
+        for bi, batch in enumerate(dataset):
+            key, k1 = jax.random.split(key)
+            g = grad_fn(alpha, batch["x_T"], batch["cond"], batch["x0"], k1)
+            alpha, opt_state = opt.update(alpha, g, opt_state)
+        key, k1 = jax.random.split(key)
+        b0 = dataset[0]
+        (l, (d, gc)) = loss_fn(alpha, b0["x_T"], b0["cond"], b0["x0"], k1)
+        history.append(
+            {"epoch": ep, "loss": float(l), "dist": float(d), "cost": float(gc)}
+        )
+    return alpha, history

@@ -1,0 +1,109 @@
+"""Guidance policies: the search space of §4 and concrete policy constructors.
+
+A policy ``zeta`` assigns every sampling step one of the options in F_t
+(Eq. 4/5): an unconditional step, a conditional step, or a CFG step with one
+of k guidance scales.  NFE accounting follows the paper: 1 NFE for
+(un)conditional steps, 2 for CFG steps, and — for LinearAG — 1 for an
+LR-approximated CFG step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+# option kinds
+UNCOND = 0
+COND = 1
+CFG = 2
+CFG_LR = 3  # CFG with OLS-estimated unconditional score (LinearAG, Eq. 10)
+
+KIND_NAMES = {UNCOND: "uncond", COND: "cond", CFG: "cfg", CFG_LR: "cfg_lr"}
+KIND_NFES = {UNCOND: 1, COND: 1, CFG: 2, CFG_LR: 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Per-step choices, time-major in *sampling order* (t = T-1 .. 0)."""
+
+    kinds: tuple  # length = num sampling steps
+    scales: tuple  # guidance scale per step (ignored for UNCOND/COND)
+
+    def __post_init__(self):
+        assert len(self.kinds) == len(self.scales)
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.kinds)
+
+    def nfes(self) -> int:
+        return int(sum(KIND_NFES[k] for k in self.kinds))
+
+    def describe(self) -> str:
+        out = []
+        for k, s in zip(self.kinds, self.scales):
+            out.append(f"{KIND_NAMES[k]}" + (f"({s:g})" if k in (CFG, CFG_LR) else ""))
+        return " ".join(out)
+
+
+def cfg_policy(steps: int, scale: float) -> Policy:
+    """The default: CFG at every step (the paper's baseline, 2T NFEs)."""
+    return Policy(kinds=(CFG,) * steps, scales=(scale,) * steps)
+
+
+def cond_policy(steps: int) -> Policy:
+    return Policy(kinds=(COND,) * steps, scales=(0.0,) * steps)
+
+
+def ag_policy(steps: int, scale: float, truncate_at: int) -> Policy:
+    """Static AG policy: CFG for the first ``truncate_at`` steps, then cond.
+
+    The *adaptive* version picks ``truncate_at`` at runtime from gamma_t
+    (core/adaptive.py); this constructor exists for replaying a realized
+    truncation point and for the policy-space benchmarks.
+    """
+    assert 0 <= truncate_at <= steps
+    kinds = (CFG,) * truncate_at + (COND,) * (steps - truncate_at)
+    return Policy(kinds=kinds, scales=(scale,) * steps)
+
+
+def linear_ag_policy(steps: int, scale: float) -> Policy:
+    """Eq. 11: alternate CFG / LR-CFG for the first half, LR-CFG after."""
+    half = steps // 2
+    kinds = []
+    for i in range(half):
+        kinds.append(CFG if i % 2 == 0 else CFG_LR)
+    kinds.extend([CFG_LR] * (steps - half))
+    return Policy(kinds=tuple(kinds), scales=(scale,) * steps)
+
+
+def alternating_policy(steps: int, scale: float) -> Policy:
+    """Naive baseline of Fig. 8: alternate CFG/cond first half, cond after."""
+    half = steps // 2
+    kinds = []
+    for i in range(half):
+        kinds.append(CFG if i % 2 == 0 else COND)
+    kinds.extend([COND] * (steps - half))
+    return Policy(kinds=tuple(kinds), scales=(scale,) * steps)
+
+
+def from_alpha(alpha: np.ndarray, scales: Sequence[float], base_scale: float) -> Policy:
+    """Harden a NAS score matrix (steps, k+2) into a discrete policy.
+
+    Option order matches core/nas.py: [uncond, cond, cfg(s_1), ..., cfg(s_k)].
+    """
+    steps = alpha.shape[0]
+    kinds, out_scales = [], []
+    for t in range(steps):
+        o = int(np.argmax(alpha[t]))
+        if o == 0:
+            kinds.append(UNCOND)
+            out_scales.append(0.0)
+        elif o == 1:
+            kinds.append(COND)
+            out_scales.append(0.0)
+        else:
+            kinds.append(CFG)
+            out_scales.append(float(scales[o - 2]))
+    return Policy(kinds=tuple(kinds), scales=tuple(out_scales))

@@ -1,0 +1,116 @@
+"""Offline-safe synthetic data (DESIGN.md §8: CC3M/OUI are unavailable).
+
+Conditioned image data: procedurally rendered latents where the class id
+controls global structure (blob count / orientation / frequency) — enough
+structure for the paper's dynamics (gamma_t convergence, OLS path
+regularity) to emerge when a small conditional DiT is trained on it.
+
+Token data: a deterministic class-conditioned Markov-ish token stream for
+the LM examples and the guided-decoding benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageDataset:
+    num_classes: int
+    channels: int
+    hw: int
+
+    def sample(self, key, batch: int):
+        """Returns (x0 (B,C,H,W) in [-1,1], cond (B,) int32)."""
+        k1, k2, k3 = jax.random.split(key, 3)
+        cond = jax.random.randint(k1, (batch,), 0, self.num_classes)
+        return self.render(cond, k2), cond
+
+    def render(self, cond, key):
+        """Class-conditional procedural pattern, smooth in x/y.
+
+        The class controls LOW-FREQUENCY structure (global mean, gradient
+        direction, wave orientation) so the conditional and unconditional
+        scores genuinely diverge early in denoising — the regime the
+        paper's gamma_t diagnostic (Fig. 4) lives in.
+        """
+        B = cond.shape[0]
+        hw, C = self.hw, self.channels
+        yy, xx = jnp.meshgrid(
+            jnp.linspace(-1, 1, hw), jnp.linspace(-1, 1, hw), indexing="ij"
+        )
+        c = cond.astype(jnp.float32)
+        K = max(self.num_classes, 2)
+        theta = 2 * jnp.pi * c[:, None, None] / K
+        freq = 2.0 + (c[:, None, None] % 5.0)
+        u = xx[None] * jnp.cos(theta) + yy[None] * jnp.sin(theta)
+        v = -xx[None] * jnp.sin(theta) + yy[None] * jnp.cos(theta)
+        base = jnp.sin(freq * jnp.pi * u) * jnp.cos(0.5 * freq * jnp.pi * v)
+        blob = jnp.exp(-4.0 * (u ** 2 + 0.5 * v ** 2))
+        # strong class-dependent DC offset + linear ramp (low-frequency)
+        dc = (c[:, None, None] / (K - 1) - 0.5) * 1.2
+        ramp = 0.6 * (u * jnp.cos(3 * theta) + v * jnp.sin(3 * theta))
+        noise = 0.05 * jax.random.normal(key, (B, C, hw, hw))
+        chans = []
+        for ch in range(C):
+            phase = 0.7 * ch + theta[:, 0, 0][:, None, None] * 0.5
+            sgn = 1.0 if ch % 2 == 0 else -1.0
+            chans.append(
+                jnp.cos(phase) * base + jnp.sin(phase) * blob + sgn * dc + ramp
+            )
+        img = jnp.stack(chans, axis=1) + noise
+        return jnp.clip(img, -1.0, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDataset:
+    """Class-conditioned token streams: condition biases the bigram table."""
+
+    vocab_size: int
+    num_conds: int = 16
+
+    def sample(self, key, batch: int, seq_len: int):
+        k1, k2 = jax.random.split(key)
+        cond = jax.random.randint(k1, (batch,), 0, self.num_conds)
+        toks = self.generate(k2, cond, seq_len)
+        return toks, cond
+
+    def generate(self, key, cond, seq_len: int):
+        B = cond.shape[0]
+        V = self.vocab_size
+
+        def step(carry, k):
+            prev = carry
+            # conditioned bigram: next ~ (prev * 31 + cond * 7 + noise) mod V
+            noise = jax.random.randint(k, (B,), 0, 5)
+            nxt = (prev * 31 + cond * 7 + noise + 1) % V
+            return nxt, nxt
+
+        keys = jax.random.split(key, seq_len)
+        init = cond % V
+        _, toks = jax.lax.scan(step, init, keys)
+        return jnp.moveaxis(toks, 0, 1).astype(jnp.int32)  # (B, S)
+
+
+def make_noise_image_pairs(key, model, params, solver, steps, scale, dataset_size, batch, cond_classes, latent_shape):
+    """§4.1: generate (x_T, cond, x0_teacher) pairs with the CFG teacher.
+
+    Returns a list of batches usable by core.nas.search.
+    """
+    from repro.core.policy import cfg_policy
+    from repro.diffusion.sampler import sample_with_policy
+
+    out = []
+    n = dataset_size // batch
+    for i in range(n):
+        key, k1, k2 = jax.random.split(key, 3)
+        x_T = jax.random.normal(k1, (batch,) + latent_shape)
+        cond = jax.random.randint(k2, (batch,), 0, cond_classes)
+        x0, _ = sample_with_policy(
+            model, params, solver, cfg_policy(steps, scale), x_T, cond
+        )
+        out.append({"x_T": x_T, "cond": cond, "x0": jax.lax.stop_gradient(x0)})
+    return out

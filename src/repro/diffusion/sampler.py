@@ -1,0 +1,159 @@
+"""Policy-driven diffusion sampling.
+
+``EpsModel`` adapts a conditional eps-model (the DiT here, but anything with
+the same signature works) into the two score streams guidance needs.  The
+samplers consume a ``Policy`` (core/policy.py) or run Adaptive Guidance with
+a runtime-truncated while-loop (core/adaptive.py builds on these pieces).
+
+The cond/uncond pack (DESIGN.md §3): CFG steps evaluate the network once on
+a ``[2B]`` packed batch instead of two sequential calls — the TPU-native
+layout for the paper's "2 NFEs".  NFE accounting counts network evaluations
+(a packed call = 2 NFEs), matching the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as pol
+from repro.core.guidance import cfg_combine, cosine_similarity
+from repro.diffusion.schedule import Schedule, timestep_subsequence
+from repro.diffusion.solvers import Solver, SolverState
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsModel:
+    """Score streams for a conditional eps-model.
+
+    apply(params, x, t, cond) -> eps; null_cond(batch) -> the empty condition.
+    """
+
+    apply: Callable
+    null_cond: Callable
+
+    def eps_cond(self, params, x, t, cond):
+        return self.apply(params, x, t, cond)
+
+    def eps_uncond(self, params, x, t, neg_cond=None):
+        B = x.shape[0]
+        c = self.null_cond(B) if neg_cond is None else neg_cond
+        return self.apply(params, x, t, c)
+
+    def eps_pair(self, params, x, t, cond, neg_cond=None):
+        """Packed cond/uncond evaluation: one [2B] network call (2 NFEs)."""
+        B = x.shape[0]
+        nc = self.null_cond(B) if neg_cond is None else neg_cond
+        xx = jnp.concatenate([x, x], axis=0)
+        tt = jnp.concatenate([t, t], axis=0)
+        cc = jnp.concatenate([cond, nc], axis=0)
+        eps = self.apply(params, xx, tt, cc)
+        return eps[:B], eps[B:]
+
+
+def dit_eps_model(api) -> EpsModel:
+    from repro.models import dit as dit_mod
+
+    cfg = api.cfg
+
+    def apply(params, x, t, cond):
+        return dit_mod.dit_apply(params, cfg, x, t, cond)
+
+    return EpsModel(apply=apply, null_cond=lambda b: dit_mod.null_cond(cfg, b))
+
+
+# ---------------------------------------------------------------------------
+# policy-driven sampling (static policy -> specialized jit graph)
+# ---------------------------------------------------------------------------
+
+
+def sample_with_policy(
+    model: EpsModel,
+    params,
+    solver: Solver,
+    policy: pol.Policy,
+    x_T,
+    cond,
+    *,
+    neg_cond=None,
+    lr_predictor=None,
+    collect: bool = False,
+):
+    """Run the sampler under a static policy.
+
+    Returns (x_0, info) where info has per-step gammas (only for CFG steps),
+    the NFE count, and — when ``collect`` — the full (eps_c, eps_u) arrays
+    for OLS fitting / cosine diagnostics.
+
+    ``lr_predictor(history, step_index)`` supplies the OLS-estimated
+    unconditional score for CFG_LR steps (core/linear_ag.py).
+    """
+    steps = policy.num_steps
+    ts = timestep_subsequence(solver.schedule.T, steps + 1)
+    x = x_T
+    state = solver.init(x.shape)
+    B = x.shape[0]
+    gammas, eps_cs, eps_us, nfe = [], [], [], 0
+
+    for i in range(steps):
+        t_cur = jnp.full((B,), int(ts[i]), jnp.int32)
+        t_next = jnp.full((B,), int(ts[i + 1]), jnp.int32)
+        kind, scale = policy.kinds[i], policy.scales[i]
+        gamma = jnp.full((B,), jnp.nan, jnp.float32)
+        eps_c = eps_u = None
+        if kind == pol.UNCOND:
+            eps = model.eps_uncond(params, x, t_cur, neg_cond)
+            nfe += 1
+        elif kind == pol.COND:
+            eps = model.eps_cond(params, x, t_cur, cond)
+            nfe += 1
+        elif kind == pol.CFG:
+            eps_c, eps_u = model.eps_pair(params, x, t_cur, cond, neg_cond)
+            gamma = cosine_similarity(eps_c, eps_u)
+            eps = cfg_combine(eps_u, eps_c, scale)
+            nfe += 2
+        elif kind == pol.CFG_LR:
+            assert lr_predictor is not None, "CFG_LR requires an OLS predictor"
+            eps_c = model.eps_cond(params, x, t_cur, cond)
+            eps_u = lr_predictor(
+                {"eps_c": eps_cs + [eps_c], "eps_u": eps_us}, i
+            )
+            gamma = cosine_similarity(eps_c, eps_u)
+            eps = cfg_combine(eps_u, eps_c, scale)
+            nfe += 1
+        else:
+            raise ValueError(kind)
+        if collect or kind == pol.CFG_LR or (
+            lr_predictor is not None and any(k == pol.CFG_LR for k in policy.kinds)
+        ):
+            # keep histories when anything downstream may regress on them
+            eps_cs.append(eps_c if eps_c is not None else eps)
+            eps_us.append(eps_u if eps_u is not None else eps)
+        gammas.append(gamma)
+        t_cur_s = jnp.asarray(int(ts[i]), jnp.int32)
+        t_next_s = jnp.asarray(int(ts[i + 1]), jnp.int32)
+        x, state = solver.step(x, eps, t_cur_s, t_next_s, state)
+
+    info = {"gammas": jnp.stack(gammas), "nfe": nfe}
+    if collect:
+        info["eps_c"] = jnp.stack([e for e in eps_cs])
+        info["eps_u"] = jnp.stack([e for e in eps_us])
+    return x, info
+
+
+def collect_pair_trajectory(model: EpsModel, params, solver, steps, scale, x_T, cond):
+    """CFG sampling that records (x_t, eps_c, eps_u, gamma) per step —
+    the data source for Fig. 4 (cosine curves) and §5.1 (OLS fitting)."""
+    x, info = sample_with_policy(
+        model,
+        params,
+        solver,
+        pol.cfg_policy(steps, scale),
+        x_T,
+        cond,
+        collect=True,
+    )
+    return x, info

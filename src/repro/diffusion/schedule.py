@@ -1,0 +1,69 @@
+"""Noise schedules (VP / DDPM-style) and the forward noising process."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Discrete VP schedule with T training steps.
+
+    alphas_bar[t] = prod_{i<=t} (1 - beta_i);  x_t = sqrt(ab)*x0 + sqrt(1-ab)*eps
+    """
+
+    betas: np.ndarray  # (T,)
+
+    @property
+    def T(self) -> int:
+        return len(self.betas)
+
+    @property
+    def alphas(self) -> np.ndarray:
+        return 1.0 - self.betas
+
+    @property
+    def alphas_bar(self) -> np.ndarray:
+        return np.cumprod(self.alphas)
+
+    def ab(self, t):
+        """alphas_bar lookup with t as traced int array."""
+        return jnp.asarray(self.alphas_bar, jnp.float32)[t]
+
+    # lambda_t = log(alpha_t / sigma_t): half-log-SNR (DPM-Solver convention)
+    def lam(self, t):
+        ab = self.ab(t)
+        return 0.5 * (jnp.log(ab) - jnp.log1p(-ab))
+
+
+def linear_schedule(T: int = 1000, beta0: float = 1e-4, beta1: float = 2e-2) -> Schedule:
+    return Schedule(betas=np.linspace(beta0, beta1, T, dtype=np.float64))
+
+
+def cosine_schedule(T: int = 1000, s: float = 8e-3) -> Schedule:
+    f = lambda t: np.cos((t / T + s) / (1 + s) * np.pi / 2) ** 2
+    ab = f(np.arange(T + 1)) / f(0)
+    betas = np.clip(1 - ab[1:] / ab[:-1], 0, 0.999)
+    return Schedule(betas=betas)
+
+
+def add_noise(schedule: Schedule, x0, eps, t):
+    """Forward process q(x_t | x_0). t: (B,) int."""
+    ab = schedule.ab(t)
+    shape = (-1,) + (1,) * (x0.ndim - 1)
+    return (
+        jnp.sqrt(ab).reshape(shape) * x0 + jnp.sqrt(1.0 - ab).reshape(shape) * eps
+    )
+
+
+def sample_timesteps(key, batch: int, T: int):
+    return jax.random.randint(key, (batch,), 0, T)
+
+
+def timestep_subsequence(T: int, steps: int, *, offset: int = 0) -> np.ndarray:
+    """Uniform sub-sequence of timesteps for sampling, descending (t_N..t_0)."""
+    ts = np.linspace(T - 1, offset, steps).round().astype(np.int64)
+    return ts

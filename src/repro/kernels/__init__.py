@@ -1,0 +1,8 @@
+from repro.kernels.ops import (
+    decode_attention,
+    flash_attention,
+    fused_guidance,
+    linear_combine,
+)
+
+__all__ = ["decode_attention", "flash_attention", "fused_guidance", "linear_combine"]

@@ -1,0 +1,106 @@
+"""Single-token decode attention against a KV cache — Pallas TPU kernel.
+
+The guided-decoding hot spot (EXPERIMENTS §Perf pair 1): one query per
+request vs a (B, S, Hkv, Dh) ring cache.  Purely bandwidth-bound — the
+kernel streams each (bk, Dh) cache tile through VMEM exactly once and
+carries the online-softmax state in revisited per-(b,h) output blocks, so
+HBM traffic is the structural minimum (K+V read once, no f32 cache copies,
+no materialized (B,H,S) score tensor round-trip).
+
+Validity masking matches ``common.attention_decode``: a cache slot is
+attended iff ``pos[slot] <= position`` and (sliding window) ``pos[slot] >
+position - window`` — so ring-buffer semantics are preserved.
+
+Grid (B, Hq, S // bk); kv axis innermost/"arbitrary".  GQA: the K/V/pos
+BlockSpecs map query head h -> kv head h // group (no repeated KV in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BK = 1024
+NEG_INF = -1e30
+
+
+def _kernel(pos_scalar_ref, q_ref, k_ref, v_ref, pos_ref, acc_ref, m_ref, l_ref,
+             *, bk, scale, window):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    slot_pos = pos_ref[0]  # (bk,) int32
+    cur = pos_scalar_ref[0, 0]  # this request's decode position
+
+    s = (q @ k.T) * scale  # (1, bk)
+    valid = slot_pos <= cur
+    if window is not None:
+        valid &= slot_pos > (cur - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.exp(m_prev - m_new)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
+    l_ref[0, 0] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[0, 0] = acc_ref[0, 0] * corr + p @ v
+    m_ref[0, 0] = m_new
+
+
+def decode_attention_raw(
+    q, k_cache, v_cache, pos_cache, position, *,
+    window=None, bk: int = DEFAULT_BK, interpret: bool = True,
+):
+    """q: (B, Hq, 1, D); k/v_cache: (B, S, Hkv, D); pos_cache: (B, S) int32;
+    position: (B,) int32.  Returns (acc, m, l) un-normalized."""
+    B, Hq, _, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0
+    grid = (B, Hq, S // bk)
+    scale = 1.0 / np.sqrt(D)
+    # layout: move head axis ahead of length for clean tiles
+    kt = jnp.swapaxes(k_cache, 1, 2)  # (B, Hkv, S, D)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    pos_s = position.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, bk=bk, scale=scale, window=window)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, 1, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_s, q, kt, vt, pos_cache.astype(jnp.int32))
+    return acc, m, l

@@ -1,0 +1,109 @@
+"""Flash attention (prefill) — Pallas TPU kernel with GQA-aware indexing.
+
+Online-softmax block attention: grid (B, Hq, nq, nkv) with the kv axis as
+the innermost ("arbitrary") dimension; running max / denominator / weighted
+accumulator are carried in revisited output blocks, so the kernel needs no
+scratch (and therefore also runs under interpret=True on CPU).  The wrapper
+(ops.py) performs the final ``acc / l`` normalization.
+
+GQA without materializing repeated KV: the K/V BlockSpec index maps query
+head ``h`` to kv head ``h // group`` — the MXU consumes the shared KV tile
+directly.
+
+Block sizes default to (128, 128): MXU-aligned, and the working set per
+step (q, k, v tiles + acc) is ~4 * 128 * head_dim * 4B << VMEM.  Causal
+masking: kv blocks strictly above the diagonal are skipped via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *, bq, bk, scale, causal):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (not causal) or True  # structural skip below
+
+    @pl.when((ki * bk <= qi * bq + bq - 1) if causal else (ki >= 0))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = (q @ k.T) * scale  # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[0, 0]  # (bq, 1)
+        l_prev = l_ref[0, 0]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[0, 0] = acc_ref[0, 0] * corr + p @ v
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_new
+
+
+def flash_attention_raw(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D). Returns (acc, m, l) un-normalized."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    grid = (B, Hq, S // bq, S // bk)
+    scale = 1.0 / np.sqrt(D)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, scale=scale, causal=causal)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, S, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return acc, m, l

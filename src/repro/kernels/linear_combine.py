@@ -1,0 +1,44 @@
+"""LinearAG history combination (Eq. 8) — Pallas TPU kernel.
+
+hat_eps = sum_k beta_k * hist_k over K stored score tensors.  Naively XLA
+reads K tensors and writes K-1 temporaries; the kernel streams one (K, BLOCK)
+tile at a time and accumulates in VMEM registers, so HBM traffic is exactly
+K reads + 1 write per element.
+
+Layout: history stacked (K, N); grid over N // BLOCK; beta lives in a tiny
+(K, 1) block visible to every grid step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _kernel(beta_ref, hist_ref, out_ref):
+    h = hist_ref[...].astype(jnp.float32)  # (K, BLOCK)
+    b = beta_ref[...].astype(jnp.float32)  # (K, 1)
+    out_ref[...] = jnp.sum(h * b, axis=0, keepdims=True).astype(out_ref.dtype)
+
+
+def linear_combine_1d(history, beta, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """history: (K, N); beta: (K,). Returns (1, N) combined tensor."""
+    K, N = history.shape
+    if N % block != 0:
+        block = N
+    grid = (N // block,)
+    beta2 = beta.reshape(K, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda j: (0, 0)),
+            pl.BlockSpec((K, block), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, N), history.dtype),
+        interpret=interpret,
+    )(beta2, history)
+    return out

@@ -1,0 +1,73 @@
+"""Jit-ready wrappers over the Pallas kernels.
+
+Each op accepts ``interpret=`` (True on CPU — the kernels' validation mode;
+False on real TPU).  Shapes are normalized here so callers keep natural
+layouts; the kernels see flat (rows, lanes) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_raw
+from repro.kernels.flash_attention import flash_attention_raw
+from repro.kernels.fused_guidance import fused_guidance_2d
+from repro.kernels.linear_combine import linear_combine_1d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def fused_guidance(eps_u, eps_c, scale, *, interpret: bool = True, block: int = 512):
+    """CFG combine + gamma in one pass.
+
+    eps_u/eps_c: (B, ...) any trailing shape. Returns (eps_cfg like input,
+    gamma (B,)).
+    """
+    B = eps_u.shape[0]
+    flat_u = eps_u.reshape(B, -1)
+    flat_c = eps_c.reshape(B, -1)
+    out, dot, nu, nc = fused_guidance_2d(
+        flat_u, flat_c, scale, block=block, interpret=interpret
+    )
+    gamma = dot / jnp.maximum(jnp.sqrt(nu * nc), 1e-12)
+    return out.reshape(eps_u.shape), gamma
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def linear_combine(history, beta, *, interpret: bool = True, block: int = 1024):
+    """hat_eps = sum_k beta_k * history_k.
+
+    history: (K, ...) stacked score tensors; beta: (K,).
+    """
+    K = history.shape[0]
+    flat = history.reshape(K, -1)
+    out = linear_combine_1d(flat, beta, block=block, interpret=interpret)
+    return out.reshape(history.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(
+    q, k_cache, v_cache, pos_cache, position, *, window=None, bk: int = 1024,
+    interpret: bool = True,
+):
+    """Single-token decode attention vs a ring KV cache (normalized).
+
+    q: (B, Hq, 1, D); caches (B, S, Hkv, D) + pos (B, S); position (B,).
+    """
+    acc, m, l = decode_attention_raw(
+        q, k_cache, v_cache, pos_cache, position,
+        window=window, bk=bk, interpret=interpret,
+    )
+    return acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q, k, v, *, causal: bool = True, bq: int = 128, bk: int = 128, interpret: bool = True
+):
+    """Normalized flash attention output, (B, Hq, S, D) f32."""
+    acc, m, l = flash_attention_raw(
+        q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret
+    )
+    return acc / jnp.maximum(l, 1e-30)

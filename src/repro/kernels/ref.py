@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fused_guidance_ref(eps_u, eps_c, scale):
+    """Returns (eps_cfg, gamma) — semantics of core.guidance, row-batched."""
+    u = eps_u.astype(jnp.float32)
+    c = eps_c.astype(jnp.float32)
+    out = (u + scale * (c - u)).astype(eps_u.dtype)
+    dot = jnp.sum(u * c, axis=-1)
+    nu = jnp.sum(u * u, axis=-1)
+    nc = jnp.sum(c * c, axis=-1)
+    gamma = dot / jnp.maximum(jnp.sqrt(nu * nc), 1e-12)
+    return out, gamma
+
+
+def linear_combine_ref(history, beta):
+    """history: (K, N); beta: (K,) -> (1, N)."""
+    out = jnp.einsum(
+        "k,kn->n", beta.astype(jnp.float32), history.astype(jnp.float32)
+    )
+    return out[None].astype(history.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos_cache, position, *, window=None):
+    """q: (B,Hq,1,D); caches (B,S,Hkv,D); pos (B,S); position (B,)."""
+    B, Hq, _, D = q.shape
+    Hkv = k_cache.shape[2]
+    g = Hq // Hkv
+    kr = jnp.repeat(jnp.swapaxes(k_cache, 1, 2), g, axis=1)  # (B,Hq,S,D)
+    vr = jnp.repeat(jnp.swapaxes(v_cache, 1, 2), g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    valid = pos_cache <= position[:, None]
+    if window is not None:
+        valid &= pos_cache > (position[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vr.astype(jnp.float32))
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (B,Hq,S,D); k/v: (B,Hkv,S,D) -> (B,Hq,S,D) f32."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    if causal:
+        mask = np.tril(np.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vr.astype(jnp.float32))

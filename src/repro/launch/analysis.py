@@ -1,0 +1,167 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §9).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS_BF16)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW_PER_LINK)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` on fully-unrolled
+costing variants (XLA counts while bodies once; see dryrun.py for the
+1-period/2-period extrapolation).  collective_bytes is parsed from the
+optimized HLO text: the summed byte size of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute result.
+
+Notes on semantics:
+ * cost_analysis on an SPMD-partitioned module reports PER-DEVICE numbers
+   (the partitioned program), so compute/memory terms divide by 1, not by
+   chips; we verify against analytic MODEL_FLOPS and record the ratio.
+ * collective bytes likewise are per-device; dividing by per-chip ICI
+   bandwidth gives a lower-bound transfer time (topology factors such as
+   ring hops are folded into an efficiency factor below).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]' -> bytes. Tuple shapes: sum of elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, top_n: int = 12) -> dict:
+    """Sum result bytes per collective kind from optimized HLO text.
+
+    Also records the ``top_n`` largest collective ops (kind, bytes, shape,
+    op_name metadata) for bottleneck attribution in §Perf.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    f32_bytes = 0  # XLA:CPU legalizes bf16 collectives to f32 (2x inflation
+    # vs the TPU target); recorded so tables can show the adjusted bound.
+    tops = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\([^)]*\)|\S+) ([\w\-]+)(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalize async forms: all-gather-start etc.
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start":
+                b = _shape_bytes(m.group(1))
+                out[k] += b
+                counts[k] += 1
+                if m.group(1).startswith("f32") or "(f32" in m.group(1):
+                    f32_bytes += b
+                name = ""
+                nm = re.search(r'op_name="([^"]+)"', ls)
+                if nm:
+                    name = nm.group(1)[-90:]
+                tops.append((b, k, m.group(1)[:60], name))
+                break
+    tops.sort(reverse=True)
+    out["_counts"] = counts
+    out["_top"] = [
+        {"bytes": b, "kind": k, "shape": sh, "op": nm} for b, k, sh, nm in tops[:top_n]
+    ]
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["f32"] = f32_bytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    chips: int
+    model_flops: float = 0.0
+    ici_efficiency: float = 1.0  # ring/topology derating if desired
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (ICI_BW_PER_LINK * self.ici_efficiency)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): fraction of compiled compute
+        that is 'useful' 6ND math (remat / padding / dispatch overhead
+        shows up as a ratio < 1)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_estimate(cfg, shape, *, guided: bool) -> float:
+    """Analytic 6*N_active*D (train: fwd+bwd; decode/prefill: 2*N*D fwd)."""
+    n = cfg.active_param_count()
+    mult = 2 if guided else 1
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch * mult
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * mult  # one new token per request
+    return 2.0 * n * tokens

@@ -1,0 +1,441 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, print memory/cost analyses, and emit roofline terms.
+
+MUST set the placeholder device count before ANY other import (jax locks the
+device count on first init).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import perf_flags
+from repro.configs import ARCH_NAMES, SHAPES, get_config, get_shape
+from repro.launch import analysis
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.models import build
+from repro.models import common as cm
+from repro.models import decoder as decoder_mod
+from repro.serving.guided_decode import make_prefill_step, make_serve_step
+from repro.sharding.partition import (
+    logical_spec,
+    param_shardings,
+    use_mesh,
+)
+from repro.training.optim import lion
+from repro.training.train_loop import lm_train_loss
+
+GUIDANCE_SCALE = 1.5  # logit-space CFG strength for serving shapes
+TRAIN_MICROBATCHES = int(os.environ.get("REPRO_TRAIN_MICRO", "16"))
+
+
+# ---------------------------------------------------------------------------
+# per-shape logical rule overrides (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def shape_rules(shape) -> dict:
+    if shape.kind == "train":
+        # 2D weight sharding (fsdp x tp) so optimizer state fits; the token
+        # embedding table is fsdp-sharded too unless no_embed_fsdp (variant:
+        # GSPMD "involuntary rematerialization" on the token gather)
+        rules = {"embed": "data", "kvlen": None, "embed_table": "data"}
+        if perf_flags.no_embed_fsdp:
+            rules["embed_table"] = None
+        return rules
+    if shape.kind == "prefill":
+        if perf_flags.prefill_seq_parallel:
+            return {
+                "seq": "model", "qdim": None, "kvdim": None, "ffn": None,
+                "heads": None, "kvheads": None, "vocab": None,
+                "ssm_inner": None, "embed": "data", "embed_table": "data",
+                "kvlen": None,
+            }
+        return {"kvlen": None}
+    # decode: KV-cache length is the big axis -> shard it over "model"
+    # (heads stay unsharded: kvlen and kvheads may not share an axis)
+    if shape.name == "long_500k":
+        # B too small to shard: context parallelism over every axis
+        return {"batch": None, "kvlen": ("data", "model"), "kvheads": None}
+    return {"kvlen": "model", "kvheads": None}
+
+
+# ---------------------------------------------------------------------------
+# input shardings
+# ---------------------------------------------------------------------------
+
+
+def _cache_spec(path_keys, sds):
+    """PartitionSpec for one cache leaf, matched by its dict key."""
+    key = path_keys[-1]
+    nd = len(sds.shape)
+    if key in ("k", "v"):
+        names = (None, "batch", "kvlen", None, None)
+    elif key == "pos":
+        names = (None, "batch", "kvlen")
+    elif key == "state":
+        names = (None, "batch", "ssm_heads", None, None)
+    elif key == "conv_x":
+        names = (None, "batch", None, "ssm_inner")
+    elif key in ("conv_b", "conv_c"):
+        names = (None, "batch", None, None)
+    elif key in ("cross_k", "cross_v"):
+        names = (None, "batch", None, None, None)
+    else:
+        names = (None,) * nd
+    return logical_spec(*names[:nd])
+
+
+def _input_spec(key, sds):
+    nd = len(sds.shape)
+    if key in ("tokens", "labels"):
+        return logical_spec(*("batch", None)[:nd])
+    if key == "position":
+        return logical_spec("batch")
+    if key in ("image_embeds", "frames"):
+        return logical_spec("batch", None, None)
+    if key in ("x_t", "eps"):
+        return logical_spec("batch", None, None, None)
+    if key in ("t", "cond"):
+        return logical_spec("batch")
+    return P()
+
+
+def input_shardings(specs, mesh):
+    out = {}
+    for key, val in specs.items():
+        if key == "caches":
+            out[key] = _tree_cache_shardings(val, mesh)
+        else:
+            out[key] = NamedSharding(mesh, _sanitize(_input_spec(key, val), val, mesh))
+    return out
+
+
+def _tree_cache_shardings(tree, mesh):
+    def walk(node, keys):
+        if isinstance(node, dict):
+            return {k: walk(v, keys + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, keys) for v in node)
+        return NamedSharding(mesh, _sanitize(_cache_spec(keys, node), node, mesh))
+
+    return walk(tree, ())
+
+
+def _sanitize(spec, sds, mesh):
+    """Drop axes that do not divide the dim (inputs must shard evenly)."""
+    parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+    fixed = []
+    for dim, ax in zip(sds.shape, parts):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return P(*fixed)
+
+
+def sanitize_param_shardings(shardings, shapes, mesh):
+    return jax.tree.map(
+        lambda sh, sds: NamedSharding(mesh, _sanitize(sh.spec, sds, mesh)),
+        shardings,
+        shapes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(api, micro: int):
+    opt = lion(lr=1e-4)
+
+    def train_step(params, m_state, batch):
+        B = batch["tokens"].shape[0]
+        assert B % micro == 0
+
+        def micro_loss(p, mb):
+            return lm_train_loss(api, p, mb, remat=True)
+
+        def accum(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(micro_loss)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(a.dtype) / micro, g_acc, g
+            )
+            return (g_acc, l_acc + l / micro), None
+
+        mb = jax.tree.map(
+            lambda x: x.reshape((micro, B // micro) + x.shape[1:]), batch
+        )
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        (grads, loss), _ = cm.scan(accum, (g0, jnp.zeros((), jnp.float32)), mb)
+        new_params, new_m = opt.update(params, grads, m_state)
+        return new_params, new_m, loss
+
+    return train_step, opt
+
+
+def build_fn_and_specs(api, shape, kind, *, micro: int = TRAIN_MICROBATCHES):
+    """Returns (fn, arg_specs tuple, arg_shardings tuple)."""
+    params_shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    p_shard = sanitize_param_shardings(
+        param_shardings(params_shapes), params_shapes, _ACTIVE_MESH
+    )
+
+    if kind == "train":
+        specs = api.input_specs(shape, guided=False)
+        in_sh = input_shardings(specs, _ACTIVE_MESH)
+        step, opt = build_train_step(api, micro)
+        m_shapes = jax.eval_shape(opt.init, params_shapes)
+        m_shard = {
+            "m": sanitize_param_shardings(
+                param_shardings(params_shapes), params_shapes, _ACTIVE_MESH
+            ),
+            "t": NamedSharding(_ACTIVE_MESH, P()),
+        }
+        return (
+            step,
+            (params_shapes, m_shapes, specs),
+            (p_shard, m_shard, in_sh),
+            (p_shard, m_shard, None),
+        )
+    if kind == "prefill":
+        specs = api.input_specs(shape, guided=True)
+        fn = make_prefill_step(api)
+        in_sh = input_shardings(specs, _ACTIVE_MESH)
+        return fn, (params_shapes, specs), (p_shard, in_sh), None
+    # decode
+    guided = _GUIDANCE_MODE == "cfg"
+    specs = api.input_specs(shape, guided=guided)
+    fn = make_serve_step(api, guidance=_GUIDANCE_MODE, scale=GUIDANCE_SCALE)
+    in_sh = input_shardings(specs, _ACTIVE_MESH)
+    return fn, (params_shapes, specs), (p_shard, in_sh), None
+
+
+_ACTIVE_MESH = None
+_GUIDANCE_MODE = "cfg"
+
+
+# ---------------------------------------------------------------------------
+# single combo
+# ---------------------------------------------------------------------------
+
+
+def lower_and_compile(arch: str, shape_name: str, *, multi_pod: bool, costing=False,
+                      num_layers=None, verbose=True, micro=None, global_batch=None):
+    global _ACTIVE_MESH
+    shape = get_shape(shape_name)
+    cfg = get_config(arch).for_shape(shape_name)
+    if num_layers is not None:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers)
+    if global_batch is not None:
+        shape = dataclasses.replace(shape, global_batch=global_batch)
+    if micro is None:
+        micro = TRAIN_MICROBATCHES if not multi_pod else 8
+    api = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    _ACTIVE_MESH = mesh
+    cm.set_scan_unroll(bool(costing))
+    try:
+        with use_mesh(mesh, shape_rules(shape)):
+            fn, arg_specs, arg_sh, out_sh = build_fn_and_specs(
+                api, shape, shape.kind, micro=micro
+            )
+            donate = (0, 1) if shape.kind == "train" else ()
+            if shape.kind == "decode" and perf_flags.donate_caches:
+                donate = (1,)  # inputs dict (caches dominate)
+            jitted = jax.jit(
+                fn, in_shardings=arg_sh, out_shardings=out_sh, donate_argnums=donate
+            )
+            t0 = time.time()
+            lowered = jitted.lower(*arg_specs)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+    finally:
+        cm.set_scan_unroll(False)
+        _ACTIVE_MESH = None
+    if verbose:
+        print(
+            f"  lower {t1 - t0:.1f}s compile {t2 - t1:.1f}s"
+            f"  (layers={cfg.num_layers}, costing={costing})"
+        )
+    return compiled, cfg
+
+
+def period_of(cfg) -> int:
+    if cfg.family == "encdec":
+        return 1
+    return len(decoder_mod.layer_plan(cfg))
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+    shape = get_shape(shape_name)
+    cfg = get_config(arch)
+    if not cfg.supports_shape(shape_name):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": "see DESIGN.md arch-applicability"}
+    chips = 512 if multi_pod else 256
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod, "chips": chips}
+    t_start = time.time()
+    try:
+        # A) real scanned executable: the deliverable compile + memory proof
+        compiled, full_cfg = lower_and_compile(
+            arch, shape_name, multi_pod=multi_pod, costing=False
+        )
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_est_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        }
+        rec["fits_hbm"] = rec["memory"]["peak_est_bytes"] <= HBM_BYTES
+        ca_full = compiled.cost_analysis()
+        rec["scan_cost_raw"] = {
+            "flops": ca_full.get("flops", 0.0),
+            "bytes": ca_full.get("bytes accessed", 0.0),
+        }
+        del compiled
+
+        period = period_of(full_cfg)
+        n_periods = full_cfg.num_layers // period
+
+        def measure(num_layers, micro=None, global_batch=None):
+            c, _ = lower_and_compile(
+                arch, shape_name, multi_pod=multi_pod, costing=True,
+                num_layers=num_layers, micro=micro, global_batch=global_batch,
+            )
+            ca = c.cost_analysis()
+            coll = analysis.collective_bytes(c.as_text())
+            out = {
+                "flops": ca.get("flops", 0.0),
+                "bytes": ca.get("bytes accessed", 0.0),
+                **{k: coll[k] for k in coll if not k.startswith("_")},
+            }
+            counts = {"counts": coll["_counts"], "top": coll["_top"]}
+            del c
+            return out, counts
+
+        keys = ("flops", "bytes") + analysis._COLLECTIVES + ("total", "f32")
+        if shape.kind == "train":
+            # 3-point extrapolation: F(L, M) = fixed + M*(mf + L*l)
+            M = TRAIN_MICROBATCHES if not multi_pod else 8
+            b_micro = shape.global_batch // M
+            f11, counts = measure(period, micro=1, global_batch=b_micro)
+            f21, _ = measure(2 * period, micro=1, global_batch=b_micro)
+            f12, _ = measure(period, micro=2, global_batch=2 * b_micro)
+            agg = {}
+            for k in keys:
+                l = f21[k] - f11[k]
+                mf = f12[k] - f11[k] - l
+                fixed = f11[k] - mf - l
+                agg[k] = fixed + M * (mf + n_periods * l)
+        else:
+            f1, counts = measure(period)
+            f2, _ = measure(2 * period)
+            agg = {k: f1[k] + (n_periods - 1) * (f2[k] - f1[k]) for k in keys}
+
+        flops, bytes_ = agg["flops"], agg["bytes"]
+        coll = {k: agg[k] for k in analysis._COLLECTIVES + ("total", "f32")}
+        rec["collectives"] = coll
+        rec["collective_counts_1p"] = counts
+
+        guided = shape.kind in ("prefill", "decode")
+        mf = analysis.model_flops_estimate(full_cfg, shape, guided=guided)
+        roof = analysis.Roofline(
+            flops=flops,
+            bytes_accessed=bytes_,
+            coll_bytes=coll["total"],
+            chips=chips,
+            model_flops=mf,
+        )
+        rec["roofline"] = roof.row()
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = time.time() - t_start
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default=None,
+                    help="comma-separated perf flags, e.g. bf16_attn_scores")
+    ap.add_argument("--guidance", default="cfg", choices=["cfg", "cond"],
+                    help="decode-step guidance mode (cond = the AG-truncated tail)")
+    args = ap.parse_args()
+    if args.variant:
+        perf_flags.set_flags(**{v: True for v in args.variant.split(",")})
+    global _GUIDANCE_MODE
+    _GUIDANCE_MODE = args.guidance
+
+    archs = ARCH_NAMES if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                if args.variant:
+                    tag += "__" + args.variant.replace(",", "+")
+                if args.guidance != "cfg":
+                    tag += "__cond"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag}")
+                rec = run_combo(arch, shape, multi_pod=mp)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f" bottleneck={r['bottleneck']}"
+                        f" tc={r['t_compute_s']:.2e} tm={r['t_memory_s']:.2e}"
+                        f" tx={r['t_collective_s']:.2e}"
+                        f" mem/dev={rec['memory']['peak_est_bytes'] / 2**30:.2f}GiB"
+                    )
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"  -> {status}{extra}")
+
+
+if __name__ == "__main__":
+    main()

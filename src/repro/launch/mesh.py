@@ -1,0 +1,36 @@
+"""Production meshes (TPU v5e pod slices).
+
+Single pod: (16, 16) over ("data", "model") — 256 chips.
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips; the
+"pod" axis carries data parallelism whose gradient all-reduce crosses DCI.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Whatever devices exist (tests / smoke runs): a (1, N) data x model mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s  (per link/direction)
+HBM_BYTES = 16 * 2 ** 30

@@ -1,0 +1,3 @@
+from repro.models.registry import ModelApi, build, build_by_name
+
+__all__ = ["ModelApi", "build", "build_by_name"]

@@ -1,0 +1,446 @@
+"""Shared model components: norms, RoPE, GQA attention, SwiGLU MLP.
+
+Pure-JAX functional style: ``init_*`` builds dict pytrees of parameters,
+``*_apply`` consumes them.  All activation tensors pass through logical
+sharding constraints (no-ops without an active mesh).
+
+Attention supports three execution modes:
+  - full:   S x S masked attention (small S / tests)
+  - chunked: flash-style online-softmax scan over KV blocks (default for
+             train/prefill at long S; O(S * chunk) memory)
+  - decode: single-query attention against a KV cache (optionally a
+             sliding-window ring buffer)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import perf_flags
+from repro.sharding.partition import lsc
+
+DEFAULT_CHUNK = 1024
+
+
+def _score_einsum(spec, a, b):
+    """Attention einsum honoring the bf16_attn_scores perf flag:
+    baseline upcasts both operands to f32 (naive lowering); the variant
+    feeds bf16 with f32 accumulation (TPU MXU native)."""
+    if perf_flags.bf16_attn_scores:
+        return jnp.einsum(
+            spec,
+            a.astype(jnp.bfloat16),
+            b.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+    return jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
+
+# Dry-run costing mode: when True every lax.scan in the model stack is fully
+# unrolled so compiled.cost_analysis() counts loop bodies exactly (XLA counts
+# a while-loop body ONCE regardless of trip count — DESIGN.md section 9).
+_SCAN_UNROLL = False
+
+
+def set_scan_unroll(value: bool) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = bool(value)
+
+
+def scan(body, init, xs, **kw):
+    if _SCAN_UNROLL:
+        kw = dict(kw, unroll=True)
+    return jax.lax.scan(body, init, xs, **kw)
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, fan_in, fan_out, dtype):
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+def embed_init(key, vocab, dim, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    return int(-(-vocab // multiple) * multiple)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)  # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int):
+    pos = np.arange(seq_len)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angles = pos / np.power(10_000.0, 2 * i / dim)
+    table = np.concatenate([np.sin(angles), np.cos(angles)], axis=-1)
+    return jnp.asarray(table, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None
+    causal: bool = True
+    use_bias: bool = False
+
+
+def attn_cfg_from(cfg, *, causal=True) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        qk_norm=cfg.qk_norm,
+        use_rope=cfg.use_rope,
+        rope_theta=cfg.rope_theta,
+        sliding_window=cfg.sliding_window,
+        causal=causal,
+    )
+
+
+def init_attention(key, ac: AttnConfig, dtype):
+    keys = jax.random.split(key, 4)
+    q_dim = ac.num_heads * ac.head_dim
+    kv_dim = ac.num_kv_heads * ac.head_dim
+    p = {
+        "wq": dense_init(keys[0], ac.d_model, q_dim, dtype),
+        "wk": dense_init(keys[1], ac.d_model, kv_dim, dtype),
+        "wv": dense_init(keys[2], ac.d_model, kv_dim, dtype),
+        "wo": dense_init(keys[3], q_dim, ac.d_model, dtype),
+    }
+    if ac.use_bias:
+        p.update(
+            bq=jnp.zeros((q_dim,), dtype),
+            bk=jnp.zeros((kv_dim,), dtype),
+            bv=jnp.zeros((kv_dim,), dtype),
+            bo=jnp.zeros((ac.d_model,), dtype),
+        )
+    if ac.qk_norm:
+        p["q_norm"] = init_rmsnorm(ac.head_dim)
+        p["k_norm"] = init_rmsnorm(ac.head_dim)
+    return p
+
+
+def _project_qkv(params, ac: AttnConfig, x, positions, kv_x=None):
+    """Returns q (B,S,Hq,Dh), k/v (B,Skv,Hkv,Dh)."""
+    kv_x = x if kv_x is None else kv_x
+    q = x @ params["wq"]
+    k = kv_x @ params["wk"]
+    v = kv_x @ params["wv"]
+    if ac.use_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = lsc(q, "batch", "seq", "qdim")
+    k = lsc(k, "batch", "seq", "kvdim")
+    v = lsc(v, "batch", "seq", "kvdim")
+    B, S = q.shape[0], q.shape[1]
+    Skv = k.shape[1]
+    q = q.reshape(B, S, ac.num_heads, ac.head_dim)
+    k = k.reshape(B, Skv, ac.num_kv_heads, ac.head_dim)
+    v = v.reshape(B, Skv, ac.num_kv_heads, ac.head_dim)
+    if ac.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if ac.use_rope and positions is not None:
+        q = apply_rope(q, positions, ac.rope_theta)
+        k = apply_rope(k, positions, ac.rope_theta)
+    return q, k, v
+
+
+def _grouped(q, ac: AttnConfig):
+    """(B,S,Hq,Dh) -> (B,S,Hkv,G,Dh)."""
+    B, S = q.shape[:2]
+    g = ac.num_heads // ac.num_kv_heads
+    return q.reshape(B, S, ac.num_kv_heads, g, ac.head_dim)
+
+
+def _attn_mask(q_pos, k_pos, ac: AttnConfig):
+    """(..., Sq, Sk) additive mask in f32."""
+    m = jnp.zeros(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), jnp.float32)
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    if ac.causal:
+        m = jnp.where(d < 0, -jnp.inf, m)
+    if ac.sliding_window is not None:
+        m = jnp.where(d >= ac.sliding_window, -jnp.inf, m)
+    return m
+
+
+def attention_full(params, ac: AttnConfig, x, positions, kv_x=None, kv_positions=None):
+    """Materialized S x S attention. Tests / short sequences / cross-attn."""
+    q, k, v = _project_qkv(params, ac, x, positions, kv_x)
+    kv_positions = positions if kv_positions is None else kv_positions
+    qg = _grouped(q, ac)
+    scale = 1.0 / np.sqrt(ac.head_dim)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if ac.causal or ac.sliding_window is not None:
+        mask = _attn_mask(positions, kv_positions, ac)  # (B,Sq,Sk) or (Sq,Sk)
+        scores = scores + mask[..., None, None, :, :] if mask.ndim == 2 else scores + mask[:, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    out = out.reshape(x.shape[0], q.shape[1], ac.num_heads * ac.head_dim).astype(x.dtype)
+    out = lsc(out, "batch", None, "qdim")
+    y = out @ params["wo"]
+    if ac.use_bias:
+        y = y + params["bo"]
+    return y
+
+
+def _chunked_core(qg, k, v, positions, ac: AttnConfig, chunk: int):
+    """Online-softmax attention over KV chunks. qg: (B,S,Hkv,G,Dh) f32."""
+    B, S = qg.shape[:2]
+    assert S % chunk == 0, (S, chunk)
+    n_blocks = S // chunk
+    scale = 1.0 / np.sqrt(ac.head_dim)
+    kb = k.reshape(B, n_blocks, chunk, ac.num_kv_heads, ac.head_dim)
+    vb = v.reshape(B, n_blocks, chunk, ac.num_kv_heads, ac.head_dim)
+    per_batch_pos = positions.ndim == 2
+    pb = (
+        positions.reshape(B, n_blocks, chunk)
+        if per_batch_pos
+        else positions.reshape(n_blocks, chunk)
+    )
+
+    def body(carry, blk):
+        m, l, acc = carry  # (B,Hkv,G,S), (B,Hkv,G,S), (B,S,Hkv,G,Dh)
+        k_c, v_c, kp = blk
+        s = _score_einsum("bqhgd,bkhd->bhgqk", qg, k_c) * scale
+        mask = _attn_mask(positions, kp, ac)
+        s = s + (mask[:, None, None] if per_batch_pos else mask[None, None, None])
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isinf(s), 0.0, p)
+        corr = jnp.where(jnp.isinf(m), jnp.where(jnp.isinf(m_new), 1.0, 0.0), jnp.exp(m - m_safe))
+        l_new = l * corr + p.sum(axis=-1)
+        pv = _score_einsum("bhgqk,bkhd->bqhgd", p, v_c)
+        acc_new = acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    g = ac.num_heads // ac.num_kv_heads
+    m0 = jnp.full((B, ac.num_kv_heads, g, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros_like(m0)
+    acc0 = jnp.zeros(qg.shape, jnp.float32)
+    kbs, vbs = jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)
+    pbs = jnp.moveaxis(pb, 1, 0) if per_batch_pos else pb
+    (m, l, acc), _ = scan(body, (m0, l0, acc0), (kbs, vbs, pbs))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return acc / jnp.moveaxis(l, -1, 1)[..., None]
+
+
+def attention_chunked(
+    params, ac: AttnConfig, x, positions, chunk: int = DEFAULT_CHUNK, return_kv=False
+):
+    """Flash-style online-softmax over KV chunks; O(S*chunk) memory.
+
+    Self-attention only (train / prefill).  Causal + optional sliding window
+    applied per block; blocks fully outside the mask are still scanned (XLA
+    while-loop; a production TPU kernel would skip them -- see kernels/).
+    When ``return_kv`` the (roped) K/V are also returned for cache packing.
+    """
+    q, k, v = _project_qkv(params, ac, x, positions)
+    B, S = q.shape[:2]
+    qg = _grouped(q, ac).astype(jnp.float32)  # (B,S,Hkv,G,Dh)
+    out = _chunked_core(qg, k, v, positions, ac, min(chunk, S))
+    out = out.reshape(B, S, ac.num_heads * ac.head_dim).astype(x.dtype)
+    out = lsc(out, "batch", "seq", "qdim")
+    y = out @ params["wo"]
+    if ac.use_bias:
+        y = y + params["bo"]
+    if return_kv:
+        return y, k, v
+    return y
+
+
+
+def attention_decode(params, ac: AttnConfig, x, cache, position):
+    """Single-step decode: x (B,1,d); cache dict {k,v: (B,S,Hkv,Dh)}.
+
+    ``position`` (B,) int32 is the index of the new token.  The cache is
+    updated at ``position % S`` (ring-buffer semantics when sliding_window
+    equals the cache length; plain append otherwise).  Entries at positions
+    > current position (never written) are masked via the ``pos`` buffer.
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(params, ac, x, position[:, None])
+    slot = (position % S).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    pos_cache = cache["pos"].at[bidx, slot].set(position.astype(jnp.int32))
+    k_cache = lsc(k_cache, "batch", "kvlen", "kvheads", None)
+    v_cache = lsc(v_cache, "batch", "kvlen", "kvheads", None)
+
+    qg = _grouped(q, ac).astype(jnp.float32)[:, 0]  # (B,Hkv,G,Dh)
+    scale = 1.0 / np.sqrt(ac.head_dim)
+    s = _score_einsum("bhgd,bkhd->bhgk", qg, k_cache) * scale
+    # mask: valid iff pos_cache <= position and (window) pos > position - w
+    valid = pos_cache <= position[:, None]
+    if ac.sliding_window is not None:
+        valid &= pos_cache > (position[:, None] - ac.sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _score_einsum("bhgk,bkhd->bhgd", w, v_cache)
+    out = out.reshape(B, 1, ac.num_heads * ac.head_dim).astype(x.dtype)
+    out = lsc(out, "batch", None, "qdim")
+    y = out @ params["wo"]
+    if ac.use_bias:
+        y = y + params["bo"]
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    return y, new_cache
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, dtype=None):
+    """Per-layer KV cache pytree (stacked over layers by the caller)."""
+    dtype = dtype or dtype_of(cfg)
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    return {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, S), jnp.iinfo(jnp.int32).max, jnp.int32),
+    }
+
+
+def prefill_to_cache(k, v, positions, cache_len: int, window: Optional[int]):
+    """Pack prefill K/V (B,S,Hkv,Dh) into a decode cache of length cache_len."""
+    B, S = k.shape[:2]
+    if window and S > cache_len:
+        k, v, positions = k[:, -cache_len:], v[:, -cache_len:], positions[:, -cache_len:]
+        S = cache_len
+    pos = jnp.full((B, cache_len), jnp.iinfo(jnp.int32).max, jnp.int32)
+    kc = jnp.zeros((B, cache_len) + k.shape[2:], k.dtype).at[:, :S].set(k)
+    vc = jnp.zeros((B, cache_len) + v.shape[2:], v.dtype).at[:, :S].set(v)
+    pos = pos.at[:, :S].set(positions.astype(jnp.int32))
+    return {"k": kc, "v": vc, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype, *, gated=True, use_bias=False):
+    keys = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(keys[0], d_model, d_ff, dtype),
+        "w2": dense_init(keys[1], d_ff, d_model, dtype),
+    }
+    if gated:
+        p["w3"] = dense_init(keys[2], d_model, d_ff, dtype)
+    if use_bias:
+        p["b1"] = jnp.zeros((d_ff,), dtype)
+        p["b2"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(params, x, *, act=jax.nn.silu):
+    h = x @ params["w1"]
+    if "b1" in params:
+        h = h + params["b1"]
+    h = lsc(h, "batch", "seq", "ffn")
+    if "w3" in params:
+        h = act(h) * lsc(x @ params["w3"], "batch", "seq", "ffn")
+    else:
+        h = act(h)
+    y = h @ params["w2"]
+    if "b2" in params:
+        y = y + params["b2"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab, dim, dtype):
+    return {"table": embed_init(key, padded_vocab(vocab), dim, dtype)}
+
+
+def embed(params, tokens):
+    out = jnp.take(params["table"], tokens, axis=0)
+    return lsc(out, "batch", "seq", None)
+
+
+def unembed(params, x, vocab: int, *, lm_head=None):
+    """Logits; vocab axis sharded over model. Returns padded-vocab logits."""
+    table = lm_head["w"] if lm_head is not None else params["table"].T
+    logits = (x @ table.astype(x.dtype)).astype(jnp.float32)
+    return lsc(logits, "batch", "seq", "vocab")
+
+
+def init_lm_head(key, dim, vocab, dtype):
+    return {"w": dense_init(key, dim, padded_vocab(vocab), dtype)}

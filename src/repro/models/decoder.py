@@ -1,0 +1,303 @@
+"""Generic decoder-only LM covering dense, MoE, hybrid (Mamba+attn) and VLM.
+
+A config induces a *layer plan*: a period of block kinds, repeated
+``num_layers // period`` times.  Parameters for each position in the period
+are stacked over periods and executed with ``lax.scan`` so the lowered HLO
+stays compact for the multi-pod dry-run (see DESIGN.md §9).
+
+Block kinds: "attn" or "ssm" mixer + "mlp" / "moe" / "moe+mlp" (arctic's
+dense residual) feed-forward.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import mamba2, moe as moe_mod
+from repro.sharding.partition import lsc
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg) -> list[tuple[str, str]]:
+    """Returns one period of (mixer, ffn) kinds."""
+    period = 1
+    if cfg.attn_layer_period:
+        period = cfg.attn_layer_period
+    if cfg.num_experts and cfg.moe_layer_period > 1:
+        period = max(period, cfg.moe_layer_period)
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    plan = []
+    for i in range(period):
+        if cfg.family == "ssm":
+            mixer = "ssm"
+        elif cfg.attn_layer_period:
+            mixer = "attn" if i % cfg.attn_layer_period == cfg.attn_layer_offset else "ssm"
+        else:
+            mixer = "attn"
+        if cfg.family == "ssm":
+            ffn = "none"
+        elif cfg.num_experts and i % cfg.moe_layer_period == 0:
+            ffn = "moe+mlp" if cfg.dense_residual else "moe"
+        else:
+            ffn = "mlp"
+        plan.append((mixer, ffn))
+    return plan
+
+
+def n_periods(cfg) -> int:
+    return cfg.num_layers // len(layer_plan(cfg))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, kind, dtype):
+    mixer, ffn = kind
+    keys = jax.random.split(key, 6)
+    p = {}
+    if mixer == "attn":
+        p["attn_norm"] = cm.init_rmsnorm(cfg.d_model)
+        p["attn"] = cm.init_attention(keys[0], cm.attn_cfg_from(cfg), dtype)
+    else:
+        p["ssm_norm"] = cm.init_rmsnorm(cfg.d_model)
+        p["ssm"] = mamba2.init_ssm(keys[1], cfg, dtype)
+    if ffn != "none":
+        p["ffn_norm"] = cm.init_rmsnorm(cfg.d_model)
+    if ffn in ("moe", "moe+mlp"):
+        p["moe"] = moe_mod.init_moe(
+            keys[2], cfg.d_model, cfg.moe_d_ff, cfg.num_experts, dtype
+        )
+    if ffn in ("mlp", "moe+mlp"):
+        p["mlp"] = cm.init_mlp(keys[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_decoder(key, cfg):
+    dtype = cm.dtype_of(cfg)
+    plan = layer_plan(cfg)
+    np_ = n_periods(cfg)
+    keys = jax.random.split(key, len(plan) + 3)
+    params = {"embed": cm.init_embed(keys[-1], cfg.vocab_size, cfg.d_model, dtype)}
+    params["final_norm"] = cm.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.init_lm_head(keys[-2], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.family == "vlm":
+        params["projector"] = {
+            "w": cm.dense_init(keys[-3], cfg.vision_embed_dim, cfg.d_model, dtype)
+        }
+    for i, kind in enumerate(plan):
+        params[f"blocks_{i}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, kind, dtype)
+        )(jax.random.split(keys[i], np_))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(p, cfg, kind, x, positions, *, mode, cache, chunk):
+    """Returns (x, new_cache, kv_for_prefill, aux)."""
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    new_cache, kv = None, None
+    if mixer == "attn":
+        h = cm.rmsnorm(p["attn_norm"], x)
+        ac = cm.attn_cfg_from(cfg)
+        if mode == "decode":
+            y, new_cache = cm.attention_decode(p["attn"], ac, h, cache, positions)
+        elif mode == "prefill":
+            y, k, v = cm.attention_chunked(
+                p["attn"], ac, h, positions, chunk, return_kv=True
+            )
+            kv = (k, v)
+        else:
+            y = cm.attention_chunked(p["attn"], ac, h, positions, chunk)
+        x = x + y
+    else:
+        h = cm.rmsnorm(p["ssm_norm"], x)
+        ssm_mode = mode if mode in ("decode", "prefill") else "train"
+        pos1 = positions  # unused by ssm
+        y, new_cache = mamba2.ssm_apply(p["ssm"], cfg, h, mode=ssm_mode, cache=cache)
+        x = x + y
+    if ffn != "none":
+        h = cm.rmsnorm(p["ffn_norm"], x)
+        delta = 0.0
+        if "moe" in p:
+            mo, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+            delta = delta + mo
+        if "mlp" in p:
+            delta = delta + cm.mlp(p["mlp"], h)
+        x = x + delta
+    return x, new_cache, kv, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg, tokens, image_embeds=None):
+    x = cm.embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        assert image_embeds is not None
+        prefix = image_embeds.astype(x.dtype) @ params["projector"]["w"]
+        x = jnp.concatenate([prefix, x], axis=1)
+    if cfg.name.startswith("paligemma") or cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model, x.dtype) ** 0.5  # gemma embedding scale
+    return x
+
+
+def forward(
+    params,
+    cfg,
+    tokens,
+    *,
+    image_embeds=None,
+    mode: str = "train",
+    chunk: int = cm.DEFAULT_CHUNK,
+    remat: bool = False,
+    return_hidden: bool = False,
+    cache_len: int = None,
+):
+    """tokens: (B, S_text). Returns logits (or hidden) and extras dict.
+
+    mode="prefill" additionally returns decode-ready caches.
+    """
+    plan = layer_plan(cfg)
+    x = _embed_inputs(params, cfg, tokens, image_embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = lsc(x, "batch", "seq", None)
+
+    def period_body(carry, stacked_p):
+        x, aux = carry
+        kvs = []
+        for i, kind in enumerate(plan):
+            x, _, kv, a = _apply_block(
+                stacked_p[f"blocks_{i}"],
+                cfg,
+                kind,
+                x,
+                positions,
+                mode=mode,
+                cache=None,
+                chunk=chunk,
+            )
+            aux = aux + a
+            if mode == "prefill":
+                kvs.append(kv)
+        return (x, aux), kvs if mode == "prefill" else None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    stacked = {k: v for k, v in params.items() if k.startswith("blocks_")}
+    if mode == "prefill":
+        # Python loop over periods to collect heterogeneous caches simply.
+        aux = jnp.zeros((), jnp.float32)
+        all_caches = []
+        npd = n_periods(cfg)
+        for pi in range(npd):
+            p_i = jax.tree.map(lambda a: a[pi], stacked)
+            per_caches = []
+            for i, kind in enumerate(plan):
+                x, cache_new, kv, a = _apply_block(
+                    p_i[f"blocks_{i}"],
+                    cfg,
+                    kind,
+                    x,
+                    positions,
+                    mode="prefill",
+                    cache=None,
+                    chunk=chunk,
+                )
+                aux = aux + a
+                if kind[0] == "attn":
+                    win = cfg.sliding_window
+                    cl = cache_len or S
+                    cl = min(cl, win) if win else cl
+                    cache_new = cm.prefill_to_cache(kv[0], kv[1], positions, cl, win)
+                per_caches.append(cache_new)
+            all_caches.append(per_caches)
+        # stack caches over periods per plan position
+        caches = [
+            jax.tree.map(lambda *xs: jnp.stack(xs), *[all_caches[p][i] for p in range(npd)])
+            for i in range(len(plan))
+        ]
+        extras = {"aux_loss": aux, "caches": caches, "positions": positions}
+    else:
+        (x, aux), _ = cm.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+        extras = {"aux_loss": aux}
+
+    x = cm.rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, extras
+    logits = cm.unembed(
+        params["embed"], x, cfg.vocab_size, lm_head=params.get("lm_head")
+    )
+    return logits, extras
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg, token, caches, position):
+    """token: (B,1) int32; position: (B,) int32; caches: list per plan pos.
+
+    Returns (logits (B,1,V), new_caches).
+    """
+    plan = layer_plan(cfg)
+    x = cm.embed(params["embed"], token)
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model, x.dtype) ** 0.5
+    stacked = {k: v for k, v in params.items() if k.startswith("blocks_")}
+
+    def period_body(x, inp):
+        stacked_p, caches_p = inp
+        new_caches = []
+        for i, kind in enumerate(plan):
+            x, cache_new, _, _ = _apply_block(
+                stacked_p[f"blocks_{i}"],
+                cfg,
+                kind,
+                x,
+                position,
+                mode="decode",
+                cache=caches_p[i],
+                chunk=0,
+            )
+            new_caches.append(cache_new)
+        return x, new_caches
+
+    x, new_caches = cm.scan(period_body, x, (stacked, caches))
+    x = cm.rmsnorm(params["final_norm"], x)
+    logits = cm.unembed(
+        params["embed"], x, cfg.vocab_size, lm_head=params.get("lm_head")
+    )
+    return logits, new_caches
+
+
+def init_caches(cfg, batch: int, seq_len: int):
+    """Decode caches: list per plan position, stacked over periods."""
+    plan = layer_plan(cfg)
+    npd = n_periods(cfg)
+    caches = []
+    for mixer, _ in plan:
+        if mixer == "attn":
+            one = cm.init_kv_cache(cfg, batch, seq_len)
+        else:
+            one = mamba2.init_ssm_cache(cfg, batch)
+        caches.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (npd,) + x.shape), one))
+    return caches

@@ -1,0 +1,155 @@
+"""Conditional Diffusion Transformer (DiT) — the paper's own model family.
+
+Stand-in for LDM-512 / EMU-768 (DESIGN.md §8): a class-conditioned DiT
+(adaLN-zero modulation, arXiv:2212.09748) predicting eps in a latent space
+(latent_ch x latent_hw x latent_hw).  ``cfg.vocab_size`` is the number of
+condition classes; class id ``vocab_size`` is the learned NULL condition used
+for classifier-free guidance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+from repro.sharding.partition import lsc
+
+
+def num_tokens(cfg) -> int:
+    return (cfg.latent_hw // cfg.patch) ** 2
+
+
+def timestep_embedding(t, dim: int, max_period: float = 10_000.0):
+    """t: (B,) float/int -> (B, dim) sinusoidal."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def _init_block(key, cfg, dtype):
+    keys = jax.random.split(key, 3)
+    d = cfg.d_model
+    import dataclasses
+
+    ac = dataclasses.replace(cm.attn_cfg_from(cfg, causal=False), use_rope=False)
+    return {
+        "attn": cm.init_attention(keys[0], ac, dtype),
+        "mlp": cm.init_mlp(keys[1], d, cfg.d_ff, dtype, gated=False, use_bias=True),
+        # adaLN-zero: cond -> 6*d modulation, zero-init
+        "ada_ln": {
+            "w": jnp.zeros((cfg.cond_dim, 6 * d), dtype),
+            "b": jnp.zeros((6 * d,), dtype),
+        },
+    }
+
+
+def init_dit(key, cfg):
+    dtype = cm.dtype_of(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    patch_dim = cfg.patch * cfg.patch * cfg.latent_ch
+    T = num_tokens(cfg)
+    return {
+        "patch": {
+            "w": cm.dense_init(keys[0], patch_dim, d, dtype),
+            "wo": cm.dense_init(keys[1], d, patch_dim, dtype) * 0.0,
+        },
+        "pos_embed": (
+            jax.random.normal(keys[2], (T, d), jnp.float32) * 0.02
+        ).astype(dtype),
+        "t_mlp": {
+            "w1": cm.dense_init(keys[3], 256, cfg.cond_dim, dtype),
+            "b1": jnp.zeros((cfg.cond_dim,), dtype),
+            "w2": cm.dense_init(keys[4], cfg.cond_dim, cfg.cond_dim, dtype),
+            "b2": jnp.zeros((cfg.cond_dim,), dtype),
+        },
+        "cond_embed": {
+            "table": cm.embed_init(keys[5], cfg.vocab_size + 1, cfg.cond_dim, dtype)
+        },
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg, dtype))(
+            jax.random.split(keys[6], cfg.num_layers)
+        ),
+        "final": {
+            "ada_w": jnp.zeros((cfg.cond_dim, 2 * d), dtype),
+            "ada_b": jnp.zeros((2 * d,), dtype),
+        },
+    }
+
+
+def patchify(cfg, x):
+    """x: (B, C, H, W) -> (B, T, patch_dim)."""
+    B, C, H, W = x.shape
+    p = cfg.patch
+    x = x.reshape(B, C, H // p, p, W // p, p)
+    x = jnp.transpose(x, (0, 2, 4, 3, 5, 1))  # B, H/p, W/p, p, p, C
+    return x.reshape(B, (H // p) * (W // p), p * p * C)
+
+
+def unpatchify(cfg, tokens):
+    """(B, T, patch_dim) -> (B, C, H, W)."""
+    B, T, _ = tokens.shape
+    p, C = cfg.patch, cfg.latent_ch
+    hp = cfg.latent_hw // p
+    x = tokens.reshape(B, hp, hp, p, p, C)
+    x = jnp.transpose(x, (0, 5, 1, 3, 2, 4))
+    return x.reshape(B, C, hp * p, hp * p)
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+def dit_apply(params, cfg, x_t, t, cond_id):
+    """Predict eps.
+
+    x_t: (B, C, H, W) noisy latents; t: (B,) timesteps in [0, timesteps);
+    cond_id: (B,) int32 class condition (cfg.vocab_size = null token).
+    """
+    B = x_t.shape[0]
+    d = cfg.d_model
+    dtype = cm.dtype_of(cfg)
+    tok = patchify(cfg, x_t.astype(dtype)) @ params["patch"]["w"]
+    tok = tok + params["pos_embed"][None]
+    tok = lsc(tok, "batch", None, None)
+
+    temb = timestep_embedding(t, 256).astype(dtype)
+    temb = jax.nn.silu(temb @ params["t_mlp"]["w1"] + params["t_mlp"]["b1"])
+    temb = temb @ params["t_mlp"]["w2"] + params["t_mlp"]["b2"]
+    cemb = jnp.take(params["cond_embed"]["table"], cond_id, axis=0)
+    c = jax.nn.silu(temb + cemb)  # (B, cond_dim)
+
+    import dataclasses
+
+    ac = dataclasses.replace(cm.attn_cfg_from(cfg, causal=False), use_rope=False)
+
+    def body(tok, p):
+        mod = (c @ p["ada_ln"]["w"] + p["ada_ln"]["b"]).astype(jnp.float32)
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        h = _modulate(_ln(tok), sh1, sc1).astype(dtype)
+        attn_out = cm.attention_full(p["attn"], ac, h, None)
+        tok = tok + (g1[:, None, :] * attn_out.astype(jnp.float32)).astype(dtype)
+        h = _modulate(_ln(tok), sh2, sc2).astype(dtype)
+        mlp_out = cm.mlp(p["mlp"], h, act=jax.nn.gelu)
+        tok = tok + (g2[:, None, :] * mlp_out.astype(jnp.float32)).astype(dtype)
+        return tok, None
+
+    tok, _ = cm.scan(body, tok, params["blocks"])
+
+    mod = (c @ params["final"]["ada_w"] + params["final"]["ada_b"]).astype(jnp.float32)
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    tok = _modulate(_ln(tok), shift, scale).astype(dtype)
+    out = tok @ params["patch"]["wo"]
+    return unpatchify(cfg, out).astype(jnp.float32)
+
+
+def _ln(x, eps=1e-6):
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def null_cond(cfg, batch: int):
+    return jnp.full((batch,), cfg.vocab_size, jnp.int32)

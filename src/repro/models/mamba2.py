@@ -1,0 +1,212 @@
+"""Mamba2 layer — SSD (state-space duality), chunked algorithm [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD form: quadratic attention-like compute
+inside fixed-size chunks plus a linear recurrence over chunk states (a
+``lax.scan``).  Decode is the O(1) recurrent update on a per-head state
+``(B, H, P, N)`` plus a depthwise-conv ring cache.
+
+n_groups = 1 (B/C shared across heads), matching mamba2-2.7b.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, init_rmsnorm, rmsnorm
+from repro.sharding.partition import lsc
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = d * cfg.ssm_expand
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    assert H * P == d_in, (H, P, d_in)
+    keys = jax.random.split(key, 10)
+    return {
+        "w_z": dense_init(keys[0], d, d_in, dtype),
+        "w_x": dense_init(keys[1], d, d_in, dtype),
+        "w_b": dense_init(keys[2], d, N, dtype),
+        "w_c": dense_init(keys[3], d, N, dtype),
+        "w_dt": dense_init(keys[4], d, H, dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.log(
+            jax.random.uniform(keys[5], (H,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "d": jnp.ones((H,), jnp.float32),
+        # depthwise causal convs, one per stream so the x-stream stays
+        # cleanly sharded over "model" (DESIGN.md: no slicing of a sharded
+        # concat at a non-aligned boundary)
+        "conv_x": (
+            jax.random.normal(keys[6], (cfg.ssm_conv_width, d_in), jnp.float32)
+            / np.sqrt(cfg.ssm_conv_width)
+        ).astype(dtype),
+        "conv_b": (
+            jax.random.normal(keys[8], (cfg.ssm_conv_width, N), jnp.float32)
+            / np.sqrt(cfg.ssm_conv_width)
+        ).astype(dtype),
+        "conv_c": (
+            jax.random.normal(keys[9], (cfg.ssm_conv_width, N), jnp.float32)
+            / np.sqrt(cfg.ssm_conv_width)
+        ).astype(dtype),
+        "norm": init_rmsnorm(d_in),
+        "out": dense_init(keys[7], d_in, d, dtype),
+    }
+
+
+def _causal_conv(xbc, w):
+    """Depthwise causal conv. xbc: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out)
+
+
+def _segsum(x):
+    """x: (..., L). Returns (..., L, L) with out[i,j] = sum_{j<k<=i} x[k], -inf j>i."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, B, C, chunk: int):
+    """Chunked SSD.
+
+    x: (b,S,H,P); dt: (b,S,H) (post-softplus); a: (H,) negative;
+    B, C: (b,S,N).  Returns y: (b,S,H,P) and final state (b,H,P,N).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    xd = x * dt[..., None]  # fold dt into x
+    dA = dt * a  # (b,S,H)
+
+    xc = xd.reshape(b, nc, chunk, H, P)
+    dAc = dA.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(dAc, -1, -2)))  # (b,nc,H,l,l)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # (b,nc,l,l)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp", scores, L, xc)
+
+    # chunk states
+    dA_cum = jnp.cumsum(dAc, axis=2)  # (b,nc,l,H)
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,l,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b,nc,H)
+
+    def body(s_prev, inp):
+        st, dec = inp  # (b,H,P,N), (b,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, H, P, N), jnp.float32)
+    from repro.models import common as _cm
+    s_final, prev_states = _cm.scan(
+        body,
+        s0,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,H,P,N)
+
+    # contribution of carried-in state
+    state_decay = jnp.exp(dA_cum)  # (b,nc,l,H)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bclh->bclhp", Cc, prev_states.astype(x.dtype), state_decay
+    )
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, s_final
+
+
+def ssm_apply(params, cfg, x, *, mode="train", cache=None, position=None):
+    """Mamba2 mixer.
+
+    train/prefill: x (B,S,d) -> (y, cache|None)
+    decode:        x (B,1,d), cache {"state": (B,H,P,N) f32,
+                                     "conv": (B,W-1,conv_dim)} -> (y, cache)
+    """
+    d = cfg.d_model
+    d_in = d * cfg.ssm_expand
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Bsz = x.shape[0]
+    a = -jnp.exp(params["a_log"])  # (H,)
+
+    z = lsc(x @ params["w_z"], "batch", "seq", "ssm_inner")
+    xr = lsc(x @ params["w_x"], "batch", "seq", "ssm_inner")
+    Br = x @ params["w_b"]
+    Cr = x @ params["w_c"]
+    dt_r = x @ params["w_dt"]
+
+    if mode == "decode":
+        def conv1(cache_part, new, w):
+            window = jnp.concatenate([cache_part, new], axis=1)  # (B, W, C)
+            out = jax.nn.silu(
+                jnp.einsum(
+                    "bwc,wc->bc",
+                    window.astype(jnp.float32),
+                    w.astype(jnp.float32),
+                )
+            )[:, None, :].astype(x.dtype)
+            return out, window[:, 1:]
+
+        xr, conv_x = conv1(cache["conv_x"], xr, params["conv_x"])
+        Br, conv_b = conv1(cache["conv_b"], Br, params["conv_b"])
+        Cr, conv_c = conv1(cache["conv_c"], Cr, params["conv_c"])
+        new_convs = {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c}
+    else:
+        tail = -(cfg.ssm_conv_width - 1)
+        new_convs = {"conv_x": xr[:, tail:], "conv_b": Br[:, tail:], "conv_c": Cr[:, tail:]}
+        xr = _causal_conv(xr, params["conv_x"].astype(jnp.float32)).astype(x.dtype)
+        xr = lsc(xr, "batch", "seq", "ssm_inner")
+        Br = _causal_conv(Br, params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        Cr = _causal_conv(Cr, params["conv_c"].astype(jnp.float32)).astype(x.dtype)
+
+    Br = Br.astype(jnp.float32)
+    Cr = Cr.astype(jnp.float32)
+    xh = xr.reshape(Bsz, -1, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    if mode == "decode":
+        state = cache["state"]  # (B,H,P,N) f32
+        dA = jnp.exp(dt[:, 0] * a)  # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Br[:, 0], xh[:, 0])
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cr[:, 0], state)  # (B,H,P)
+        y = y + params["d"][:, None] * xh[:, 0]
+        y = y.reshape(Bsz, 1, d_in)
+        new_cache = {"state": state, **new_convs}
+    else:
+        chunk = min(cfg.ssm_chunk, xh.shape[1])
+        y, s_final = ssd_chunked(xh, dt, a, Br, Cr, chunk)
+        y = y + params["d"][None, None, :, None] * xh
+        y = y.reshape(Bsz, -1, d_in)
+        new_cache = (
+            {"state": s_final, **new_convs} if mode == "prefill" else None
+        )
+
+    y = y.astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    y = lsc(y, "batch", "seq", "ssm_inner")
+    out = y @ params["out"]
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int):
+    d_in = cfg.d_model * cfg.ssm_expand
+    W = cfg.ssm_conv_width - 1
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv_x": jnp.zeros((batch, W, d_in), dt),
+        "conv_b": jnp.zeros((batch, W, cfg.ssm_state), dt),
+        "conv_c": jnp.zeros((batch, W, cfg.ssm_state), dt),
+    }

@@ -1,0 +1,191 @@
+"""Mixture-of-Experts block: top-k routing, capacity dispatch, expert parallel.
+
+Dispatch is scatter-based (GShard-style position-in-expert via cumsum, then a
+scatter-add into an (E, C, d) buffer) — no (T, E, C) one-hot materialization.
+
+Distribution (see DESIGN.md §5): tokens are sharded over the "data" axis and
+experts over the "data" axis too; the block is wrapped in ``shard_map`` and
+moves expert buffers with two ``all_to_all``s over "data", while the expert
+FFN hidden dim is tensor-parallel over "model" (psum on the down-projection).
+Without an active mesh the same local function runs directly (tests / smoke).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models.common import dense_init
+from repro.sharding.partition import active_mesh
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, d_model, d_ff, num_experts, dtype):
+    keys = jax.random.split(key, 4)
+    return {
+        "router": dense_init(keys[0], d_model, num_experts, jnp.float32),
+        "w1": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(keys[1], num_experts)
+        ),
+        "w3": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(keys[2], num_experts)
+        ),
+        "w2": jax.vmap(lambda k: dense_init(k, d_ff, d_model, dtype))(
+            jax.random.split(keys[3], num_experts)
+        ),
+    }
+
+
+def _route(x, router_w, k):
+    """x: (T, d) -> gates (T,k), eidx (T,k), aux load-balance loss."""
+    logits = (x.astype(jnp.float32) @ router_w).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    E = router_w.shape[-1]
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (
+        eidx.shape[0] * k
+    )
+    aux = E * jnp.sum(me * ce)
+    return gates, eidx, aux
+
+
+def _dispatch(x, eidx, gates, num_experts, capacity):
+    """Scatter tokens into (E, C, d) buffers.
+
+    Returns buffer (E,C,d), plus (slot, keep) for the combine gather.
+    """
+    T, k = eidx.shape
+    d = x.shape[-1]
+    flat_e = eidx.reshape(-1)  # (T*k,) slot order = token-major priority
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)  # (T*k, E)
+    ppe = jnp.cumsum(onehot, axis=0) - onehot  # earlier slots on same expert
+    slot = jnp.take_along_axis(ppe, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = (slot < capacity).astype(x.dtype)
+    slot_c = jnp.minimum(slot, capacity - 1)
+    src = jnp.repeat(x, k, axis=0) * keep[:, None]  # (T*k, d)
+    buf = jnp.zeros((num_experts, capacity, d), x.dtype)
+    buf = buf.at[flat_e, slot_c].add(src)
+    return buf, slot_c.reshape(T, k), keep.reshape(T, k)
+
+
+def _combine(buf_out, eidx, slot, keep, gates):
+    """Gather expert outputs back to tokens: (T, d)."""
+    gathered = buf_out[eidx, slot]  # (T, k, d)
+    w = (gates * keep.astype(gates.dtype)).astype(buf_out.dtype)
+    return jnp.einsum("tkd,tk->td", gathered, w)
+
+
+def _expert_ffn(buf, w1, w3, w2, model_axis):
+    """buf: (E_loc, C', d). TP over `model_axis` on the hidden dim."""
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    g = jnp.einsum("ecd,edf->ecf", buf, w3)
+    h = jax.nn.silu(h) * g
+    out = jnp.einsum("ecf,efd->ecd", h, w2)
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
+    return out
+
+
+def _moe_local(
+    x,
+    params,
+    *,
+    top_k,
+    num_experts,
+    capacity_factor,
+    data_axis=None,
+    model_axis=None,
+    data_size=1,
+):
+    """Per-device MoE. x: (T_loc, d) local tokens."""
+    T = x.shape[0]
+    gates, eidx, aux = _route(x, params["router"], top_k)
+    capacity = max(1, int(capacity_factor * top_k * T) // num_experts)
+    buf, slot, keep = _dispatch(x, eidx, gates, num_experts, capacity)
+    if data_axis is not None and data_size > 1:
+        # (E, C, d) -> (E/D, C*D, d): send each expert group to its shard
+        buf = jax.lax.all_to_all(
+            buf, data_axis, split_axis=0, concat_axis=1, tiled=True
+        )
+    out = _expert_ffn(buf, params["w1"], params["w3"], params["w2"], model_axis)
+    if data_axis is not None and data_size > 1:
+        out = jax.lax.all_to_all(
+            out, data_axis, split_axis=1, concat_axis=0, tiled=True
+        )
+    y = _combine(out, eidx, slot, keep, gates)
+    return y, aux
+
+
+def moe_apply(params, cfg, x, *, capacity_factor=None):
+    """x: (B, S, d) -> (y, aux_loss).  Expert-parallel when a mesh is active."""
+    B, S, d = x.shape
+    if capacity_factor is None:
+        capacity_factor = CAPACITY_FACTOR
+    mesh = active_mesh()
+    kwargs = dict(
+        top_k=cfg.experts_per_token,
+        num_experts=cfg.num_experts,
+        capacity_factor=capacity_factor,
+    )
+    if mesh is None or "data" not in mesh.axis_names:
+        y, aux = _moe_local(x.reshape(B * S, d), params, **kwargs)
+        return y.reshape(B, S, d), aux
+
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    has_model = "model" in axes and mesh.shape["model"] > 1
+    data_size = mesh.shape["data"]
+    ep = data_size > 1 and cfg.num_experts % data_size == 0
+    batch_shards = 1
+    for a in batch_axes:
+        batch_shards *= mesh.shape[a]
+    if B % max(batch_shards, 1) != 0:
+        # batch unshardable (e.g. long-context decode at B<=2): fall back to
+        # the pjit path; expert weights stay sharded per PARAM_RULES.
+        y, aux = _moe_local(x.reshape(B * S, d), params, **kwargs)
+        return y.reshape(B, S, d), aux
+
+    def local_fn(x_loc, p_loc):
+        t = x_loc.reshape(-1, d)
+        y, aux = _moe_local(
+            t,
+            p_loc,
+            **kwargs,
+            data_axis="data" if ep else None,
+            model_axis="model" if has_model else None,
+            data_size=data_size if ep else 1,
+        )
+        if ep and len(batch_axes) > 1:
+            pass  # experts replicated over "pod"; nothing to do
+        return y.reshape(x_loc.shape), aux[None]
+
+    in_specs = (
+        P(batch_axes, None, None),
+        {
+            "router": P(),
+            "w1": P("data" if ep else None, None, "model" if has_model else None),
+            "w3": P("data" if ep else None, None, "model" if has_model else None),
+            "w2": P("data" if ep else None, "model" if has_model else None, None),
+        },
+    )
+    out_specs = (P(batch_axes, None, None), P(batch_axes[-1] if batch_axes else None))
+    y, aux = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+    )(x, params)
+    return y, jnp.mean(aux)
+
+
+def moe_flops(cfg, tokens: int) -> float:
+    """Analytic active-expert FLOPs for ``tokens`` tokens (fwd only)."""
+    return 6.0 * tokens * cfg.experts_per_token * cfg.d_model * cfg.moe_d_ff

@@ -1,0 +1,176 @@
+"""Model registry: one uniform API over every architecture family.
+
+``build(cfg)`` returns a ``ModelApi`` with:
+  init(key)                        -> params
+  forward(params, inputs)          -> (logits, extras)       [train/prefill]
+  decode_step(params, token, caches, position, **static)
+                                   -> (logits, new_caches)
+  init_caches(batch, seq_len)      -> decode caches
+  input_specs(shape, guided)       -> jax.ShapeDtypeStruct stand-ins for the
+                                      dry-run (no allocation)
+
+For guided decoding the batch axis is the cond/uncond *pack* ``2B`` (see
+DESIGN.md §3); ``input_specs(shape, guided=True)`` doubles the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import common as cm
+from repro.models import decoder, dit, encdec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable  # (params, inputs: dict, mode=..., remat=...) -> (out, extras)
+    decode_step: Optional[Callable]
+    init_caches: Optional[Callable]
+    input_specs: Callable
+
+
+def _tok_dtype():
+    return jnp.int32
+
+
+def _decoder_api(cfg: ArchConfig) -> ModelApi:
+    is_vlm = cfg.family == "vlm"
+
+    def forward(params, inputs, *, mode="train", remat=False, chunk=cm.DEFAULT_CHUNK, return_hidden=False, cache_len=None):
+        return decoder.forward(
+            params,
+            cfg,
+            inputs["tokens"],
+            image_embeds=inputs.get("image_embeds"),
+            mode=mode,
+            remat=remat,
+            chunk=chunk,
+            return_hidden=return_hidden,
+            cache_len=cache_len,
+        )
+
+    def decode_step(params, token, caches, position):
+        return decoder.decode_step(params, cfg, token, caches, position)
+
+    def input_specs(shape: InputShape, *, guided: bool = False):
+        B = shape.global_batch * (2 if guided else 1)
+        scfg = cfg.for_shape(shape.name)
+        specs: dict[str, Any] = {}
+        if shape.kind in ("train", "prefill"):
+            S = shape.seq_len
+            s_text = S - (cfg.num_image_tokens if is_vlm else 0)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), _tok_dtype())
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, s_text), _tok_dtype())
+            if is_vlm:
+                specs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_image_tokens, cfg.vision_embed_dim), jnp.float32
+                )
+        else:  # decode
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), _tok_dtype())
+            specs["position"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+            specs["caches"] = jax.eval_shape(
+                lambda: decoder.init_caches(scfg, B, shape.seq_len)
+            )
+        return specs
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: decoder.init_decoder(key, cfg),
+        forward=forward,
+        decode_step=decode_step,
+        init_caches=lambda batch, seq_len: decoder.init_caches(cfg, batch, seq_len),
+        input_specs=input_specs,
+    )
+
+
+def _encdec_api(cfg: ArchConfig) -> ModelApi:
+    def forward(params, inputs, *, mode="train", remat=False, chunk=cm.DEFAULT_CHUNK, return_hidden=False, cache_len=None):
+        return encdec.forward(
+            params,
+            cfg,
+            inputs["tokens"],
+            inputs["frames"],
+            mode=mode,
+            return_hidden=return_hidden,
+            cache_len=cache_len,
+        )
+
+    def decode_step(params, token, caches, position):
+        return encdec.decode_step(params, cfg, token, caches, position)
+
+    def input_specs(shape: InputShape, *, guided: bool = False):
+        B = shape.global_batch * (2 if guided else 1)
+        specs: dict[str, Any] = {
+            "frames": jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32
+            )
+        }
+        if shape.kind in ("train", "prefill"):
+            specs["tokens"] = jax.ShapeDtypeStruct((B, shape.seq_len), _tok_dtype())
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, shape.seq_len), _tok_dtype())
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), _tok_dtype())
+            specs["position"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+            specs["caches"] = jax.eval_shape(
+                lambda: encdec.init_caches(cfg, B, shape.seq_len)
+            )
+        return specs
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: encdec.init_encdec(key, cfg),
+        forward=forward,
+        decode_step=decode_step,
+        init_caches=lambda batch, seq_len: encdec.init_caches(cfg, batch, seq_len),
+        input_specs=input_specs,
+    )
+
+
+def _dit_api(cfg: ArchConfig) -> ModelApi:
+    def forward(params, inputs, *, mode="train", remat=False, **_):
+        eps = dit.dit_apply(params, cfg, inputs["x_t"], inputs["t"], inputs["cond"])
+        return eps, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+    def input_specs(shape: InputShape, *, guided: bool = False):
+        B = shape.global_batch * (2 if guided else 1)
+        hw = cfg.latent_hw
+        return {
+            "x_t": jax.ShapeDtypeStruct((B, cfg.latent_ch, hw, hw), jnp.float32),
+            "t": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cond": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "eps": jax.ShapeDtypeStruct((B, cfg.latent_ch, hw, hw), jnp.float32),
+        }
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: dit.init_dit(key, cfg),
+        forward=forward,
+        decode_step=None,
+        init_caches=None,
+        input_specs=input_specs,
+    )
+
+
+def build(cfg: ArchConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm"):
+        return _decoder_api(cfg)
+    if cfg.family == "encdec":
+        return _encdec_api(cfg)
+    if cfg.family == "dit":
+        return _dit_api(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def build_by_name(name: str) -> ModelApi:
+    from repro.configs import get_config
+
+    return build(get_config(name))

@@ -1,0 +1,50 @@
+"""Opt-in performance variants (§Perf hillclimbing).
+
+Defaults are the paper-faithful / naive-lowering BASELINE; every flag is an
+explicit hypothesis tested in EXPERIMENTS.md §Perf.  Flags are read from the
+environment at import and can be toggled programmatically for re-lowering.
+
+  bf16_attn_scores : compute attention score/value einsums from bf16 operands
+      with f32 accumulation (preferred_element_type) instead of materializing
+      f32 copies of the K/V cache.  Hypothesis: decode is KV-traffic-bound;
+      the f32 upcast doubles cache bytes read and adds cache-sized temps.
+  no_embed_fsdp    : keep the embedding table replicated over "data" in
+      training (vocab over "model" only). Hypothesis: the 2D-sharded table
+      makes GSPMD 'involuntarily rematerialize' the token gather (observed
+      warning), costing an all-gather of the full table per microbatch.
+  flash_block_skip : account causal-block skipping for chunked attention
+      (structural: the Pallas kernel skips above-diagonal blocks; the XLA
+      scan cannot — reported in the roofline as an adjustment factor).
+"""
+from __future__ import annotations
+
+import os
+
+
+def _env(name: str) -> bool:
+    return os.environ.get(name, "").lower() in ("1", "true", "yes")
+
+
+bf16_attn_scores: bool = _env("REPRO_BF16_ATTN_SCORES")
+no_embed_fsdp: bool = _env("REPRO_NO_EMBED_FSDP")
+# donate decode inputs (KV caches) so cache updates alias in place instead of
+# double-buffering.  Hypothesis: decode peak memory includes a full second
+# copy of the cache in 'output_bytes'.
+donate_caches: bool = _env("REPRO_DONATE_CACHES")
+# context-parallel prefill: activations sharded over sequence on the "model"
+# axis (heads stay whole per device), weights FSDP over "data".  Hypothesis:
+# GQA kv_heads (8) < model shards (16) makes GSPMD partition the head_dim
+# CONTRACTION of the score einsum -> it all-reduces full score tensors
+# (~80 GB/layer at prefill_32k); sequence sharding removes the need to
+# split heads at all.
+prefill_seq_parallel: bool = _env("REPRO_PREFILL_SEQ_PARALLEL")
+
+
+def set_flags(**kw) -> dict:
+    """Set flags programmatically; returns the previous values."""
+    g = globals()
+    prev = {k: g[k] for k in kw}
+    for k, v in kw.items():
+        assert k in g, k
+        g[k] = bool(v)
+    return prev

@@ -1,0 +1,115 @@
+"""Batched guided-serving engine.
+
+Requests carry a prompt, an optional negative prompt and a generation
+budget.  The engine prefills both guidance branches, then decodes with the
+two-phase AG schedule: while any request in the batch is still guided it
+runs the packed CFG step (2 NFEs for guided requests); once every request
+has crossed gamma_bar it switches to the conditional-only step (1 NFE).
+Per-request NFE ledgers are returned — the serving-side equivalent of the
+paper's Table 1 accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.guided_decode import (
+    GuidedState,
+    cond_decode_step,
+    guided_decode_step,
+)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    negative_prompt: Optional[np.ndarray] = None  # uncond-branch context
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    scale: float = 1.5
+    gamma_bar: float = 0.95
+    max_batch: int = 8
+    greedy: bool = True
+
+
+class GuidedEngine:
+    """Synchronous batched engine (one batch of requests per call)."""
+
+    def __init__(self, api, params, config: EngineConfig):
+        self.api = api
+        self.params = params
+        self.config = config
+        self._guided_step = jax.jit(
+            lambda p, s: guided_decode_step(
+                api, p, s, scale=config.scale, gamma_bar=config.gamma_bar
+            )
+        )
+        self._cond_step = jax.jit(lambda p, s: cond_decode_step(api, p, s))
+
+    def _pad_prompts(self, requests: Sequence[Request], use_negative: bool):
+        S = max(len(r.prompt) for r in requests)
+        B = len(requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            src = (
+                r.negative_prompt
+                if use_negative and r.negative_prompt is not None
+                else (r.prompt if not use_negative else r.prompt[:1])
+            )
+            # uncond branch without a negative prompt: context-free (BOS only)
+            toks[i, -len(src) :] = src if not use_negative else src
+            if use_negative and r.negative_prompt is None:
+                toks[i] = 0
+                toks[i, -1] = r.prompt[0]
+        return jnp.asarray(toks), S
+
+    def generate(self, requests: Sequence[Request]):
+        cfgc = self.config
+        B = len(requests)
+        assert B <= cfgc.max_batch
+        max_new = max(r.max_new_tokens for r in requests)
+        toks_c, S = self._pad_prompts(requests, use_negative=False)
+        toks_u, _ = self._pad_prompts(requests, use_negative=True)
+        cache_len = S + max_new + 1
+
+        logits_c, ext_c = self.api.forward(
+            self.params, {"tokens": toks_c}, mode="prefill", cache_len=cache_len
+        )
+        _, ext_u = self.api.forward(
+            self.params, {"tokens": toks_u}, mode="prefill", cache_len=cache_len
+        )
+        first = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+        state = GuidedState(
+            tokens=first,
+            position=jnp.full((B,), S, jnp.int32),
+            caches_c=ext_c["caches"],
+            caches_u=ext_u["caches"],
+            crossed=jnp.zeros((B,), bool),
+            nfes=jnp.zeros((B,), jnp.float32),
+        )
+        out = [first]
+        gammas = []
+        guided_steps = 0
+        for step in range(max_new - 1):
+            if not bool(jnp.all(state.crossed)):
+                nxt, state, gamma = self._guided_step(self.params, state)
+                gammas.append(np.asarray(gamma))
+                guided_steps += 1
+            else:
+                nxt, state = self._cond_step(self.params, state)
+            out.append(nxt)
+        tokens = jnp.concatenate(out, axis=1)
+        return {
+            "tokens": np.asarray(tokens),
+            "nfes": np.asarray(state.nfes),
+            "guided_steps": guided_steps,
+            "gammas": np.asarray(gammas) if gammas else np.zeros((0, B)),
+        }

@@ -1,0 +1,166 @@
+"""Classifier-free-guided autoregressive decoding with Adaptive Guidance.
+
+This transfers the paper's mechanism to the assigned text architectures
+(DESIGN.md §4): per decode step the model is evaluated on a cond/uncond pack
+(with-prompt vs context-free/negative-prompt branch), logits are combined
+with Eq. 3 in logit space (Sanchez et al. 2023), and gamma_t — the cosine
+similarity of the two pre-softmax score vectors — drives AG truncation:
+once gamma_t > gamma_bar for a request, its unconditional branch is dropped
+and each subsequent step costs 1 NFE instead of 2.
+
+``guided_decode_step``/``cond_decode_step`` are the two compiled step
+functions; ``serve_step`` with ``guidance="cfg"`` is what the dry-run lowers
+for decode shapes (the paper-faithful 2-NFE baseline), ``guidance="cond"``
+is the AG-truncated tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.guidance import cfg_combine, cosine_similarity
+
+
+class GuidedState(NamedTuple):
+    """Decode-time state for a guided batch (a pytree, jit-friendly).
+
+    caches_c / caches_u: per-branch KV caches (uncond branch sees the
+    negative prompt / empty context).  ``crossed`` marks AG-truncated
+    requests.
+    """
+
+    tokens: jnp.ndarray  # (B, 1) last token per request
+    position: jnp.ndarray  # (B,)
+    caches_c: object
+    caches_u: object
+    crossed: jnp.ndarray  # (B,) bool
+    nfes: jnp.ndarray  # (B,) float32
+
+
+def guided_decode_step(
+    api, params, state: GuidedState, *, scale: float, gamma_bar: float,
+    greedy: bool = True, key=None,
+):
+    """One CFG decode step on the cond/uncond pack (2 NFEs per request).
+
+    Per-request AG semantics: crossed requests take the conditional logits.
+    Returns (next_token, new_state, gamma).
+    """
+    B = state.tokens.shape[0]
+    tok2 = jnp.concatenate([state.tokens, state.tokens], axis=0)
+    pos2 = jnp.concatenate([state.position, state.position], axis=0)
+    caches2 = jax.tree.map(
+        lambda c, u: jnp.concatenate([c, u], axis=1), state.caches_c, state.caches_u
+    )
+    logits2, new_caches2 = api.decode_step(params, tok2, caches2, pos2)
+    logits_c, logits_u = logits2[:B], logits2[B:]
+    new_c = jax.tree.map(lambda x: x[:, :B], new_caches2)
+    new_u = jax.tree.map(lambda x: x[:, B:], new_caches2)
+
+    gamma = cosine_similarity(logits_c[:, 0], logits_u[:, 0])
+    guided = cfg_combine(logits_u, logits_c, scale)
+    logits = jnp.where(
+        state.crossed.reshape(-1, 1, 1), logits_c, guided
+    )
+    nfes = state.nfes + jnp.where(state.crossed, 1.0, 2.0)
+    crossed = state.crossed | (gamma > gamma_bar)
+
+    nxt = _select(logits, greedy, key)
+    new_state = GuidedState(
+        tokens=nxt,
+        position=state.position + 1,
+        caches_c=new_c,
+        caches_u=new_u,
+        crossed=crossed,
+        nfes=nfes,
+    )
+    return nxt, new_state, gamma
+
+
+def cond_decode_step(api, params, state: GuidedState, *, greedy: bool = True, key=None):
+    """Conditional-only decode step (1 NFE) — the AG-truncated tail.
+
+    The uncond cache is left untouched (stale); if a negative prompt changes
+    mid-stream the engine re-enters the guided phase.
+    """
+    logits, new_c = api.decode_step(
+        params, state.tokens, state.caches_c, state.position
+    )
+    nxt = _select(logits, greedy, key)
+    return nxt, GuidedState(
+        tokens=nxt,
+        position=state.position + 1,
+        caches_c=new_c,
+        caches_u=state.caches_u,
+        crossed=state.crossed,
+        nfes=state.nfes + 1.0,
+    )
+
+
+def _select(logits, greedy, key):
+    if greedy:
+        return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+    return jax.random.categorical(key, logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# dry-run entry points (one compiled step each)
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(api, *, guidance: str = "cfg", scale: float = 1.5):
+    """serve_step(params, inputs) for the dry-run.
+
+    guidance="cfg":  paper-faithful CFG decode — inputs carry the [2B] pack
+                     (cond rows then uncond rows) and both cache branches in
+                     one stacked tree; 2 NFEs/request.
+    guidance="cond": conditional-only (the AG tail / non-guided serving).
+    """
+
+    if guidance == "cfg":
+
+        def serve_step(params, inputs):
+            tokens, position, caches = (
+                inputs["tokens"],
+                inputs["position"],
+                inputs["caches"],
+            )
+            B2 = tokens.shape[0]
+            B = B2 // 2
+            logits2, new_caches = api.decode_step(params, tokens, caches, position)
+            logits_c, logits_u = logits2[:B], logits2[B:]
+            gamma = cosine_similarity(logits_c[:, 0], logits_u[:, 0])
+            logits = cfg_combine(logits_u, logits_c, scale)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return {
+                "next_token": nxt,
+                "gamma": gamma,
+                "caches": new_caches,
+            }
+
+    elif guidance == "cond":
+
+        def serve_step(params, inputs):
+            logits, new_caches = api.decode_step(
+                params, inputs["tokens"], inputs["caches"], inputs["position"]
+            )
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return {"next_token": nxt, "caches": new_caches}
+
+    else:
+        raise ValueError(guidance)
+
+    return serve_step
+
+
+def make_prefill_step(api):
+    """prefill(params, inputs) -> logits (+caches): dry-run prefill shapes."""
+
+    def prefill_step(params, inputs):
+        logits, extras = api.forward(params, inputs, mode="train")
+        return logits[:, -1]
+
+    return prefill_step

@@ -1,0 +1,211 @@
+"""Logical-axis sharding: name-based constraints resolved against a mesh.
+
+Models annotate activations with ``lsc(x, "batch", "seq", "ffn")`` (logical
+sharding constraint) and parameters are matched to PartitionSpecs by path
+rules.  When no mesh is active (unit tests, single-CPU smoke runs) every
+annotation is the identity, so the same model code runs everywhere.
+
+Logical axes
+------------
+  batch    -> ("pod", "data") when present, else ("data",)
+  kvlen    -> context parallelism: KV-cache length axis for long-context
+              decode (B too small to shard) -> "data"
+  qdim/kvdim/ffn/vocab/experts_ffn -> "model"  (megatron TP)
+  heads    -> "model" (GSPMD pads when head count is not divisible)
+  experts  -> "data"  (expert parallelism; a2a over "data" in the MoE block)
+  ssm_inner-> "model"
+  (anything unlisted) -> replicated
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _default_rules(mesh: Mesh) -> dict:
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes) or (None,)
+    batch = batch if batch != (None,) else None
+    model = "model" if "model" in axes else None
+    data = "data" if "data" in axes else None
+    return {
+        "batch": batch,
+        "seq": None,
+        "kvlen": data,
+        "embed": None,
+        "embed_table": None,
+        "qdim": model,
+        "kvdim": model,
+        "heads": model,
+        "kvheads": model,
+        "head_dim": None,
+        "ffn": model,
+        "vocab": model,
+        "experts": data,
+        "experts_ffn": model,
+        "ssm_inner": model,
+        "ssm_heads": model,
+        "layers": None,
+        "cond": None,
+    }
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + logical rules for model code executed inside."""
+    prev = getattr(_state, "ctx", None)
+    if mesh is None:
+        _state.ctx = None
+    else:
+        r = _default_rules(mesh)
+        if rules:
+            r.update(rules)
+        _state.ctx = (mesh, r)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def logical_spec(*names: Optional[str]) -> P:
+    """Resolve logical axis names to a PartitionSpec under the active rules."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return P()
+    _, rules = ctx
+    resolved = []
+    for n in names:
+        resolved.append(None if n is None else rules.get(n))
+    while resolved and resolved[-1] is None:
+        resolved.pop()
+    return P(*resolved)
+
+
+def lsc(x, *names: Optional[str]):
+    """Logical sharding constraint; identity when no mesh is active."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = logical_spec(*names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*names: Optional[str]) -> Optional[NamedSharding]:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return None
+    mesh, _ = ctx
+    return NamedSharding(mesh, logical_spec(*names))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules (path-pattern -> logical axes per dim).
+# Paths are "/".join of the pytree dict keys; a leading "(L, ...)" stacked
+# layer dim (from scanned blocks) is detected by rule arity vs array rank.
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / unembedding
+    (r"embed/table$", ("vocab", "embed_table")),
+    (r"lm_head/w$", ("embed", "vocab")),
+    (r"pos_embed", (None, "embed")),
+    # attention
+    (r"(attn|self_attn|cross_attn)/wq$", ("embed", "qdim")),
+    (r"(attn|self_attn|cross_attn)/wk$", ("embed", "kvdim")),
+    (r"(attn|self_attn|cross_attn)/wv$", ("embed", "kvdim")),
+    (r"(attn|self_attn|cross_attn)/wo$", ("qdim", "embed")),
+    (r"(attn|self_attn|cross_attn)/(bq)$", ("qdim",)),
+    (r"(attn|self_attn|cross_attn)/(bk|bv)$", ("kvdim",)),
+    (r"(attn|self_attn|cross_attn)/bo$", ("embed",)),
+    # dense MLP
+    (r"mlp/w(1|3)$", ("embed", "ffn")),
+    (r"mlp/w2$", ("ffn", "embed")),
+    (r"mlp/b(1|3)$", ("ffn",)),
+    (r"mlp/b2$", ("embed",)),
+    # MoE: experts sharded over data (expert parallel), ffn over model
+    (r"moe/router$", ("embed", None)),
+    (r"moe/w(1|3)$", ("experts", None, "experts_ffn")),
+    (r"moe/w2$", ("experts", "experts_ffn", None)),
+    # mamba2
+    (r"ssm/w_(z|x)$", ("embed", "ssm_inner")),
+    (r"ssm/w_(b|c)$", ("embed", None)),
+    (r"ssm/w_dt$", ("embed", None)),
+    (r"ssm/out$", ("ssm_inner", "embed")),
+    (r"ssm/conv_x$", (None, "ssm_inner")),
+    (r"ssm/conv_(b|c)$", (None, None)),
+    (r"ssm/(a_log|d|dt_bias)$", (None,)),
+    (r"ssm/norm$", ("ssm_inner",)),
+    # DiT
+    (r"ada_ln/w$", ("cond", "embed")),
+    (r"patch/(w|wo)$", (None, "embed")),
+    (r"cond_embed", (None, "embed")),
+    # norms / scalars: replicated
+    (r".*", ()),
+]
+
+
+def spec_for_param(path: str, ndim: int) -> P:
+    ctx = getattr(_state, "ctx", None)
+    rules_map = ctx[1] if ctx else None
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            if len(logical) > ndim:
+                logical = logical[-ndim:] if ndim else ()
+            # stacked-layer leading dims -> replicated
+            pad = (None,) * (ndim - len(logical))
+            axes = pad + tuple(logical)
+            if rules_map is None:
+                return P()
+            resolved = [None if a is None else rules_map.get(a) for a in axes]
+            while resolved and resolved[-1] is None:
+                resolved.pop()
+            return P(*resolved)
+    return P()
+
+
+def _flatten_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_paths(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def param_specs(params) -> "jax.tree_util.PyTreeDef":
+    """PartitionSpec pytree matching ``params`` (dict-of-dict pytree)."""
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {
+                k: walk(v, f"{prefix}/{k}" if prefix else k) for k, v in tree.items()
+            }
+        return spec_for_param(prefix, getattr(tree, "ndim", 0))
+
+    return walk(params)
+
+
+def param_shardings(params):
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return None
+    mesh, _ = ctx
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params),
+        is_leaf=lambda x: isinstance(x, P),
+    )

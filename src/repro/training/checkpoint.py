@@ -1,0 +1,47 @@
+"""Minimal npz-based checkpointing for dict-pytree params."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}"))
+    else:
+        arr = np.asarray(tree, dtype=np.float32) if str(tree.dtype) == "bfloat16" else np.asarray(tree)
+        out[prefix] = arr
+    return out
+
+
+def save(path: str, params) -> None:
+    flat = _flatten(params)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load(path: str, like):
+    """Restore into the structure of ``like`` (same tree as saved)."""
+    data = np.load(path)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {
+                k: rebuild(v, f"{prefix}/{k}" if prefix else k)
+                for k, v in sorted(tree.items())
+            }
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}#{i}") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        arr = data[prefix]
+        return jnp.asarray(arr, dtype=tree.dtype)
+
+    return rebuild(like)

@@ -1,0 +1,59 @@
+"""Losses: chunked cross-entropy (vocab-sharded-safe) and diffusion MSE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.sharding.partition import lsc
+
+
+def cross_entropy_from_hidden(
+    params, cfg, hidden, labels, *, seq_chunk: int = 512
+):
+    """CE loss computed from final hidden states in sequence chunks so the
+    full (B, S, V) logits tensor never materializes (train_4k at 152k vocab
+    would be ~20 GB/device otherwise — DESIGN.md §5).
+
+    labels: (B, S) int32; positions with label < 0 are masked out.
+    """
+    B, S, D = hidden.shape
+    table = (
+        params["lm_head"]["w"]
+        if "lm_head" in params
+        else params["embed"]["table"].T
+    )
+    V = cfg.vocab_size
+    seq_chunk = min(seq_chunk, S)
+    while S % seq_chunk:  # e.g. VLM text length 3840: fall back to 256
+        seq_chunk //= 2
+    n = S // seq_chunk
+    h = hidden.reshape(B, n, seq_chunk, D)
+    l = labels.reshape(B, n, seq_chunk)
+
+    def body(carry, blk):
+        tot, cnt = carry
+        hb, lb = blk  # (B, c, D), (B, c)
+        logits = (hb @ table.astype(hb.dtype)).astype(jnp.float32)
+        logits = lsc(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = cm.scan(
+        body,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(h, 1, 0), jnp.moveaxis(l, 1, 0)),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def diffusion_mse(eps_pred, eps_true):
+    return jnp.mean(
+        jnp.square(eps_pred.astype(jnp.float32) - eps_true.astype(jnp.float32))
+    )

@@ -1,0 +1,94 @@
+"""Optimizers as plain pytree transforms (no optax dependency).
+
+Lion [Chen et al. 2023] is the paper's choice for the NAS search (§4.1);
+AdamW is the workhorse for training the DiT / LM examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (params, grads, state) -> (params, state)
+
+
+def lion(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.99, wd: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        m = state["m"]
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32)
+            u = jnp.sign(b1 * mf + (1 - b1) * g)
+            if wd:
+                u = u + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        def upd_m(g, m):
+            return (b2 * m.astype(jnp.float32) + (1 - b2) * g.astype(jnp.float32)).astype(m.dtype)
+
+        new_params = jax.tree.map(upd, params, grads, m)
+        new_m = jax.tree.map(upd_m, grads, m)
+        return new_params, {"m": new_m, "t": state["t"] + 1}
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    wd: float = 0.0,
+    warmup: int = 0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(params, grads, state):
+        t = state["t"] + 1
+        sched = jnp.where(warmup > 0, jnp.minimum(t / max(warmup, 1), 1.0), 1.0)
+        lr_t = lr * sched
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / (1 - b1 ** t.astype(jnp.float32))
+            vhat = v_new / (1 - b2 ** t.astype(jnp.float32))
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if wd:
+                step = step + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer(init=init, update=update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), n

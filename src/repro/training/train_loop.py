@@ -1,0 +1,90 @@
+"""Training loops: conditional-DiT diffusion training and LM training.
+
+Both produce jit-compiled ``train_step(params, opt_state, batch, key)``
+functions; distribution happens through the active mesh (pjit shardings are
+applied by the launcher, launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.schedule import Schedule, add_noise, sample_timesteps
+from repro.training.losses import cross_entropy_from_hidden, diffusion_mse
+from repro.training.optim import Optimizer, clip_by_global_norm
+
+
+def make_dit_train_step(
+    api,
+    schedule: Schedule,
+    opt: Optimizer,
+    *,
+    cond_dropout: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """Conditional diffusion training with CFG condition dropout (Ho & Salimans):
+    with prob ``cond_dropout`` the condition is replaced by the null token so
+    the model learns the unconditional score too."""
+    cfg = api.cfg
+
+    def loss_fn(params, x0, cond, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        B = x0.shape[0]
+        t = sample_timesteps(k1, B, schedule.T)
+        eps = jax.random.normal(k2, x0.shape)
+        x_t = add_noise(schedule, x0, eps, t)
+        drop = jax.random.bernoulli(k3, cond_dropout, (B,))
+        cond_used = jnp.where(drop, cfg.vocab_size, cond)
+        eps_pred, _ = api.forward(
+            params, {"x_t": x_t, "t": t, "cond": cond_used}, mode="train"
+        )
+        return diffusion_mse(eps_pred, eps)
+
+    @jax.jit
+    def train_step(params, opt_state, batch, key):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, batch["x0"], batch["cond"], key
+        )
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    return train_step
+
+
+def make_lm_train_step(api, opt: Optimizer, *, grad_clip: float = 1.0, remat: bool = False):
+    cfg = api.cfg
+
+    def loss_fn(params, batch):
+        hidden, extras = api.forward(
+            params, batch, mode="train", remat=remat, return_hidden=True
+        )
+        if cfg.family == "vlm":  # labels cover the text tokens only
+            hidden = hidden[:, cfg.num_image_tokens :]
+        ce = cross_entropy_from_hidden(params, cfg, hidden, batch["labels"])
+        aux = extras.get("aux_loss", 0.0)
+        return ce + cfg.router_aux_loss * aux, (ce, aux)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "ce": ce, "aux": aux, "gnorm": gnorm}
+
+    return train_step
+
+
+def lm_train_loss(api, params, batch, *, remat: bool = False):
+    """Bare loss (no optimizer) — used by the dry-run's train_step lowering."""
+    cfg = api.cfg
+    hidden, extras = api.forward(params, batch, mode="train", remat=remat, return_hidden=True)
+    if cfg.family == "vlm":
+        hidden = hidden[:, cfg.num_image_tokens :]
+    ce = cross_entropy_from_hidden(params, cfg, hidden, batch["labels"])
+    return ce + cfg.router_aux_loss * extras.get("aux_loss", 0.0)

@@ -1,0 +1,2 @@
+"""Shared toy eps-model for sampler tests (now lives in repro.data.toy)."""
+from repro.data.toy import DIM, NUM_CLASSES, make_toy  # noqa: F401

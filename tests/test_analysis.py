@@ -1,0 +1,51 @@
+"""Roofline analysis helpers: HLO collective parsing + term math."""
+import numpy as np
+
+from repro.launch.analysis import Roofline, _shape_bytes, collective_bytes, model_flops_estimate
+from repro.configs import get_config, get_shape
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("f32[4]") == 16
+    assert _shape_bytes("(bf16[2,2], f32[2])") == 8 + 8
+    assert _shape_bytes("pred[16]") == 16
+
+
+def test_collective_parse():
+    hlo = """
+ENTRY %main {
+  %ag = bf16[8,1024]{1,0} all-gather(bf16[8,64]{1,0} %x), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %a2a = bf16[4,32]{1,0} all-to-all(bf16[4,32]{1,0} %z), dimensions={0}
+  %cp = f32[16]{0} collective-permute(f32[16]{0} %w), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(f32[8,4]{1,0} %a, f32[4,8]{1,0} %b)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 1024 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["all-to-all"] == 4 * 32 * 2
+    assert out["collective-permute"] == 16 * 4
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "all-to-all", "collective-permute", "reduce-scatter")
+    )
+    assert out["_counts"]["all-gather"] == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=197e12, bytes_accessed=819e9, coll_bytes=0.0, chips=256)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert r.t_collective == 0.0
+    assert r.bottleneck in ("compute", "memory")
+    r2 = Roofline(flops=1.0, bytes_accessed=1.0, coll_bytes=50e9, chips=256)
+    assert r2.bottleneck == "collective"
+
+
+def test_model_flops_estimate_scaling():
+    cfg = get_config("llama3.2-1b")
+    tr = model_flops_estimate(cfg, get_shape("train_4k"), guided=False)
+    de = model_flops_estimate(cfg, get_shape("decode_32k"), guided=True)
+    # train: 6ND on 1M tokens; decode: 2ND on 256 packed tokens
+    assert tr / de == (6 * 4096 * 256) / (2 * 256)

@@ -1,0 +1,20 @@
+"""Checkpoint round-trip over nested dict/list pytrees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import checkpoint
+
+
+def test_roundtrip(tmp_path, key):
+    tree = {
+        "a": {"w": jax.random.normal(key, (4, 4)), "b": jnp.zeros((2,), jnp.bfloat16)},
+        "blocks": [{"k": jnp.arange(3)}, {"k": jnp.arange(3) * 2}],
+    }
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, tree)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    back = checkpoint.load(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        assert a.dtype == b.dtype

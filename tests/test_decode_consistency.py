@@ -1,0 +1,58 @@
+"""Decode step == teacher-forced forward (the KV-cache correctness proof)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.moe as moe_mod
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import build
+
+DECODABLE = [n for n in ARCH_NAMES]
+
+
+@pytest.mark.parametrize("name", DECODABLE)
+def test_decode_matches_forward(name, key, monkeypatch):
+    # capacity factor high enough that no MoE token is dropped: capacity
+    # dropping is batch-composition-dependent by design and would (correctly)
+    # make decode differ from the teacher-forced pass.
+    monkeypatch.setattr(moe_mod, "CAPACITY_FACTOR", 100.0)
+    cfg = get_config(name).reduced()
+    api = build(cfg)
+    params = api.init(key)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size)
+    inputs = {"tokens": toks}
+    if cfg.family == "vlm":
+        inputs["image_embeds"] = 0.1 * jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.vision_embed_dim)
+        )
+    if cfg.family == "encdec":
+        inputs["frames"] = 0.1 * jax.random.normal(key, (B, cfg.encoder_seq_len, cfg.d_model))
+
+    full, _ = api.forward(params, inputs, mode="train")
+    pre = dict(inputs)
+    pre["tokens"] = toks[:, :S]
+    off = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    _, extras = api.forward(params, pre, mode="prefill", cache_len=S + off + 4)
+    logits, _ = api.decode_step(
+        params, toks[:, S : S + 1], extras["caches"], jnp.full((B,), S + off, jnp.int32)
+    )
+    np.testing.assert_allclose(full[:, -1], logits[:, 0], atol=2e-4, rtol=1e-3)
+
+
+def test_sliding_window_decode(key):
+    """Dense arch with window: decode attends only to the last W tokens."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(), sliding_window=4)
+    api = build(cfg)
+    params = api.init(key)
+    B, S = 1, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size)
+    full, _ = api.forward(params, {"tokens": toks}, mode="train")
+    _, extras = api.forward(params, {"tokens": toks[:, :S]}, mode="prefill", cache_len=S + 4)
+    logits, _ = api.decode_step(
+        params, toks[:, S : S + 1], extras["caches"], jnp.full((B,), S, jnp.int32)
+    )
+    np.testing.assert_allclose(full[:, -1], logits[:, 0], atol=2e-4, rtol=1e-3)

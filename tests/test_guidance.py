@@ -1,0 +1,60 @@
+"""Guidance algebra (Eq. 3 / 7 / 9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.guidance import (
+    cfg_combine,
+    cfg_combine_with_gamma,
+    cosine_similarity,
+    pix2pix_combine,
+)
+
+
+def test_cfg_combine_endpoints(key):
+    u = jax.random.normal(key, (2, 8))
+    c = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    np.testing.assert_allclose(cfg_combine(u, c, 1.0), c, rtol=1e-6)
+    np.testing.assert_allclose(cfg_combine(u, c, 0.0), u, rtol=1e-6)
+
+
+def test_cfg_combine_affine(key):
+    u = jax.random.normal(key, (2, 8))
+    c = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    s = 7.5
+    out = cfg_combine(u, c, s)
+    np.testing.assert_allclose(out, u + s * (c - u), rtol=1e-5)
+
+
+def test_cfg_combine_per_sample_scale(key):
+    u = jax.random.normal(key, (3, 4, 4))
+    c = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 4))
+    s = jnp.asarray([0.0, 1.0, 2.0])
+    out = cfg_combine(u, c, s)
+    np.testing.assert_allclose(out[0], u[0], rtol=1e-5)
+    np.testing.assert_allclose(out[1], c[1], rtol=1e-5)
+
+
+def test_cosine_similarity_bounds_and_identity(key):
+    a = jax.random.normal(key, (4, 32))
+    g = cosine_similarity(a, a)
+    np.testing.assert_allclose(g, 1.0, atol=1e-5)
+    g2 = cosine_similarity(a, -a)
+    np.testing.assert_allclose(g2, -1.0, atol=1e-5)
+
+
+def test_pix2pix_reduces_to_cfg(key):
+    """With s_image = 1 and eps_ui == eps_uu the 3-term form reduces to Eq 3."""
+    uu = jax.random.normal(key, (2, 16))
+    ci = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    out = pix2pix_combine(uu, uu, ci, s_text=7.5, s_image=1.0)
+    np.testing.assert_allclose(out, cfg_combine(uu, ci, 7.5), rtol=1e-5)
+
+
+def test_combine_with_gamma_matches_parts(key):
+    u = jax.random.normal(key, (2, 64))
+    c = jax.random.normal(jax.random.PRNGKey(1), (2, 64))
+    out, gamma = cfg_combine_with_gamma(u, c, 3.0)
+    np.testing.assert_allclose(out, cfg_combine(u, c, 3.0))
+    np.testing.assert_allclose(gamma, cosine_similarity(c, u), rtol=1e-6)

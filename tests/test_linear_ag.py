@@ -1,0 +1,72 @@
+"""OLS fitting + LinearAG (section 5.1 / Appendix C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as pol
+from repro.core.linear_ag import eval_ols, fit_ols, linear_ag_sample, lr_predictor
+from repro.diffusion.sampler import collect_pair_trajectory, sample_with_policy
+from repro.diffusion.solvers import get_solver
+from tests._toy import make_toy, NUM_CLASSES, DIM
+
+
+def test_ols_recovers_planted_affine():
+    rng = np.random.default_rng(0)
+    N, steps, D = 24, 5, 32
+    eps_c = rng.normal(size=(N, steps, D))
+    eps_u = np.zeros_like(eps_c)
+    # plant: eps_u[i] = 0.3*eps_c[i] + 0.5*eps_c[i-1] + 0.2*eps_u[i-1]
+    for i in range(steps):
+        eps_u[:, i] = 0.3 * eps_c[:, i]
+        if i > 0:
+            eps_u[:, i] += 0.5 * eps_c[:, i - 1] + 0.2 * eps_u[:, i - 1]
+    coeffs, train_mse = fit_ols(eps_c[:16], eps_u[:16])
+    test_mse = eval_ols(coeffs, eps_c[16:], eps_u[16:])
+    assert np.all(train_mse < 1e-8)
+    assert np.all(test_mse < 1e-8)
+    # step 2 coefficients: [c2, c1, c0, u0, u1] order [eps_c 0..i, eps_u 0..i-1]
+    b = coeffs.betas[2]
+    np.testing.assert_allclose(b[2], 0.3, atol=1e-6)  # current cond
+
+
+def test_lr_predictor_matches_manual():
+    rng = np.random.default_rng(1)
+    coeffs, _ = fit_ols(rng.normal(size=(8, 3, 8)), rng.normal(size=(8, 3, 8)))
+    pred = lr_predictor(coeffs)
+    h = {
+        "eps_c": [jnp.ones((2, 8)) * i for i in range(3)],
+        "eps_u": [jnp.ones((2, 8)) * 10 * i for i in range(2)],
+    }
+    out = pred(h, 2)
+    b = coeffs.betas[2]
+    manual = b[0] * h["eps_c"][0] + b[1] * h["eps_c"][1] + b[2] * h["eps_c"][2]
+    manual = manual + b[3] * h["eps_u"][0] + b[4] * h["eps_u"][1]
+    np.testing.assert_allclose(out, manual, rtol=1e-5)
+
+
+def test_linear_ag_on_toy_close_to_cfg():
+    model, sched, mus = make_toy()
+    solver = get_solver("ddim", sched)
+    key = jax.random.PRNGKey(0)
+    steps, scale = 10, 2.0
+    # gather trajectories
+    cs, us = [], []
+    for i in range(6):
+        k1, k2, key = jax.random.split(key, 3)
+        xT = jax.random.normal(k1, (4, DIM))
+        cond = jax.random.randint(k2, (4,), 0, NUM_CLASSES)
+        _, info = collect_pair_trajectory(model, None, solver, steps, scale, xT, cond)
+        cs.append(np.moveaxis(np.asarray(info["eps_c"]), 0, 1))
+        us.append(np.moveaxis(np.asarray(info["eps_u"]), 0, 1))
+    eps_c, eps_u = np.concatenate(cs), np.concatenate(us)
+    coeffs, _ = fit_ols(eps_c, eps_u)
+
+    k1, k2, key = jax.random.split(key, 3)
+    xT = jax.random.normal(k1, (4, DIM))
+    cond = jax.random.randint(k2, (4,), 0, NUM_CLASSES)
+    x_cfg, _ = sample_with_policy(model, None, solver, pol.cfg_policy(steps, scale), xT, cond)
+    x_lag, info = linear_ag_sample(model, None, solver, steps, scale, coeffs, xT, cond)
+    assert info["nfe"] == pol.linear_ag_policy(steps, scale).nfes()
+    # LinearAG should land near the CFG endpoint on this smooth toy problem
+    err = float(jnp.mean(jnp.abs(x_lag - x_cfg)))
+    assert err < 0.35, err

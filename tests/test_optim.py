@@ -1,0 +1,32 @@
+"""Lion / AdamW: descent on a quadratic, state shapes, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optim import adamw, clip_by_global_norm, global_norm, lion
+
+
+def _descend(opt, steps=200):
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    st = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, st = opt.update(params, g, st)
+    return float(jnp.sum(params["w"] ** 2))
+
+
+def test_lion_descends():
+    assert _descend(lion(lr=3e-2)) < 0.1
+
+
+def test_adamw_descends():
+    assert _descend(adamw(lr=5e-2)) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 10.0}
+    clipped, n = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    g2 = {"a": jnp.ones((4,)) * 0.01}
+    clipped2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), np.asarray(g2["a"]), rtol=1e-6)

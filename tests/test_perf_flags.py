@@ -1,0 +1,26 @@
+"""Perf-variant flags must preserve semantics (within bf16 tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import perf_flags
+from repro.configs import get_config
+from repro.models import build
+
+
+def test_bf16_attn_scores_close_to_baseline(key):
+    cfg = get_config("llama3.2-1b").reduced()
+    api = build(cfg)
+    params = api.init(key)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    ref, _ = api.forward(params, {"tokens": toks}, mode="train")
+    prev = perf_flags.set_flags(bf16_attn_scores=True)
+    try:
+        out, _ = api.forward(params, {"tokens": toks}, mode="train")
+    finally:
+        perf_flags.set_flags(**prev)
+    # bf16 scores: small numeric drift allowed, ranking mostly preserved
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=0.15, rtol=0.05)
+    agree = float(jnp.mean(jnp.argmax(out, -1) == jnp.argmax(ref, -1)))
+    assert agree > 0.9, agree

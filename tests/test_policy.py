@@ -1,0 +1,40 @@
+"""Policy constructors + NFE accounting (the paper's cost model)."""
+import numpy as np
+
+from repro.core import policy as pol
+
+
+def test_cfg_policy_nfes():
+    p = pol.cfg_policy(20, 7.5)
+    assert p.nfes() == 40  # the paper's 20-step baseline
+
+
+def test_ag_policy_nfes():
+    # ~10 guided + 10 conditional steps = ~30 NFEs (Table 1)
+    p = pol.ag_policy(20, 7.5, truncate_at=10)
+    assert p.nfes() == 30
+
+
+def test_linear_ag_policy_matches_eq11():
+    p = pol.linear_ag_policy(20, 7.5)
+    # first half alternates CFG / LR-CFG; second half all LR-CFG
+    assert p.kinds[:10] == (pol.CFG, pol.CFG_LR) * 5
+    assert all(k == pol.CFG_LR for k in p.kinds[10:])
+    # 5 CFG x2 + 15 LR x1 = 25 NFEs; guidance overhead 5 vs CFG's 20 = -75%
+    assert p.nfes() == 25
+
+
+def test_alternating_policy():
+    p = pol.alternating_policy(20, 7.5)
+    assert p.nfes() == 5 * 2 + 5 + 10
+
+
+def test_from_alpha_hardening():
+    alpha = np.zeros((4, 5))
+    alpha[0, 2] = 9.0  # cfg(s1)
+    alpha[1, 1] = 9.0  # cond
+    alpha[2, 0] = 9.0  # uncond
+    alpha[3, 4] = 9.0  # cfg(s3)
+    p = pol.from_alpha(alpha, scales=(3.75, 7.5, 15.0), base_scale=7.5)
+    assert p.kinds == (pol.CFG, pol.COND, pol.UNCOND, pol.CFG)
+    assert p.scales[0] == 3.75 and p.scales[3] == 15.0

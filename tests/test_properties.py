@@ -1,0 +1,75 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import policy as pol
+from repro.core.guidance import cfg_combine, cosine_similarity
+from repro.core.linear_ag import fit_ols, eval_ols
+from repro.metrics.ssim import ssim
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+finite = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@given(
+    st.integers(1, 4),
+    st.integers(2, 32),
+    st.floats(-5, 20, allow_nan=False),
+    st.integers(0, 2 ** 31 - 1),
+)
+def test_cfg_combine_is_affine_interpolation(b, d, s, seed):
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (b, d))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (b, d))
+    out = np.asarray(cfg_combine(u, c, s))
+    # affine identity: out - u == s * (c - u)
+    np.testing.assert_allclose(out - np.asarray(u), s * np.asarray(c - u), atol=1e-4)
+
+
+@given(st.integers(1, 5), st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_cosine_in_unit_interval(b, d, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (b, d))
+    bb = jax.random.normal(jax.random.fold_in(key, 7), (b, d))
+    g = np.asarray(cosine_similarity(a, bb))
+    assert np.all(g <= 1.0 + 1e-5) and np.all(g >= -1.0 - 1e-5)
+
+
+@given(st.integers(1, 30), st.integers(0, 30))
+def test_ag_policy_nfe_bounds(steps, trunc):
+    trunc = min(trunc, steps)
+    p = pol.ag_policy(steps, 7.5, truncate_at=trunc)
+    assert steps <= p.nfes() <= 2 * steps
+    assert p.nfes() == steps + trunc
+
+
+@given(st.integers(2, 12))
+def test_linear_ag_policy_nfe_formula(steps):
+    p = pol.linear_ag_policy(steps, 7.5)
+    half = steps // 2
+    n_cfg = (half + 1) // 2
+    assert p.nfes() == steps + n_cfg
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_ssim_identity_and_symmetry(seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.uniform(key, (1, 2, 16, 16), minval=-1, maxval=1)
+    b = jax.random.uniform(jax.random.fold_in(key, 3), (1, 2, 16, 16), minval=-1, maxval=1)
+    assert abs(float(ssim(a, a)[0]) - 1.0) < 1e-5
+    assert abs(float(ssim(a, b)[0]) - float(ssim(b, a)[0])) < 1e-5
+    assert float(ssim(a, b)[0]) <= 1.0 + 1e-6
+
+
+@given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_ols_never_worse_than_zero_predictor_on_train(steps, seed):
+    rng = np.random.default_rng(seed)
+    eps_c = rng.normal(size=(6, steps, 12))
+    eps_u = rng.normal(size=(6, steps, 12))
+    coeffs, train_mse = fit_ols(eps_c, eps_u)
+    base = (eps_u ** 2).mean(axis=(0, 2))
+    assert np.all(train_mse <= base + 1e-8)

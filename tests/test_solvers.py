@@ -1,0 +1,71 @@
+"""ODE solvers: exactness on an analytically solvable score model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion.schedule import cosine_schedule, linear_schedule, add_noise
+from repro.diffusion.solvers import get_solver
+from repro.diffusion.schedule import timestep_subsequence
+
+
+def test_schedule_monotone():
+    for sched in (linear_schedule(100), cosine_schedule(100)):
+        ab = sched.alphas_bar
+        assert np.all(np.diff(ab) < 0)
+        assert 0 < ab[-1] < ab[0] <= 1.0
+
+
+def test_add_noise_interpolates(key):
+    sched = cosine_schedule(100)
+    x0 = jax.random.normal(key, (2, 3, 8, 8))
+    eps = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 8))
+    x_t0 = add_noise(sched, x0, eps, jnp.zeros((2,), jnp.int32))
+    np.testing.assert_allclose(x_t0, np.sqrt(sched.alphas_bar[0]) * x0
+                               + np.sqrt(1 - sched.alphas_bar[0]) * eps, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["ddim", "euler", "dpmpp_2m"])
+def test_solver_recovers_point_mass(name, key):
+    """For data concentrated at mu, the exact eps-model is
+    eps*(x,t) = (x - sqrt(ab)*mu)/sqrt(1-ab); every solver should walk
+    x_T to ~mu."""
+    sched = cosine_schedule(1000)
+    solver = get_solver(name, sched)
+    mu = jnp.asarray([2.0, -1.0, 0.5, 3.0])
+
+    def eps_star(x, t):
+        ab = sched.ab(t)
+        return (x - jnp.sqrt(ab) * mu) / jnp.sqrt(1 - ab)
+
+    steps = 40
+    ts = timestep_subsequence(sched.T, steps + 1)
+    x = jax.random.normal(key, (4,)) * 1.0 + 0.0
+    state = solver.init(x.shape)
+    for i in range(steps):
+        t_cur = jnp.asarray(int(ts[i]), jnp.int32)
+        t_next = jnp.asarray(int(ts[i + 1]), jnp.int32)
+        x, state = solver.step(x, eps_star(x, t_cur), t_cur, t_next, state)
+    np.testing.assert_allclose(x, mu, atol=0.15)
+
+
+def test_dpmpp_more_accurate_than_euler_few_steps(key):
+    sched = cosine_schedule(1000)
+    mu = jnp.asarray([1.5, -0.5])
+
+    def eps_star(x, t):
+        ab = sched.ab(t)
+        return (x - jnp.sqrt(ab) * mu) / jnp.sqrt(1 - ab)
+
+    def run(name, steps):
+        solver = get_solver(name, sched)
+        ts = timestep_subsequence(sched.T, steps + 1)
+        x = jnp.asarray([3.0, 3.0])
+        state = solver.init(x.shape)
+        for i in range(steps):
+            t_c = jnp.asarray(int(ts[i]), jnp.int32)
+            t_n = jnp.asarray(int(ts[i + 1]), jnp.int32)
+            x, state = solver.step(x, eps_star(x, t_c), t_c, t_n, state)
+        return float(jnp.max(jnp.abs(x - mu)))
+
+    assert run("dpmpp_2m", 8) <= run("euler", 8) + 1e-6
