@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
+from repro.core.executor import GuidanceExecutor
 from repro.core.guidance import cfg_combine_with_gamma
 from repro.kernels import fused_guidance, linear_combine
 from repro.kernels.ref import fused_guidance_ref, linear_combine_ref
@@ -30,6 +31,27 @@ def main():
     us = timed(jax.jit(lambda a, b: cfg_combine_with_gamma(a, b, 7.5)), u, c)
     emit("kernel_fused_guidance", us,
          f"allclose={int(ok)};traffic_cut={naive_traffic/fused_traffic:.2f}x")
+
+    # before/after through the unified executor (core/executor.py): the
+    # "before" is what every sampler/serving step used to hand-roll (the XLA
+    # reference epilogue); the "after" routes the same step through the
+    # Pallas kernel.  On CPU the fused path runs in interpret mode, so its
+    # us column is a correctness vehicle; the traffic model + the TPU run
+    # are the perf claim (EXPERIMENTS.md §Perf).
+    ref_ex = GuidanceExecutor(backend="reference")
+    fus_ex = GuidanceExecutor(backend="fused")
+    us_ref = timed(jax.jit(lambda a, b: ref_ex.combine(a, b, 7.5)), u, c)
+    o_f, g_f = fus_ex.combine(u, c, 7.5)
+    parity = bool(
+        jnp.allclose(o_f, ro, atol=1e-5) and jnp.allclose(g_f, rg, atol=1e-5)
+    )
+    us_fus = timed(jax.jit(lambda a, b: fus_ex.combine(a, b, 7.5)), u, c)
+    emit("executor_epilogue_reference", us_ref,
+         f"bytes_model={naive_traffic}")
+    emit("executor_epilogue_fused", us_fus,
+         f"bytes_model={fused_traffic};parity={int(parity)};"
+         f"traffic_cut={naive_traffic/fused_traffic:.2f}x;"
+         f"interpret={int(jax.default_backend() != 'tpu')}")
 
     K = 21
     h = jax.random.normal(key, (K, N), jnp.float32)

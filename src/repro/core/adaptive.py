@@ -27,14 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.guidance import cfg_combine, cosine_similarity
+from repro.core.executor import GuidanceExecutor, get_executor
 from repro.diffusion.sampler import EpsModel
 from repro.diffusion.schedule import timestep_subsequence
 from repro.diffusion.solvers import Solver
-
-
-def _bcast(mask, like):
-    return mask.reshape((-1,) + (1,) * (like.ndim - 1))
 
 
 def calibrate_gamma_bar(
@@ -80,9 +76,11 @@ def ag_sample(
     *,
     neg_cond=None,
     collect_gammas: bool = False,
+    executor: Optional[GuidanceExecutor] = None,
 ):
     """Per-sample AG. Returns (x0, info) with per-sample ``nfes`` (float),
     ``truncate_step`` and optionally the gamma trace."""
+    executor = get_executor(executor)
     ts = timestep_subsequence(solver.schedule.T, steps + 1)
     B = x_T.shape[0]
     x = x_T
@@ -97,19 +95,18 @@ def ag_sample(
         # semantics: crossed samples take conditional steps (1 NFE),
         # uncrossed take CFG (2 NFEs). Packed evaluation computes both; the
         # per-sample NFE ledger reflects the adaptive policy.
-        eps_c, eps_u = model.eps_pair(params, x, t_cur, cond, neg_cond)
-        gamma = cosine_similarity(eps_c, eps_u)
+        res = executor.ag_step(
+            model, params, x, t_cur, cond, neg_cond, scale, crossed, nfes,
+            gamma_bar,
+        )
         if collect_gammas:
-            gammas.append(gamma)
-        eps_cfg = cfg_combine(eps_u, eps_c, scale)
-        eps = jnp.where(_bcast(crossed, eps_cfg), eps_c, eps_cfg)
-        nfes = nfes + jnp.where(crossed, 1.0, 2.0)
-        newly = (~crossed) & (gamma > gamma_bar)
+            gammas.append(res.gamma)
+        newly = res.crossed & ~crossed
         truncate_step = jnp.where(newly, i + 1, truncate_step)
-        crossed = crossed | newly
+        crossed, nfes = res.crossed, res.nfes
         x, state = solver.step(
             x,
-            eps,
+            res.eps,
             jnp.asarray(int(ts[i]), jnp.int32),
             jnp.asarray(int(ts[i + 1]), jnp.int32),
             state,
@@ -132,8 +129,10 @@ def ag_sample_jit(
     cond,
     *,
     neg_cond=None,
+    executor: Optional[GuidanceExecutor] = None,
 ):
     """Compiled two-phase AG (see module docstring). Returns (x0, info)."""
+    executor = get_executor(executor)
     ts = jnp.asarray(timestep_subsequence(solver.schedule.T, steps + 1), jnp.int32)
     B = x_T.shape[0]
     state0 = solver.init(x_T.shape)
@@ -145,14 +144,12 @@ def ag_sample_jit(
     def guided_body(carry):
         i, x, state, crossed, nfes = carry
         t_cur = jnp.full((B,), ts[i], jnp.int32)
-        eps_c, eps_u = model.eps_pair(params, x, t_cur, cond, neg_cond)
-        gamma = cosine_similarity(eps_c, eps_u)
-        eps_cfg = cfg_combine(eps_u, eps_c, scale)
-        eps = jnp.where(_bcast(crossed, eps_cfg), eps_c, eps_cfg)
-        nfes = nfes + jnp.where(crossed, 1.0, 2.0)
-        crossed = crossed | (gamma > gamma_bar)
-        x, state = solver.step(x, eps, ts[i], ts[i + 1], state)
-        return (i + 1, x, state, crossed, nfes)
+        res = executor.ag_step(
+            model, params, x, t_cur, cond, neg_cond, scale, crossed, nfes,
+            gamma_bar,
+        )
+        x, state = solver.step(x, res.eps, ts[i], ts[i + 1], state)
+        return (i + 1, x, state, res.crossed, res.nfes)
 
     def cond_cond(carry):
         i, x, state, crossed, nfes = carry

@@ -1,0 +1,151 @@
+"""Unified guidance-step executor (DESIGN.md §6).
+
+One step of guidance has four ingredients, previously hand-rolled by every
+consumer (``sample_with_policy``, ``ag_sample``, ``ag_sample_jit`` and the
+serving decode path):
+
+  1. packed cond/uncond evaluation (DESIGN.md §3 — one [2B] network call),
+  2. the CFG combine (Eq. 3),
+  3. the cosine diagnostic gamma_t (Eq. 7) that drives AG truncation, and
+  4. the per-sample NFE ledger (Table-1 accounting).
+
+``GuidanceExecutor`` owns all four.  Steps 2+3 — the guidance *epilogue* —
+run on one of two interchangeable backends:
+
+* ``reference`` — the jnp semantics from ``core.guidance`` (the oracle);
+  XLA lowers it to ~4-5 HBM passes over the score tensors.
+* ``fused``     — the Pallas kernel in ``kernels/fused_guidance.py``: Eq. 3
+  and the Eq. 7 partials in ONE pass over VMEM tiles (~2.3x traffic cut,
+  EXPERIMENTS.md §Perf).  Interpret mode on CPU, compiled on real TPU.
+
+``backend="auto"`` (the default) resolves from ``perf_flags.fused_guidance``
+at trace time, so the flag follows the usual re-lowering rules of
+``perf_flags``.  The fused kernel takes a scalar guidance scale; per-sample
+(B,) scales fall back to the reference path (same semantics, Eq. 3 is
+evaluated per row either way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import perf_flags
+from repro.core.guidance import cfg_combine_with_gamma
+
+BACKENDS = ("auto", "reference", "fused")
+
+
+def _bcast(mask, like):
+    """(B,) bool -> broadcastable against ``like`` (B, ...)."""
+    return mask.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def _default_interpret() -> bool:
+    # Pallas interpret mode everywhere except a real TPU backend.
+    return jax.default_backend() != "tpu"
+
+
+class AGStep(NamedTuple):
+    """Result of one adaptive-guidance update (§5 semantics).
+
+    ``eps`` is the score to integrate (or logits to sample from): CFG for
+    samples still guided, conditional for crossed ones.  ``crossed`` and
+    ``nfes`` are the *updated* ledgers; the NFE increment uses the
+    pre-update ``crossed`` (a crossed sample pays 1, a guided one 2).
+    """
+
+    eps: jnp.ndarray
+    gamma: jnp.ndarray  # (B,)
+    crossed: jnp.ndarray  # (B,) bool
+    nfes: jnp.ndarray  # (B,) float32
+
+
+@dataclasses.dataclass(frozen=True)
+class GuidanceExecutor:
+    """Owns the guidance epilogue; hashable/static so jitted callers can
+    close over it.  ``interpret=None`` auto-detects (CPU -> interpret)."""
+
+    backend: str = "auto"
+    block: int = 512
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        assert self.backend in BACKENDS, self.backend
+
+    # -- backend resolution -------------------------------------------------
+
+    def resolved_backend(self) -> str:
+        if self.backend == "auto":
+            return "fused" if perf_flags.fused_guidance else "reference"
+        return self.backend
+
+    # -- the epilogue: combine + gamma (Eq. 3 + Eq. 7) ----------------------
+
+    def combine(self, eps_u, eps_c, scale):
+        """CFG combine + cosine diagnostic.  Returns (eps_cfg, gamma (B,)).
+
+        gamma is computed over all non-batch axes in f32, identically on
+        both backends (parity asserted in tests/test_executor.py).
+        """
+        backend = self.resolved_backend()
+        if backend == "fused" and jnp.ndim(scale) == 0:
+            from repro.kernels.ops import fused_guidance
+
+            interpret = (
+                _default_interpret() if self.interpret is None else self.interpret
+            )
+            return fused_guidance(
+                eps_u, eps_c, scale, interpret=interpret, block=self.block
+            )
+        return cfg_combine_with_gamma(eps_u, eps_c, scale)
+
+    # -- NFE ledger ---------------------------------------------------------
+
+    @staticmethod
+    def ledger_update(nfes, crossed):
+        """Per-sample Table-1 accounting: +1 for crossed, +2 for guided."""
+        return nfes + jnp.where(crossed, 1.0, 2.0)
+
+    # -- adaptive-guidance update (the shared hot path) ---------------------
+
+    def ag_update(self, eps_u, eps_c, scale, crossed, nfes, gamma_bar) -> AGStep:
+        """One AG epilogue: combine, select per ``crossed``, ledger, cross.
+
+        Exactly the §5 semantics shared by ``ag_sample``, ``ag_sample_jit``
+        and ``serving.guided_decode``: crossed samples take the conditional
+        score (1 NFE), guided ones CFG (2 NFEs); a sample crosses — and
+        stays crossed — once gamma_t > gamma_bar.
+        """
+        eps_cfg, gamma = self.combine(eps_u, eps_c, scale)
+        eps = jnp.where(_bcast(crossed, eps_cfg), eps_c, eps_cfg)
+        nfes = self.ledger_update(nfes, crossed)
+        crossed = crossed | (gamma > gamma_bar)
+        return AGStep(eps=eps, gamma=gamma, crossed=crossed, nfes=nfes)
+
+    # -- model-bound steps (diffusion sampling) -----------------------------
+
+    def cfg_step(self, model, params, x, t, cond, neg_cond, scale):
+        """Packed CFG step (2 NFEs): eval pair, combine, gamma.
+
+        Returns (eps_cfg, eps_c, eps_u, gamma)."""
+        eps_c, eps_u = model.eps_pair(params, x, t, cond, neg_cond)
+        eps, gamma = self.combine(eps_u, eps_c, scale)
+        return eps, eps_c, eps_u, gamma
+
+    def ag_step(
+        self, model, params, x, t, cond, neg_cond, scale, crossed, nfes, gamma_bar
+    ):
+        """Packed AG step: pair eval + ``ag_update``.  Returns AGStep."""
+        eps_c, eps_u = model.eps_pair(params, x, t, cond, neg_cond)
+        return self.ag_update(eps_u, eps_c, scale, crossed, nfes, gamma_bar)
+
+
+_DEFAULT = GuidanceExecutor()
+
+
+def get_executor(executor: Optional[GuidanceExecutor] = None) -> GuidanceExecutor:
+    """The module default (backend="auto") unless the caller passes one."""
+    return _DEFAULT if executor is None else executor

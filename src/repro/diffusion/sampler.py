@@ -9,6 +9,12 @@ The cond/uncond pack (DESIGN.md §3): CFG steps evaluate the network once on
 a ``[2B]`` packed batch instead of two sequential calls — the TPU-native
 layout for the paper's "2 NFEs".  NFE accounting counts network evaluations
 (a packed call = 2 NFEs), matching the paper.
+
+The combine + gamma epilogue routes through ``core.executor`` (DESIGN.md
+§6), so the fused Pallas kernel is one flag away for every policy.  Static
+policies (no CFG_LR, no collection) compile to ONE executable: a
+``lax.scan`` whose body dispatches on the step kind with ``lax.switch`` —
+the same single-executable property ``ag_sample_jit`` has (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -20,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policy as pol
-from repro.core.guidance import cfg_combine, cosine_similarity
+from repro.core.executor import GuidanceExecutor, get_executor
 from repro.diffusion.schedule import Schedule, timestep_subsequence
 from repro.diffusion.solvers import Solver, SolverState
 
@@ -81,6 +87,8 @@ def sample_with_policy(
     neg_cond=None,
     lr_predictor=None,
     collect: bool = False,
+    executor: Optional[GuidanceExecutor] = None,
+    compiled: Optional[bool] = None,
 ):
     """Run the sampler under a static policy.
 
@@ -90,7 +98,38 @@ def sample_with_policy(
 
     ``lr_predictor(history, step_index)`` supplies the OLS-estimated
     unconditional score for CFG_LR steps (core/linear_ag.py).
+
+    ``compiled=None`` (auto) runs the single-executable ``lax.scan`` +
+    ``lax.switch`` path whenever the policy allows it: no score collection
+    and no CFG_LR steps (their OLS design matrix grows per step, which a
+    fixed scan carry cannot express — DESIGN.md §6).  The eager Python loop
+    remains the collection/LR vehicle; both route the combine epilogue
+    through ``executor``.
     """
+    executor = get_executor(executor)
+    needs_eager = (
+        collect
+        or lr_predictor is not None
+        or any(k == pol.CFG_LR for k in policy.kinds)
+    )
+    if compiled is None:
+        compiled = not needs_eager
+    if compiled:
+        assert not needs_eager, "collect/CFG_LR require the eager path"
+        return _sample_with_policy_scan(
+            model, params, solver, policy, x_T, cond, neg_cond, executor
+        )
+    return _sample_with_policy_eager(
+        model, params, solver, policy, x_T, cond, neg_cond,
+        lr_predictor, collect, executor,
+    )
+
+
+def _sample_with_policy_eager(
+    model, params, solver, policy, x_T, cond, neg_cond, lr_predictor, collect,
+    executor,
+):
+    """Python step loop: per-step host control, growing histories."""
     steps = policy.num_steps
     ts = timestep_subsequence(solver.schedule.T, steps + 1)
     x = x_T
@@ -100,7 +139,6 @@ def sample_with_policy(
 
     for i in range(steps):
         t_cur = jnp.full((B,), int(ts[i]), jnp.int32)
-        t_next = jnp.full((B,), int(ts[i + 1]), jnp.int32)
         kind, scale = policy.kinds[i], policy.scales[i]
         gamma = jnp.full((B,), jnp.nan, jnp.float32)
         eps_c = eps_u = None
@@ -111,9 +149,9 @@ def sample_with_policy(
             eps = model.eps_cond(params, x, t_cur, cond)
             nfe += 1
         elif kind == pol.CFG:
-            eps_c, eps_u = model.eps_pair(params, x, t_cur, cond, neg_cond)
-            gamma = cosine_similarity(eps_c, eps_u)
-            eps = cfg_combine(eps_u, eps_c, scale)
+            eps, eps_c, eps_u, gamma = executor.cfg_step(
+                model, params, x, t_cur, cond, neg_cond, scale
+            )
             nfe += 2
         elif kind == pol.CFG_LR:
             assert lr_predictor is not None, "CFG_LR requires an OLS predictor"
@@ -121,8 +159,7 @@ def sample_with_policy(
             eps_u = lr_predictor(
                 {"eps_c": eps_cs + [eps_c], "eps_u": eps_us}, i
             )
-            gamma = cosine_similarity(eps_c, eps_u)
-            eps = cfg_combine(eps_u, eps_c, scale)
+            eps, gamma = executor.combine(eps_u, eps_c, scale)
             nfe += 1
         else:
             raise ValueError(kind)
@@ -142,6 +179,51 @@ def sample_with_policy(
         info["eps_c"] = jnp.stack([e for e in eps_cs])
         info["eps_u"] = jnp.stack([e for e in eps_us])
     return x, info
+
+
+def _sample_with_policy_scan(
+    model, params, solver, policy, x_T, cond, neg_cond, executor
+):
+    """Single-executable path: ``lax.scan`` over steps, ``lax.switch`` over
+    step kinds (UNCOND/COND/CFG).
+
+    Every branch is traced once and baked into the one executable; at run
+    time only the selected branch executes, so a static AG policy costs the
+    same compute as its eager replay while compiling like ``ag_sample_jit``.
+    The total NFE is a property of the static policy, not a traced value.
+    """
+    steps = policy.num_steps
+    ts = jnp.asarray(timestep_subsequence(solver.schedule.T, steps + 1), jnp.int32)
+    kinds = jnp.asarray(policy.kinds, jnp.int32)
+    scales = jnp.asarray(policy.scales, jnp.float32)
+    B = x_T.shape[0]
+    nan_gamma = jnp.full((B,), jnp.nan, jnp.float32)
+
+    def uncond_branch(x, t, scale):
+        return model.eps_uncond(params, x, t, neg_cond), nan_gamma
+
+    def cond_branch(x, t, scale):
+        return model.eps_cond(params, x, t, cond), nan_gamma
+
+    def cfg_branch(x, t, scale):
+        eps, _, _, gamma = executor.cfg_step(
+            model, params, x, t, cond, neg_cond, scale
+        )
+        return eps, gamma
+
+    def body(carry, i):
+        x, state = carry
+        t_cur = jnp.full((B,), ts[i], jnp.int32)
+        eps, gamma = jax.lax.switch(
+            kinds[i], (uncond_branch, cond_branch, cfg_branch), x, t_cur, scales[i]
+        )
+        x, state = solver.step(x, eps, ts[i], ts[i + 1], state)
+        return (x, state), gamma
+
+    (x, _), gammas = jax.lax.scan(
+        body, (x_T, solver.init(x_T.shape)), jnp.arange(steps)
+    )
+    return x, {"gammas": gammas, "nfe": policy.nfes()}
 
 
 def collect_pair_trajectory(model: EpsModel, params, solver, steps, scale, x_T, cond):

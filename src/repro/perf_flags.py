@@ -38,6 +38,13 @@ donate_caches: bool = _env("REPRO_DONATE_CACHES")
 # (~80 GB/layer at prefill_32k); sequence sharding removes the need to
 # split heads at all.
 prefill_seq_parallel: bool = _env("REPRO_PREFILL_SEQ_PARALLEL")
+# route the guidance epilogue (CFG combine + cosine gamma, Eq. 3 + Eq. 7)
+# through the fused Pallas kernel instead of the jnp reference lowering.
+# Hypothesis: the epilogue is bandwidth-bound at decode/latent shapes; the
+# naive lowering reads both score tensors ~4-5x from HBM, the fusion once
+# (~2.3x traffic cut; EXPERIMENTS.md §Perf).  Read by core/executor.py's
+# backend="auto" at trace time.
+fused_guidance: bool = _env("REPRO_FUSED_GUIDANCE")
 
 
 def set_flags(**kw) -> dict:

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.executor import GuidanceExecutor
 from repro.serving.guided_decode import (
     GuidedState,
     cond_decode_step,
@@ -37,6 +38,9 @@ class EngineConfig:
     gamma_bar: float = 0.95
     max_batch: int = 8
     greedy: bool = True
+    # guidance-epilogue backend (core/executor.py): "auto" follows
+    # perf_flags.fused_guidance; "fused"/"reference" force one.
+    guidance_backend: str = "auto"
 
 
 class GuidedEngine:
@@ -46,9 +50,11 @@ class GuidedEngine:
         self.api = api
         self.params = params
         self.config = config
+        self.executor = GuidanceExecutor(backend=config.guidance_backend)
         self._guided_step = jax.jit(
             lambda p, s: guided_decode_step(
-                api, p, s, scale=config.scale, gamma_bar=config.gamma_bar
+                api, p, s, scale=config.scale, gamma_bar=config.gamma_bar,
+                executor=self.executor,
             )
         )
         self._cond_step = jax.jit(lambda p, s: cond_decode_step(api, p, s))

@@ -21,7 +21,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.guidance import cfg_combine, cosine_similarity
+from repro.core.executor import GuidanceExecutor, get_executor
 
 
 class GuidedState(NamedTuple):
@@ -42,13 +42,16 @@ class GuidedState(NamedTuple):
 
 def guided_decode_step(
     api, params, state: GuidedState, *, scale: float, gamma_bar: float,
-    greedy: bool = True, key=None,
+    greedy: bool = True, key=None, executor: Optional[GuidanceExecutor] = None,
 ):
     """One CFG decode step on the cond/uncond pack (2 NFEs per request).
 
     Per-request AG semantics: crossed requests take the conditional logits.
-    Returns (next_token, new_state, gamma).
+    The combine + gamma + ledger epilogue is ``core.executor``'s
+    ``ag_update`` — logits here play the role the scores play in diffusion
+    (Eq. 3 in logit space).  Returns (next_token, new_state, gamma).
     """
+    executor = get_executor(executor)
     B = state.tokens.shape[0]
     tok2 = jnp.concatenate([state.tokens, state.tokens], axis=0)
     pos2 = jnp.concatenate([state.position, state.position], axis=0)
@@ -60,24 +63,20 @@ def guided_decode_step(
     new_c = jax.tree.map(lambda x: x[:, :B], new_caches2)
     new_u = jax.tree.map(lambda x: x[:, B:], new_caches2)
 
-    gamma = cosine_similarity(logits_c[:, 0], logits_u[:, 0])
-    guided = cfg_combine(logits_u, logits_c, scale)
-    logits = jnp.where(
-        state.crossed.reshape(-1, 1, 1), logits_c, guided
+    res = executor.ag_update(
+        logits_u, logits_c, scale, state.crossed, state.nfes, gamma_bar
     )
-    nfes = state.nfes + jnp.where(state.crossed, 1.0, 2.0)
-    crossed = state.crossed | (gamma > gamma_bar)
 
-    nxt = _select(logits, greedy, key)
+    nxt = _select(res.eps, greedy, key)
     new_state = GuidedState(
         tokens=nxt,
         position=state.position + 1,
         caches_c=new_c,
         caches_u=new_u,
-        crossed=crossed,
-        nfes=nfes,
+        crossed=res.crossed,
+        nfes=res.nfes,
     )
-    return nxt, new_state, gamma
+    return nxt, new_state, res.gamma
 
 
 def cond_decode_step(api, params, state: GuidedState, *, greedy: bool = True, key=None):
@@ -111,7 +110,10 @@ def _select(logits, greedy, key):
 # ---------------------------------------------------------------------------
 
 
-def make_serve_step(api, *, guidance: str = "cfg", scale: float = 1.5):
+def make_serve_step(
+    api, *, guidance: str = "cfg", scale: float = 1.5,
+    executor: Optional[GuidanceExecutor] = None,
+):
     """serve_step(params, inputs) for the dry-run.
 
     guidance="cfg":  paper-faithful CFG decode — inputs carry the [2B] pack
@@ -119,6 +121,7 @@ def make_serve_step(api, *, guidance: str = "cfg", scale: float = 1.5):
                      one stacked tree; 2 NFEs/request.
     guidance="cond": conditional-only (the AG tail / non-guided serving).
     """
+    executor = get_executor(executor)
 
     if guidance == "cfg":
 
@@ -132,8 +135,7 @@ def make_serve_step(api, *, guidance: str = "cfg", scale: float = 1.5):
             B = B2 // 2
             logits2, new_caches = api.decode_step(params, tokens, caches, position)
             logits_c, logits_u = logits2[:B], logits2[B:]
-            gamma = cosine_similarity(logits_c[:, 0], logits_u[:, 0])
-            logits = cfg_combine(logits_u, logits_c, scale)
+            logits, gamma = executor.combine(logits_u, logits_c, scale)
             nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
             return {
                 "next_token": nxt,

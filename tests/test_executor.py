@@ -1,0 +1,157 @@
+"""GuidanceExecutor: fused-vs-reference backend parity + shared AG semantics.
+
+The fused backend runs the Pallas kernel in interpret mode here (CPU); the
+parity sweep leans on odd shapes — trailing dims that are not a multiple of
+the kernel block, B=1 rows — where tiling bugs would show.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import perf_flags
+from repro.core import policy as pol
+from repro.core.executor import AGStep, GuidanceExecutor, get_executor
+from repro.core.guidance import cfg_combine, cosine_similarity
+
+REF = GuidanceExecutor(backend="reference")
+FUSED = GuidanceExecutor(backend="fused")
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [
+        (1, 777),          # B=1, odd trailing dim (not a multiple of 512/128)
+        (2, 130),          # just over one lane width
+        (3, 5, 77),        # odd multi-axis trailing shape
+        (1, 4, 63, 63),    # B=1 latent-like, odd H/W
+        (4, 999),
+        (2, 512),          # exact block
+    ],
+)
+@pytest.mark.parametrize("scale", [0.0, 1.0, 7.5])
+def test_fused_matches_reference_odd_shapes(shape, scale, key):
+    u = jax.random.normal(key, shape)
+    c = jax.random.normal(jax.random.PRNGKey(1), shape)
+    out_r, gamma_r = REF.combine(u, c, scale)
+    out_f, gamma_f = FUSED.combine(u, c, scale)
+    np.testing.assert_allclose(
+        np.asarray(out_f), np.asarray(out_r), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(gamma_f), np.asarray(gamma_r), atol=1e-5, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_combine_matches_core_guidance(backend, key):
+    ex = GuidanceExecutor(backend=backend)
+    u = jax.random.normal(key, (3, 4, 32, 32))
+    c = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 32, 32))
+    out, gamma = ex.combine(u, c, 4.0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(cfg_combine(u, c, 4.0)), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(gamma), np.asarray(cosine_similarity(c, u)), atol=1e-5
+    )
+
+
+def test_per_sample_scale_falls_back_to_reference(key):
+    """(B,) scales are outside the fused kernel's contract; semantics must
+    still be Eq. 3 per row."""
+    u = jax.random.normal(key, (3, 64))
+    c = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
+    s = jnp.asarray([0.0, 1.0, 7.5])
+    out, _ = FUSED.combine(u, c, s)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(cfg_combine(u, c, s)), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_ag_update_semantics(backend, key):
+    """ag_update == the hand-rolled §5 epilogue it replaced."""
+    ex = GuidanceExecutor(backend=backend)
+    B = 4
+    u = jax.random.normal(key, (B, 97))
+    c = jax.random.normal(jax.random.PRNGKey(1), (B, 97))
+    crossed = jnp.asarray([True, False, True, False])
+    nfes = jnp.asarray([5.0, 8.0, 3.0, 0.0])
+    gamma_bar = 0.0
+    res = ex.ag_update(u, c, 2.5, crossed, nfes, gamma_bar)
+    assert isinstance(res, AGStep)
+
+    gamma = cosine_similarity(c, u)
+    eps_cfg = cfg_combine(u, c, 2.5)
+    want_eps = jnp.where(crossed.reshape(-1, 1), c, eps_cfg)
+    np.testing.assert_allclose(np.asarray(res.eps), np.asarray(want_eps), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.gamma), np.asarray(gamma), atol=1e-5)
+    # ledger uses the pre-update crossed: +1 crossed, +2 guided
+    np.testing.assert_allclose(
+        np.asarray(res.nfes), np.asarray(nfes + jnp.where(crossed, 1.0, 2.0))
+    )
+    # crossing is sticky and driven by gamma > gamma_bar
+    np.testing.assert_array_equal(
+        np.asarray(res.crossed), np.asarray(crossed | (gamma > gamma_bar))
+    )
+
+
+def test_auto_backend_follows_perf_flag():
+    ex = get_executor()
+    prev = perf_flags.set_flags(fused_guidance=True)
+    try:
+        assert ex.resolved_backend() == "fused"
+        perf_flags.set_flags(fused_guidance=False)
+        assert ex.resolved_backend() == "reference"
+    finally:
+        perf_flags.set_flags(**prev)
+
+
+def test_sampler_compiled_matches_eager_all_backends():
+    """The lax.switch scan path == the eager loop, on both backends, for a
+    policy that exercises every static step kind."""
+    from repro.data.toy import DIM, NUM_CLASSES, make_toy
+    from repro.diffusion.sampler import sample_with_policy
+    from repro.diffusion.solvers import get_solver
+
+    model, sched, _ = make_toy()
+    solver = get_solver("dpmpp_2m", sched)
+    x_T = jax.random.normal(jax.random.PRNGKey(0), (3, DIM))
+    cond = jnp.arange(3) % NUM_CLASSES
+    policy = pol.Policy(
+        kinds=(pol.CFG, pol.CFG, pol.UNCOND, pol.CFG, pol.COND, pol.COND),
+        scales=(3.0, 2.0, 0.0, 3.0, 0.0, 0.0),
+    )
+    x_eager, info_e = sample_with_policy(
+        model, None, solver, policy, x_T, cond, compiled=False
+    )
+    for ex in (REF, FUSED):
+        x_c, info_c = sample_with_policy(
+            model, None, solver, policy, x_T, cond, executor=ex
+        )
+        np.testing.assert_allclose(
+            np.asarray(x_c), np.asarray(x_eager), rtol=1e-5, atol=1e-6
+        )
+        assert info_c["nfe"] == info_e["nfe"] == policy.nfes()
+        ge, gc = np.asarray(info_e["gammas"]), np.asarray(info_c["gammas"])
+        np.testing.assert_array_equal(np.isnan(ge), np.isnan(gc))
+        np.testing.assert_allclose(
+            gc[~np.isnan(gc)], ge[~np.isnan(ge)], atol=1e-5
+        )
+
+
+def test_ag_sample_fused_matches_reference():
+    """End-to-end AG trajectory parity across epilogue backends."""
+    from repro.core.adaptive import ag_sample
+    from repro.data.toy import DIM, NUM_CLASSES, make_toy
+    from repro.diffusion.solvers import get_solver
+
+    model, sched, _ = make_toy()
+    solver = get_solver("ddim", sched)
+    x_T = jax.random.normal(jax.random.PRNGKey(0), (2, DIM))
+    cond = jnp.arange(2) % NUM_CLASSES
+    x_r, ir = ag_sample(model, None, solver, 8, 3.0, 0.9, x_T, cond, executor=REF)
+    x_f, if_ = ag_sample(model, None, solver, 8, 3.0, 0.9, x_T, cond, executor=FUSED)
+    np.testing.assert_allclose(np.asarray(x_f), np.asarray(x_r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(if_["nfes"]), np.asarray(ir["nfes"]))

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh
 from repro.models.moe import _dispatch, _route, init_moe, moe_apply
 from repro.sharding.partition import use_mesh
 
@@ -62,10 +63,7 @@ def test_moe_shard_map_path_matches_local(key):
     p = init_moe(key, d, f, E, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, d))
     y_local, aux_local = moe_apply(p, _Cfg, x, capacity_factor=100.0)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_mesh((1, 1), ("data", "model"))
     with use_mesh(mesh):
         y_sharded, aux_sharded = moe_apply(p, _Cfg, x, capacity_factor=100.0)
     np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_sharded), atol=1e-5)

@@ -6,6 +6,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
+from repro.launch.mesh import make_mesh
 from repro.models import build
 from repro.sharding.partition import (
     param_specs,
@@ -15,9 +16,7 @@ from repro.sharding.partition import (
 
 
 def test_spec_rules_match_paths():
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = make_mesh((1, 1), ("data", "model"))
     with use_mesh(mesh):
         assert spec_for_param("blocks_0/attn/wq", 3) == P(None, None, "model")
         assert spec_for_param("blocks_0/mlp/w2", 3) == P(None, "model")
@@ -31,9 +30,7 @@ def test_param_specs_cover_all_leaves(key):
     cfg = get_config("jamba-1.5-large-398b").reduced()
     api = build(cfg)
     shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = make_mesh((1, 1), ("data", "model"))
     with use_mesh(mesh):
         specs = param_specs(shapes)
     n_leaves = len(jax.tree.leaves(shapes))
@@ -48,10 +45,7 @@ def test_sharded_forward_matches_unsharded(key):
     params = api.init(key)
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
     ref, _ = api.forward(params, {"tokens": toks}, mode="train")
-    mesh = jax.make_mesh(
-        (1, len(jax.devices())), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
     with use_mesh(mesh):
         out, _ = jax.jit(lambda p, t: api.forward(p, {"tokens": t}, mode="train"))(
             params, toks

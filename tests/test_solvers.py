@@ -21,8 +21,11 @@ def test_add_noise_interpolates(key):
     x0 = jax.random.normal(key, (2, 3, 8, 8))
     eps = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 8))
     x_t0 = add_noise(sched, x0, eps, jnp.zeros((2,), jnp.int32))
+    # atol absorbs fp32 rounding near zero-crossings (rel error blows up
+    # where the interpolant itself is ~1e-3)
     np.testing.assert_allclose(x_t0, np.sqrt(sched.alphas_bar[0]) * x0
-                               + np.sqrt(1 - sched.alphas_bar[0]) * eps, rtol=1e-4)
+                               + np.sqrt(1 - sched.alphas_bar[0]) * eps,
+                               rtol=1e-4, atol=1e-6)
 
 
 @pytest.mark.parametrize("name", ["ddim", "euler", "dpmpp_2m"])
