@@ -26,6 +26,7 @@ BENCHES = [
     ("fig7_negative", "benchmarks.bench_negative"),
     ("appB_pix2pix", "benchmarks.bench_pix2pix"),
     ("llm_ag", "benchmarks.bench_llm_ag"),
+    ("serving", "benchmarks.bench_serving"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

@@ -125,6 +125,31 @@ class GuidanceExecutor:
         crossed = crossed | (gamma > gamma_bar)
         return AGStep(eps=eps, gamma=gamma, crossed=crossed, nfes=nfes)
 
+    # -- lane-packed serving update (step-level continuous batching) --------
+
+    def lane_update(
+        self, eps_u, eps_c, scale, crossed, nfes, gamma_bar, active
+    ) -> AGStep:
+        """``ag_update`` for a fixed-capacity serving lane (DESIGN.md §7).
+
+        A lane is a bucketed batch of request *slots*; ``active`` (B,) bool
+        marks slots currently holding a live request.  Inactive slots run
+        through the packed network call (that is the price of a fixed
+        compiled shape) but must not touch the ledgers: they pay no NFEs and
+        never cross.  ``gamma_bar`` may be a scalar or a per-slot (B,) array
+        (requests can carry their own threshold).
+        """
+        eps_cfg, gamma = self.combine(eps_u, eps_c, scale)
+        eps = jnp.where(_bcast(crossed, eps_cfg), eps_c, eps_cfg)
+        nfes = nfes + jnp.where(active, jnp.where(crossed, 1.0, 2.0), 0.0)
+        crossed = crossed | (active & (gamma > gamma_bar))
+        return AGStep(eps=eps, gamma=gamma, crossed=crossed, nfes=nfes)
+
+    @staticmethod
+    def lane_ledger_cond(nfes, active):
+        """Conditional-lane ledger: +1 NFE per *active* slot."""
+        return nfes + jnp.where(active, 1.0, 0.0)
+
     # -- model-bound steps (diffusion sampling) -----------------------------
 
     def cfg_step(self, model, params, x, t, cond, neg_cond, scale):

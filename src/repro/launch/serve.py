@@ -3,6 +3,10 @@
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --requests 4 --max-new 16 --gamma-bar 0.95
+
+``--continuous`` serves the same requests through the step-level
+continuous batcher instead (staggered arrivals, per-request completion,
+AG lane migration, telemetry report; DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -28,6 +32,10 @@ def main():
     ap.add_argument("--gamma-bar", type=float, default=0.95)
     ap.add_argument("--load", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve via the step-level continuous batcher")
+    ap.add_argument("--arrival-stride", type=int, default=2,
+                    help="steps between request arrivals (--continuous)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,10 +46,8 @@ def main():
     if args.load:
         params = checkpoint.load(args.load, params)
 
-    eng = GuidedEngine(
-        api,
-        params,
-        EngineConfig(scale=args.scale, gamma_bar=args.gamma_bar, max_batch=args.requests),
+    ec = EngineConfig(
+        scale=args.scale, gamma_bar=args.gamma_bar, max_batch=args.requests
     )
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -51,6 +57,25 @@ def main():
         )
         for _ in range(args.requests)
     ]
+
+    if args.continuous:
+        from repro.serving import BatcherConfig, StepBatcher
+
+        bat = StepBatcher(api, params, ec, BatcherConfig(max_slots=args.requests))
+        for i, r in enumerate(reqs):
+            bat.submit(r, arrival_step=args.arrival_stride * i)
+        done = bat.run()
+        t = bat.report()["totals"]
+        print(f"[serve] {cfg.name}: {len(done)} requests via step batcher")
+        print(f"  NFEs saved vs always-CFG: {t['mean_savings_pct']:.1f}%")
+        print(f"  tokens/sec: {t['tokens_per_sec']:.1f}  "
+              f"step p50/p99: {t['step_latency_ms']['p50']:.1f}/"
+              f"{t['step_latency_ms']['p99']:.1f} ms")
+        print(f"  NFE ledger: device {t['nfes_device']:.0f} == "
+              f"expected {t['nfes_expected']:.0f}")
+        return
+
+    eng = GuidedEngine(api, params, ec)
     out = eng.generate(reqs)
     full_cfg_nfes = 2.0 * args.max_new
     print(f"[serve] {cfg.name}: {args.requests} requests, {args.max_new} new tokens each")

@@ -1,0 +1,24 @@
+"""Serving subsystem: guided decoding, continuous batching, telemetry.
+
+Layering (DESIGN.md §7):
+  guided_decode — the compiled step functions (whole-batch + lane-packed);
+  engine        — whole-batch oracle (`GuidedEngine`), prompt packing;
+  scheduler     — round-based baseline (`ContinuousScheduler`);
+  batcher       — step-level continuous batching (`StepBatcher`);
+  telemetry     — NFE ledgers, latency, realized savings (`ServingTelemetry`).
+"""
+from repro.serving.batcher import BatcherConfig, StepBatcher
+from repro.serving.engine import EngineConfig, GuidedEngine, Request, pad_prompts
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.telemetry import ServingTelemetry
+
+__all__ = [
+    "BatcherConfig",
+    "ContinuousScheduler",
+    "EngineConfig",
+    "GuidedEngine",
+    "Request",
+    "ServingTelemetry",
+    "StepBatcher",
+    "pad_prompts",
+]

@@ -1,0 +1,473 @@
+"""Step-level continuous batching with AG lane migration (DESIGN.md §7).
+
+The round-based ``ContinuousScheduler`` drains the queue in whole-batch
+generations: one slow-to-converge or long-budget request pins every batch
+member in the 2-NFE guided step until the round ends.  ``StepBatcher``
+replaces the round with a per-request, per-step lifecycle state machine
+over two *lanes*:
+
+* **guided lane** — uncrossed requests, packed into the compiled guided
+  step (cond/uncond pack, 2 NFEs per active slot);
+* **conditional lane** — requests past their gamma_bar crossing plus plain
+  (unguided) traffic, packed into the compiled conditional step (1 NFE per
+  active slot).
+
+Every decode step the batcher admits queued requests into freed slots,
+runs each non-empty lane once, streams tokens, completes requests on
+budget/EOS, and migrates freshly-crossed requests guided -> conditional by
+copying their slot row (token, position, conditional KV rows, NFE ledger)
+across lanes.  Lane capacities are *bucketed* (default powers of two), so
+each lane re-traces only when its occupancy outgrows the current bucket:
+exactly two step executables exist per bucket shape — asserted via
+``compile_counts`` in tests — and slot rows are reused in place (a fresh
+request's prefilled caches overwrite the completed tenant's rows, so no KV
+bleeds between tenants; also asserted in tests).
+
+Request lifecycle::
+
+    QUEUED -> ADMITTED(guided) --crossing--> MIGRATED(cond) -> DONE
+           \\-> ADMITTED(cond, plain request) ------------------^
+
+Telemetry (serving/telemetry.py) receives the full event stream; its
+ledger-conservation check (device NFEs == host-expected NFEs) holds across
+admission, migration, reuse and completion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import GuidanceExecutor
+from repro.serving.engine import EngineConfig, Request, pad_prompts
+from repro.serving.guided_decode import (
+    LaneState,
+    cond_lane_step,
+    guided_lane_step,
+)
+from repro.serving.telemetry import ServingTelemetry
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    """Knobs of the step-level batcher (engine knobs live in EngineConfig)."""
+
+    max_slots: int = 8  # total concurrently-active requests across lanes
+    # allowed lane batch shapes; None -> powers of two up to max_slots
+    buckets: Optional[Tuple[int, ...]] = None
+    # KV buffer length per slot; None -> inferred at first run() from the
+    # queued requests (max prompt_len + max_new_tokens + 1).
+    cache_len: Optional[int] = None
+    eos_token: Optional[int] = None
+
+    def __post_init__(self):
+        if self.buckets is None:
+            b = [1]
+            while b[-1] < self.max_slots:
+                b.append(b[-1] * 2)
+            self.buckets = tuple(b)
+        assert self.buckets == tuple(sorted(self.buckets))
+        assert max(self.buckets) >= self.max_slots, (
+            "largest lane bucket must fit max_slots so migration can never "
+            f"strand a request: {self.buckets} vs max_slots={self.max_slots}"
+        )
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    request: Request
+    arrival_step: int
+
+
+class _Lane:
+    """One fixed-capacity executor lane: device state + host slot map."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.capacity = 0
+        self.rids: List[Optional[int]] = []
+        self.state: Optional[LaneState] = None
+
+    @property
+    def active_count(self) -> int:
+        return sum(r is not None for r in self.rids)
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.rids):
+            if r is None:
+                return i
+        return None
+
+
+class StepBatcher:
+    """Step-level continuous batching over the two compiled lane steps."""
+
+    def __init__(
+        self,
+        api,
+        params,
+        config: EngineConfig,
+        batch_config: Optional[BatcherConfig] = None,
+        telemetry: Optional[ServingTelemetry] = None,
+        clock=time.perf_counter,
+    ):
+        self.api = api
+        self.params = params
+        self.config = config
+        self.bc = batch_config or BatcherConfig(max_slots=config.max_batch)
+        self.telemetry = telemetry or ServingTelemetry(clock=clock)
+        self.clock = clock
+        self.executor = GuidanceExecutor(backend=config.guidance_backend)
+        self.guided = _Lane("guided")
+        self.cond = _Lane("cond")
+        self.cache_len = self.bc.cache_len
+        self._pending: List[_Pending] = []
+        self._next_rid = 0
+        self._step_idx = 0
+        self._gen: Dict[int, List[int]] = {}  # rid -> emitted tokens
+        self._reqs: Dict[int, Request] = {}
+        self._host_crossed: Dict[int, bool] = {}
+        self.completed: Dict[int, dict] = {}
+        # capacity -> number of traces; the two-executables-per-bucket
+        # invariant is: every value here stays exactly 1.
+        self.compile_counts: Dict[str, Dict[int, int]] = {"guided": {}, "cond": {}}
+
+        def _traced_guided(params, state):
+            K = state.tokens.shape[0]
+            counts = self.compile_counts["guided"]
+            counts[K] = counts.get(K, 0) + 1  # runs at trace time only
+            return guided_lane_step(
+                api, params, state, scale=config.scale, executor=self.executor
+            )
+
+        def _traced_cond(params, state):
+            K = state.tokens.shape[0]
+            counts = self.compile_counts["cond"]
+            counts[K] = counts.get(K, 0) + 1
+            return cond_lane_step(api, params, state)
+
+        self._guided_step = jax.jit(_traced_guided)
+        self._cond_step = jax.jit(_traced_cond)
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, request: Request, arrival_step: int = 0) -> int:
+        """Queue a request; it becomes admissible at ``arrival_step`` (in
+        batcher decode steps — the unit of simulated churn)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(_Pending(rid, request, arrival_step))
+        self._reqs[rid] = request
+        self.telemetry.on_submit(
+            rid, len(request.prompt), request.max_new_tokens, request.guided,
+            step=self._step_idx,
+        )
+        return rid
+
+    # -- lane plumbing -------------------------------------------------------
+
+    def _bucket_for(self, need: int) -> int:
+        for b in self.bc.buckets:
+            if b >= need:
+                return b
+        raise AssertionError(f"no bucket fits {need} (buckets={self.bc.buckets})")
+
+    def _empty_state(self, capacity: int, guided: bool) -> LaneState:
+        z = lambda *s, dt=jnp.int32: jnp.zeros(s, dt)
+        return LaneState(
+            tokens=z(capacity, 1),
+            position=z(capacity),
+            caches_c=self.api.init_caches(capacity, self.cache_len),
+            caches_u=self.api.init_caches(capacity, self.cache_len) if guided else None,
+            crossed=z(capacity, dt=bool),
+            nfes=z(capacity, dt=jnp.float32),
+            active=z(capacity, dt=bool),
+            gamma_bar=jnp.ones((capacity,), jnp.float32),
+        )
+
+    def _grow(self, lane: _Lane, need: int):
+        """Grow a lane to the smallest bucket holding ``need`` slots; existing
+        rows are preserved, new rows start empty (inactive)."""
+        cap = self._bucket_for(need)
+        if cap <= lane.capacity:
+            return
+        fresh = self._empty_state(cap - lane.capacity, guided=lane is self.guided)
+        if lane.state is None:
+            lane.state = fresh
+        else:
+            s = lane.state
+            cat0 = lambda o, n: jnp.concatenate([o, n], axis=0)
+            # KV-cache leaves carry the slot axis at 1 (axis 0 is the scan-
+            # period stack), everything else at 0 — same convention as the
+            # engine's cond/uncond concat.
+            cat_caches = lambda o, n: jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=1), o, n
+            )
+            lane.state = LaneState(
+                tokens=cat0(s.tokens, fresh.tokens),
+                position=cat0(s.position, fresh.position),
+                caches_c=cat_caches(s.caches_c, fresh.caches_c),
+                caches_u=(
+                    cat_caches(s.caches_u, fresh.caches_u)
+                    if s.caches_u is not None
+                    else None
+                ),
+                crossed=cat0(s.crossed, fresh.crossed),
+                nfes=cat0(s.nfes, fresh.nfes),
+                active=cat0(s.active, fresh.active),
+                gamma_bar=cat0(s.gamma_bar, fresh.gamma_bar),
+            )
+        lane.rids = lane.rids + [None] * (cap - lane.capacity)
+        lane.capacity = cap
+
+    def _take_slot(self, lane: _Lane) -> Optional[int]:
+        slot = lane.free_slot()
+        if slot is None and lane.capacity < max(self.bc.buckets):
+            self._grow(lane, lane.capacity + 1)
+            slot = lane.free_slot()
+        return slot
+
+    @property
+    def total_active(self) -> int:
+        return self.guided.active_count + self.cond.active_count
+
+    # -- admission -----------------------------------------------------------
+
+    def _ensure_cache_len(self):
+        if self.cache_len is None:
+            assert self._pending, "cache_len unset and no requests queued"
+            self.cache_len = max(
+                len(p.request.prompt) + p.request.max_new_tokens + 1
+                for p in self._pending
+            )
+
+    def _admit_pending(self):
+        admitted = []
+        for p in self._pending:
+            if p.arrival_step > self._step_idx or self.total_active >= self.bc.max_slots:
+                continue
+            req = p.request
+            assert len(req.prompt) + req.max_new_tokens + 1 <= self.cache_len, (
+                f"request {p.rid} does not fit cache_len={self.cache_len}"
+            )
+            lane = self.guided if req.guided else self.cond
+            slot = self._take_slot(lane)
+            if slot is None:
+                continue
+            self._admit(p.rid, req, lane, slot)
+            admitted.append(p)
+        for p in admitted:
+            self._pending.remove(p)
+
+    def _admit(self, rid: int, req: Request, lane: _Lane, slot: int):
+        """Prefill at the request's own prompt length and overwrite the slot
+        row wholesale — full-row overwrite is what makes slot reuse safe
+        (no KV bleed from the previous tenant)."""
+        toks_c, S = pad_prompts([req], use_negative=False)
+        logits_c, ext_c = self.api.forward(
+            self.params, {"tokens": toks_c}, mode="prefill", cache_len=self.cache_len
+        )
+        first = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        st = lane.state
+        caches_c = _set_row(st.caches_c, slot, ext_c["caches"])
+        caches_u = st.caches_u
+        if lane is self.guided:
+            toks_u, _ = pad_prompts([req], use_negative=True)
+            _, ext_u = self.api.forward(
+                self.params, {"tokens": toks_u}, mode="prefill",
+                cache_len=self.cache_len,
+            )
+            caches_u = _set_row(st.caches_u, slot, ext_u["caches"])
+        gb = self.config.gamma_bar if req.gamma_bar is None else req.gamma_bar
+        lane.state = LaneState(
+            tokens=st.tokens.at[slot].set(first[0]),
+            position=st.position.at[slot].set(S),
+            caches_c=caches_c,
+            caches_u=caches_u,
+            crossed=st.crossed.at[slot].set(lane is self.cond),
+            nfes=st.nfes.at[slot].set(0.0),
+            active=st.active.at[slot].set(True),
+            gamma_bar=st.gamma_bar.at[slot].set(gb),
+        )
+        lane.rids[slot] = rid
+        self._gen[rid] = [int(np.asarray(first)[0, 0])]
+        self._host_crossed[rid] = lane is self.cond
+        self.telemetry.on_admit(rid, self._step_idx)
+        # degenerate budget: the prefill token alone satisfies it
+        self._maybe_complete(rid, lane, slot, float(0.0))
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def _maybe_complete(self, rid, lane, slot, nfes) -> bool:
+        gen = self._gen[rid]
+        req = self._reqs[rid]
+        eos = self.bc.eos_token
+        done_budget = len(gen) >= req.max_new_tokens
+        done_eos = eos is not None and gen[-1] == eos
+        if not (done_budget or done_eos):
+            return False
+        lane.rids[slot] = None
+        lane.state = lane.state._replace(active=lane.state.active.at[slot].set(False))
+        self.completed[rid] = {
+            "tokens": np.asarray(gen, np.int32),
+            "nfes": float(nfes),
+            "guided_steps": int(round(nfes - (len(gen) - 1))) if req.guided else 0,
+        }
+        self.telemetry.on_complete(
+            rid, self._step_idx, nfes, len(gen),
+            reason="eos" if done_eos and not done_budget else "budget",
+        )
+        return True
+
+    def _migrate(self, rid: int, g_slot: int):
+        """Move a freshly-crossed request guided -> conditional: copy its
+        post-step row (token, position, cond KV, ledger) into a cond slot."""
+        c_slot = self._take_slot(self.cond)
+        if c_slot is None:  # cond lane saturated: defer (stays correct, 1 NFE
+            return  # on device either way; retried next step)
+        gs, cs = self.guided.state, self.cond.state
+        self.cond.state = LaneState(
+            tokens=cs.tokens.at[c_slot].set(gs.tokens[g_slot]),
+            position=cs.position.at[c_slot].set(gs.position[g_slot]),
+            caches_c=jax.tree.map(
+                lambda dst, src: dst.at[:, c_slot].set(src[:, g_slot]),
+                cs.caches_c,
+                gs.caches_c,
+            ),
+            caches_u=None,
+            crossed=cs.crossed.at[c_slot].set(True),
+            nfes=cs.nfes.at[c_slot].set(gs.nfes[g_slot]),
+            active=cs.active.at[c_slot].set(True),
+            gamma_bar=cs.gamma_bar.at[c_slot].set(gs.gamma_bar[g_slot]),
+        )
+        self.guided.state = gs._replace(active=gs.active.at[g_slot].set(False))
+        self.guided.rids[g_slot] = None
+        self.cond.rids[c_slot] = rid
+        self.telemetry.on_migrate(rid, self._step_idx)
+
+    # -- the decode step -----------------------------------------------------
+
+    def step(self) -> bool:
+        """One batcher step: admit, run non-empty lanes, stream/complete/
+        migrate.  Returns True while there is (or will be) work."""
+        if not self._pending and self.total_active == 0:
+            return False
+        self._ensure_cache_len()
+        t0 = self.clock()
+        self._admit_pending()
+
+        # host-mirror of the device ledger rule, *before* the step runs
+        expected = sum(
+            1.0 if self._host_crossed[r] else 2.0
+            for r in self.guided.rids
+            if r is not None
+        ) + 1.0 * self.cond.active_count
+        g_active = self.guided.active_count
+        g_uncrossed = sum(
+            1
+            for r in self.guided.rids
+            if r is not None and not self._host_crossed[r]
+        )
+        c_active = self.cond.active_count
+
+        ran = False
+        if g_active:
+            _, self.guided.state, _ = self._guided_step(self.params, self.guided.state)
+            ran = True
+        if c_active:
+            _, self.cond.state = self._cond_step(self.params, self.cond.state)
+            ran = True
+
+        if ran:
+            fetched = jax.device_get(
+                {
+                    "g": (
+                        self.guided.state.tokens,
+                        self.guided.state.crossed,
+                        self.guided.state.nfes,
+                    )
+                    if g_active
+                    else None,
+                    "c": (self.cond.state.tokens, self.cond.state.nfes)
+                    if c_active
+                    else None,
+                }
+            )
+            dt = self.clock() - t0
+            self._postprocess(fetched)
+            self.telemetry.on_step(
+                self._step_idx,
+                guided_active=g_active,
+                guided_uncrossed=g_uncrossed,
+                guided_capacity=self.guided.capacity,
+                cond_active=c_active,
+                cond_capacity=self.cond.capacity,
+                dt_s=dt,
+                nfes_expected=expected,
+            )
+        self._step_idx += 1
+        return True
+
+    def _postprocess(self, fetched):
+        # Snapshot the slot maps as they were when the step ran: migrations
+        # below may hand a freed cond slot to a guided request, and that new
+        # tenant must not consume the old tenant's fetched token.
+        g_rids = list(self.guided.rids)
+        c_rids = list(self.cond.rids)
+        if fetched["c"] is not None:
+            toks, nfes = fetched["c"]
+            for slot, rid in enumerate(c_rids):
+                if rid is None:
+                    continue
+                self._gen[rid].append(int(toks[slot, 0]))
+                self._maybe_complete(rid, self.cond, slot, float(nfes[slot]))
+        if fetched["g"] is not None:
+            toks, crossed, nfes = fetched["g"]
+            for slot, rid in enumerate(g_rids):
+                if rid is None:
+                    continue
+                self._gen[rid].append(int(toks[slot, 0]))
+                # record crossing before the completion check so a request
+                # that crosses on its final decode step is still telemetered
+                if bool(crossed[slot]) and not self._host_crossed[rid]:
+                    self._host_crossed[rid] = True
+                    self.telemetry.on_cross(rid, self._step_idx)
+                if self._maybe_complete(rid, self.guided, slot, float(nfes[slot])):
+                    continue
+                if self._host_crossed[rid]:
+                    self._migrate(rid, slot)
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, dict]:
+        """Drive steps until every submitted request has completed."""
+        steps = 0
+        while self.step() and steps < max_steps:
+            steps += 1
+        return self.completed
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        rep = self.telemetry.report(compile_counts=self.compile_counts)
+        t = rep["totals"]
+        return {
+            "requests": t["num_completed"],
+            "mean_nfes": (
+                t["nfes_device"] / t["num_completed"] if t["num_completed"] else 0.0
+            ),
+            "mean_savings_pct": t["mean_savings_pct"],
+        }
+
+    def report(self) -> dict:
+        return self.telemetry.report(compile_counts=self.compile_counts)
+
+
+def _set_row(dst_caches, slot, src_caches):
+    """Write a prefilled B=1 cache row into lane caches at ``slot``."""
+    return jax.tree.map(
+        lambda dst, src: dst.at[:, slot].set(src[:, 0]), dst_caches, src_caches
+    )

@@ -7,11 +7,16 @@ runs the packed CFG step (2 NFEs for guided requests); once every request
 has crossed gamma_bar it switches to the conditional-only step (1 NFE).
 Per-request NFE ledgers are returned — the serving-side equivalent of the
 paper's Table 1 accounting.
+
+The engine is the whole-batch oracle; `serving/batcher.py` is the
+step-level continuous-batching subsystem that reuses the same prompt
+packing (``pad_prompts``) and must match this engine token-for-token at
+B=1 (asserted in tests/test_batcher.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +35,15 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
     negative_prompt: Optional[np.ndarray] = None  # uncond-branch context
+    # Per-request crossing threshold; None -> the engine/batcher config's
+    # gamma_bar.  Lets a single batch mix eager-truncating and never-
+    # truncating requests (e.g. quality-pinned traffic).
+    gamma_bar: Optional[float] = None
+    # guided=False requests skip CFG entirely: no uncond branch, 1 NFE/step
+    # from the first token (the batcher places them straight in the
+    # conditional lane; the engine treats them as scale-irrelevant only via
+    # the batcher — engine batches are always guided).
+    guided: bool = True
 
 
 @dataclasses.dataclass
@@ -41,6 +55,45 @@ class EngineConfig:
     # guidance-epilogue backend (core/executor.py): "auto" follows
     # perf_flags.fused_guidance; "fused"/"reference" force one.
     guidance_backend: str = "auto"
+    # How often generate() polls the device-side `crossed` ledger to switch
+    # from the guided to the conditional executable.  The poll is the only
+    # per-step device->host sync in the decode loop; because a crossed
+    # request already takes the conditional logits (and pays 1 NFE) inside
+    # the guided step, polling late changes neither tokens nor the NFE
+    # ledger — only how soon the cheaper executable is dispatched.
+    crossing_poll_stride: int = 1
+
+
+def pad_prompts(
+    requests: Sequence[Request], *, use_negative: bool
+) -> Tuple[jnp.ndarray, int]:
+    """Pack one guidance branch's contexts into a right-aligned (B, S) batch.
+
+    S is the longest *conditional* prompt; both branches share the window so
+    the two prefills produce caches with identical shapes/positions.
+
+    Two explicit paths per request:
+      * conditional branch  -> the prompt itself;
+      * unconditional branch -> the negative prompt when given, else a
+        context-free BOS-only context (the request's first token), i.e. the
+        LM analogue of the paper's null condition.
+    """
+    S = max(len(r.prompt) for r in requests)
+    toks = np.zeros((len(requests), S), np.int32)
+    for i, r in enumerate(requests):
+        if not use_negative:
+            src = r.prompt
+        elif r.negative_prompt is not None:
+            src = r.negative_prompt
+        else:
+            src = r.prompt[:1]  # BOS-only: context-free uncond branch
+        assert len(src) <= S, (
+            f"request {i}: context of length {len(src)} exceeds the batch "
+            f"window S={S} (negative prompts must not outgrow the longest "
+            f"conditional prompt)"
+        )
+        toks[i, S - len(src):] = src
+    return jnp.asarray(toks), S
 
 
 class GuidedEngine:
@@ -52,37 +105,27 @@ class GuidedEngine:
         self.config = config
         self.executor = GuidanceExecutor(backend=config.guidance_backend)
         self._guided_step = jax.jit(
-            lambda p, s: guided_decode_step(
-                api, p, s, scale=config.scale, gamma_bar=config.gamma_bar,
+            lambda p, s, gb: guided_decode_step(
+                api, p, s, scale=config.scale, gamma_bar=gb,
                 executor=self.executor,
             )
         )
         self._cond_step = jax.jit(lambda p, s: cond_decode_step(api, p, s))
 
     def _pad_prompts(self, requests: Sequence[Request], use_negative: bool):
-        S = max(len(r.prompt) for r in requests)
-        B = len(requests)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(requests):
-            src = (
-                r.negative_prompt
-                if use_negative and r.negative_prompt is not None
-                else (r.prompt if not use_negative else r.prompt[:1])
-            )
-            # uncond branch without a negative prompt: context-free (BOS only)
-            toks[i, -len(src) :] = src if not use_negative else src
-            if use_negative and r.negative_prompt is None:
-                toks[i] = 0
-                toks[i, -1] = r.prompt[0]
-        return jnp.asarray(toks), S
+        return pad_prompts(requests, use_negative=use_negative)
 
     def generate(self, requests: Sequence[Request]):
         cfgc = self.config
         B = len(requests)
         assert B <= cfgc.max_batch
         max_new = max(r.max_new_tokens for r in requests)
-        toks_c, S = self._pad_prompts(requests, use_negative=False)
-        toks_u, _ = self._pad_prompts(requests, use_negative=True)
+        toks_c, S = pad_prompts(requests, use_negative=False)
+        toks_u, _ = pad_prompts(requests, use_negative=True)
+        gamma_bar = jnp.asarray(
+            [cfgc.gamma_bar if r.gamma_bar is None else r.gamma_bar for r in requests],
+            jnp.float32,
+        )
         cache_len = S + max_new + 1
 
         logits_c, ext_c = self.api.forward(
@@ -104,18 +147,33 @@ class GuidedEngine:
         out = [first]
         gammas = []
         guided_steps = 0
+        # The crossed poll is the decode loop's only blocking device->host
+        # transfer; stride amortizes it (tokens/NFEs provably unchanged —
+        # see EngineConfig.crossing_poll_stride and tests).
+        stride = max(1, cfgc.crossing_poll_stride)
+        all_crossed = False
         for step in range(max_new - 1):
-            if not bool(jnp.all(state.crossed)):
-                nxt, state, gamma = self._guided_step(self.params, state)
-                gammas.append(np.asarray(gamma))
+            if not all_crossed and step % stride == 0:
+                all_crossed = bool(jnp.all(state.crossed))
+            if not all_crossed:
+                nxt, state, gamma = self._guided_step(self.params, state, gamma_bar)
+                gammas.append(gamma)  # device array; materialized once at the end
                 guided_steps += 1
             else:
                 nxt, state = self._cond_step(self.params, state)
             out.append(nxt)
         tokens = jnp.concatenate(out, axis=1)
+        nfes = np.asarray(state.nfes)
+        # Per-request 2-NFE steps: each of the (max_new - 1) decode steps
+        # costs 2 while the request is uncrossed, 1 after, so
+        # nfes_i = (max_new - 1) + guided_steps_i.
+        per_req_guided = np.maximum(nfes - (max_new - 1), 0.0).astype(np.int64)
         return {
             "tokens": np.asarray(tokens),
-            "nfes": np.asarray(state.nfes),
+            "nfes": nfes,
             "guided_steps": guided_steps,
-            "gammas": np.asarray(gammas) if gammas else np.zeros((0, B)),
+            "guided_steps_per_request": per_req_guided,
+            "gammas": (
+                np.asarray(jnp.stack(gammas)) if gammas else np.zeros((0, B))
+            ),
         }

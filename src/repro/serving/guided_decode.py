@@ -40,6 +40,23 @@ class GuidedState(NamedTuple):
     nfes: jnp.ndarray  # (B,) float32
 
 
+def _packed_cfg_eval(api, params, tokens, position, caches_c, caches_u):
+    """One [2B] network call on the cond/uncond pack (DESIGN.md §3): cond
+    rows first, uncond rows second; cache trees carry the batch at axis 1.
+    Returns (logits_c, logits_u, new_caches_c, new_caches_u) — the single
+    pack convention shared by the whole-batch and lane-packed steps."""
+    B = tokens.shape[0]
+    tok2 = jnp.concatenate([tokens, tokens], axis=0)
+    pos2 = jnp.concatenate([position, position], axis=0)
+    caches2 = jax.tree.map(
+        lambda c, u: jnp.concatenate([c, u], axis=1), caches_c, caches_u
+    )
+    logits2, new_caches2 = api.decode_step(params, tok2, caches2, pos2)
+    new_c = jax.tree.map(lambda x: x[:, :B], new_caches2)
+    new_u = jax.tree.map(lambda x: x[:, B:], new_caches2)
+    return logits2[:B], logits2[B:], new_c, new_u
+
+
 def guided_decode_step(
     api, params, state: GuidedState, *, scale: float, gamma_bar: float,
     greedy: bool = True, key=None, executor: Optional[GuidanceExecutor] = None,
@@ -52,16 +69,9 @@ def guided_decode_step(
     (Eq. 3 in logit space).  Returns (next_token, new_state, gamma).
     """
     executor = get_executor(executor)
-    B = state.tokens.shape[0]
-    tok2 = jnp.concatenate([state.tokens, state.tokens], axis=0)
-    pos2 = jnp.concatenate([state.position, state.position], axis=0)
-    caches2 = jax.tree.map(
-        lambda c, u: jnp.concatenate([c, u], axis=1), state.caches_c, state.caches_u
+    logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
+        api, params, state.tokens, state.position, state.caches_c, state.caches_u
     )
-    logits2, new_caches2 = api.decode_step(params, tok2, caches2, pos2)
-    logits_c, logits_u = logits2[:B], logits2[B:]
-    new_c = jax.tree.map(lambda x: x[:, :B], new_caches2)
-    new_u = jax.tree.map(lambda x: x[:, B:], new_caches2)
 
     res = executor.ag_update(
         logits_u, logits_c, scale, state.crossed, state.nfes, gamma_bar
@@ -97,6 +107,71 @@ def cond_decode_step(api, params, state: GuidedState, *, greedy: bool = True, ke
         crossed=state.crossed,
         nfes=state.nfes + 1.0,
     )
+
+
+# ---------------------------------------------------------------------------
+# lane-packed steps (step-level continuous batching, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+class LaneState(NamedTuple):
+    """Fixed-capacity slot state for one serving lane (a pytree).
+
+    The batch axis is *slot capacity*, a bucketed shape chosen by the
+    batcher; ``active`` marks slots holding live requests.  The conditional
+    lane carries ``caches_u=None`` (None is an empty pytree node, so the
+    same NamedTuple jits for both lanes).  ``gamma_bar`` is per-slot: a
+    request can carry its own crossing threshold.
+    """
+
+    tokens: jnp.ndarray  # (K, 1) last token per slot
+    position: jnp.ndarray  # (K,)
+    caches_c: object
+    caches_u: object  # None in the conditional lane
+    crossed: jnp.ndarray  # (K,) bool
+    nfes: jnp.ndarray  # (K,) float32
+    active: jnp.ndarray  # (K,) bool
+    gamma_bar: jnp.ndarray  # (K,) float32
+
+
+def guided_lane_step(
+    api, params, state: LaneState, *, scale: float,
+    executor: Optional[GuidanceExecutor] = None,
+):
+    """One guided-lane step: 2 NFEs per active slot, per-slot AG crossing.
+
+    Same cond/uncond pack as ``guided_decode_step`` but over slot capacity;
+    the epilogue is the executor's active-masked ``lane_update`` (inactive
+    slots pay no NFEs and never cross).  Returns (next, new_state, gamma).
+    """
+    executor = get_executor(executor)
+    logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
+        api, params, state.tokens, state.position, state.caches_c, state.caches_u
+    )
+    res = executor.lane_update(
+        logits_u, logits_c, scale, state.crossed, state.nfes,
+        state.gamma_bar, state.active,
+    )
+    nxt = _select(res.eps, True, None)
+    new_state = state._replace(
+        tokens=nxt, position=state.position + 1, caches_c=new_c, caches_u=new_u,
+        crossed=res.crossed, nfes=res.nfes,
+    )
+    return nxt, new_state, res.gamma
+
+
+def cond_lane_step(api, params, state: LaneState):
+    """One conditional-lane step: 1 NFE per active slot (the AG tail and
+    plain unguided traffic).  Returns (next, new_state)."""
+    logits, new_c = api.decode_step(
+        params, state.tokens, state.caches_c, state.position
+    )
+    nxt = _select(logits, True, None)
+    new_state = state._replace(
+        tokens=nxt, position=state.position + 1, caches_c=new_c,
+        nfes=GuidanceExecutor.lane_ledger_cond(state.nfes, state.active),
+    )
+    return nxt, new_state
 
 
 def _select(logits, greedy, key):

@@ -1,39 +1,27 @@
-"""Continuous-batching scheduler for the guided engine.
+"""Round-based continuous-batching scheduler for the guided engine.
 
 Requests arrive in a queue; the scheduler packs up to ``max_batch`` active
-requests per decode round, admits new requests when slots free up
-(completion = generation budget reached), and tracks each request's AG
-state: a request decodes in the *guided* bucket (2 NFEs/step) until its
-gamma crosses gamma_bar, then migrates to the *conditional* bucket
-(1 NFE/step).  The engine's two compiled step functions are reused; a step
-runs the guided bucket iff it is non-empty — so a fleet of mostly-crossed
-requests pays ~1 NFE/step, the serving-side realization of the paper's
-saving under churn.
+requests per decode *round* (one whole-batch ``GuidedEngine.generate``
+call), admitting new requests only when a round completes.  Within a round
+each request still migrates guided -> conditional at its own gamma_bar
+crossing (the engine's per-request ledger), but the batch runs to the
+*longest* member's budget: short-budget requests keep paying 1-2 NFEs per
+step until the round ends, and queued requests wait for whole rounds.
 
-This is a single-host synchronous model of continuous batching (the TPU
-analogue would drive the same two executables from the coordinator); it
-exists so the AG bucket dynamics are testable end to end.
+``serving/batcher.py`` is the step-level replacement (admission into freed
+slots every decode step, lane migration, per-request completion); this
+round-based scheduler is kept as the baseline the batcher is benchmarked
+against (benchmarks/bench_serving.py) — its realized savings are a strict
+lower bound on the batcher's under mixed budgets or staggered arrivals.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import EngineConfig, GuidedEngine, Request
-
-
-@dataclasses.dataclass
-class _Active:
-    rid: int
-    request: Request
-    generated: list
-    crossed: bool = False
-    nfes: float = 0.0
 
 
 class ContinuousScheduler:
@@ -42,11 +30,15 @@ class ContinuousScheduler:
     def __init__(self, api, params, config: EngineConfig):
         self.engine = GuidedEngine(api, params, config)
         self.config = config
-        self.queue: Deque[Request] = deque()
+        self.queue: Deque[Tuple[int, Request]] = deque()
         self._next_rid = 0
         self.completed: Dict[int, dict] = {}
 
     def submit(self, request: Request) -> int:
+        assert request.guided, (
+            "ContinuousScheduler rounds are always guided (engine batches "
+            "pay the CFG pack); route plain traffic through StepBatcher"
+        )
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append((rid, request))
@@ -58,17 +50,21 @@ class ContinuousScheduler:
         moves to the conditional step once every member crossed)."""
         rounds = 0
         while self.queue and rounds < max_rounds:
-            batch: List[tuple] = []
+            batch: List[Tuple[int, Request]] = []
             while self.queue and len(batch) < self.config.max_batch:
                 batch.append(self.queue.popleft())
             rids = [rid for rid, _ in batch]
             reqs = [r for _, r in batch]
             out = self.engine.generate(reqs)
             for i, rid in enumerate(rids):
+                # tokens beyond the request's own budget are round padding
+                # (the batch ran to the longest member); the NFEs spent on
+                # them are real, so the ledger keeps them — that is the
+                # realized cost of round-based scheduling.
                 self.completed[rid] = {
-                    "tokens": out["tokens"][i],
+                    "tokens": out["tokens"][i, : reqs[i].max_new_tokens],
                     "nfes": float(out["nfes"][i]),
-                    "guided_steps": out["guided_steps"],
+                    "guided_steps": int(out["guided_steps_per_request"][i]),
                 }
             rounds += 1
         return self.completed

@@ -1,0 +1,192 @@
+"""Serving telemetry: NFE ledgers, throughput, latency, realized savings.
+
+The step-level batcher (serving/batcher.py) emits one event stream:
+request lifecycle (submit -> admit -> [cross -> migrate] -> complete) plus
+one record per decode step with lane occupancy and wall time.  This module
+turns that stream into the serving-side Table-1 accounting:
+
+* a per-request NFE ledger and realized savings vs. the always-CFG
+  baseline (2 NFEs x (tokens - 1), the price the request would have paid
+  had it never crossed gamma_bar);
+* a host-side *expected* NFE counter mirroring the device ledger rule
+  (+2 per active uncrossed guided slot, +1 per active crossed/conditional
+  slot).  ``report()["totals"]["nfes_device"]`` must equal
+  ``["nfes_expected"]`` — the ledger-conservation invariant (DESIGN.md §7)
+  that catches lost or double-counted slots across migration and reuse;
+* tokens/sec and step-latency percentiles (p50/p90/p99) over the run.
+
+``to_json`` writes the report for ``benchmarks/bench_serving.py``; the
+clock is injectable so tests can assert on timing fields deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    guided: bool
+    submit_step: int = 0
+    admit_step: Optional[int] = None
+    crossed_step: Optional[int] = None  # batcher step at which AG truncated
+    migrated_step: Optional[int] = None
+    complete_step: Optional[int] = None
+    tokens_out: int = 0
+    nfes: float = 0.0  # device ledger at completion (decode NFEs)
+    reason: str = ""  # "budget" | "eos"
+
+    @property
+    def baseline_nfes(self) -> float:
+        """Always-CFG price: 2 NFEs per decode step (guided requests)."""
+        steps = max(self.tokens_out - 1, 0)
+        return (2.0 if self.guided else 1.0) * steps
+
+    @property
+    def savings_pct(self) -> float:
+        base = self.baseline_nfes
+        return 100.0 * (1.0 - self.nfes / base) if base > 0 else 0.0
+
+
+class ServingTelemetry:
+    """Event sink + report builder for one batcher run."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.requests: Dict[int, RequestRecord] = {}
+        self.step_latency_s: List[float] = []
+        self.step_occupancy: List[dict] = []
+        self.nfes_expected: float = 0.0
+        self._t_start: Optional[float] = None
+        self._t_end: Optional[float] = None
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def on_submit(self, rid, prompt_len, max_new_tokens, guided, step=0):
+        self.requests[rid] = RequestRecord(
+            rid=rid, prompt_len=int(prompt_len),
+            max_new_tokens=int(max_new_tokens), guided=bool(guided),
+            submit_step=int(step),
+        )
+
+    def on_admit(self, rid, step):
+        self.requests[rid].admit_step = int(step)
+
+    def on_cross(self, rid, step):
+        if self.requests[rid].crossed_step is None:
+            self.requests[rid].crossed_step = int(step)
+
+    def on_migrate(self, rid, step):
+        self.requests[rid].migrated_step = int(step)
+
+    def on_complete(self, rid, step, nfes, tokens_out, reason="budget"):
+        r = self.requests[rid]
+        r.complete_step = int(step)
+        r.nfes = float(nfes)
+        r.tokens_out = int(tokens_out)
+        r.reason = reason
+
+    # -- per-step accounting --------------------------------------------------
+
+    def on_step(
+        self, step, *, guided_active, guided_uncrossed, guided_capacity,
+        cond_active, cond_capacity, dt_s, nfes_expected,
+    ):
+        """One decode step.  ``nfes_expected`` is the host-mirror increment:
+        2*guided_uncrossed + 1*(guided_active - guided_uncrossed) + cond_active."""
+        if self._t_start is None:
+            self._t_start = self.clock() - dt_s
+        self._t_end = self.clock()
+        self.step_latency_s.append(float(dt_s))
+        self.nfes_expected += float(nfes_expected)
+        self.step_occupancy.append(
+            {
+                "step": int(step),
+                "guided_active": int(guided_active),
+                "guided_capacity": int(guided_capacity),
+                "cond_active": int(cond_active),
+                "cond_capacity": int(cond_capacity),
+            }
+        )
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self, *, compile_counts: Optional[dict] = None) -> dict:
+        recs = list(self.requests.values())
+        done = [r for r in recs if r.complete_step is not None]
+        guided_done = [r for r in done if r.guided]
+        lat = np.asarray(self.step_latency_s, np.float64)
+        wall = (
+            (self._t_end - self._t_start)
+            if (self._t_start is not None and self._t_end is not None)
+            else 0.0
+        )
+        tokens_total = sum(r.tokens_out for r in done)
+        nfes_total = sum(r.nfes for r in done)
+        base_total = sum(r.baseline_nfes for r in guided_done)
+        occ = self.step_occupancy
+        cap = [o["guided_capacity"] + o["cond_capacity"] for o in occ]
+        act = [o["guided_active"] + o["cond_active"] for o in occ]
+        return {
+            "requests": {
+                str(r.rid): {
+                    "prompt_len": r.prompt_len,
+                    "max_new_tokens": r.max_new_tokens,
+                    "guided": r.guided,
+                    "submit_step": r.submit_step,
+                    "admit_step": r.admit_step,
+                    "crossed_step": r.crossed_step,
+                    "migrated_step": r.migrated_step,
+                    "complete_step": r.complete_step,
+                    "tokens_out": r.tokens_out,
+                    "nfes": r.nfes,
+                    "baseline_nfes": r.baseline_nfes,
+                    "savings_pct": r.savings_pct,
+                    "reason": r.reason,
+                }
+                for r in recs
+            },
+            "totals": {
+                "num_requests": len(recs),
+                "num_completed": len(done),
+                "decode_steps": len(self.step_latency_s),
+                "tokens_out": tokens_total,
+                "nfes_device": nfes_total,
+                "nfes_expected": self.nfes_expected,
+                "baseline_nfes": base_total,
+                "mean_savings_pct": (
+                    100.0 * (1.0 - nfes_total_guided(guided_done) / base_total)
+                    if base_total > 0
+                    else 0.0
+                ),
+                "wall_time_s": wall,
+                "tokens_per_sec": tokens_total / wall if wall > 0 else 0.0,
+                "step_latency_ms": {
+                    "mean": float(lat.mean() * 1e3) if lat.size else 0.0,
+                    "p50": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
+                    "p90": float(np.percentile(lat, 90) * 1e3) if lat.size else 0.0,
+                    "p99": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
+                },
+                "mean_occupancy": float(np.mean(np.asarray(act) / np.maximum(cap, 1)))
+                if occ
+                else 0.0,
+            },
+            "compile_counts": compile_counts or {},
+        }
+
+    def to_json(self, path: str, *, compile_counts: Optional[dict] = None) -> dict:
+        rep = self.report(compile_counts=compile_counts)
+        with open(path, "w") as f:
+            json.dump(rep, f, indent=2, sort_keys=True)
+        return rep
+
+
+def nfes_total_guided(guided_done) -> float:
+    return sum(r.nfes for r in guided_done)

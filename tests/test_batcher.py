@@ -1,0 +1,215 @@
+"""Step-level continuous batching: churn, lane migration, slot reuse,
+compile-count and NFE-ledger-conservation invariants (DESIGN.md §7)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serving import (
+    BatcherConfig,
+    ContinuousScheduler,
+    EngineConfig,
+    GuidedEngine,
+    Request,
+    StepBatcher,
+)
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_config("llama3.2-1b").reduced()
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def churn_run(llama):
+    """One churn workload shared by several asserts: late arrivals joining
+    mid-flight, mixed budgets, a negative prompt, a plain (unguided)
+    request, and one request that never crosses gamma_bar."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(1)
+    ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=4)
+    reqs = [
+        Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=10),
+        Request(
+            prompt=_prompt(rng, cfg, 5),
+            max_new_tokens=14,
+            negative_prompt=_prompt(rng, cfg, 3),
+        ),
+        Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=6, gamma_bar=2.0),
+        Request(prompt=_prompt(rng, cfg, 5), max_new_tokens=5, guided=False),
+        Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=8),  # late arrival
+    ]
+    arrivals = [0, 0, 1, 3, 6]
+    bat = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=4, buckets=(1, 2, 4))
+    )
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, arrivals)]
+    done = bat.run()
+    return ec, reqs, rids, bat, done
+
+
+def test_churn_completes_all_with_own_budgets(churn_run):
+    ec, reqs, rids, bat, done = churn_run
+    assert set(done) == set(rids)
+    for r, rid in zip(reqs, rids):
+        assert len(done[rid]["tokens"]) == r.max_new_tokens
+
+
+def test_churn_b1_parity_with_engine(llama, churn_run):
+    """Acceptance: per-request token outputs identical to GuidedEngine at
+    B=1 — late arrival, mid-flight join, lane migration and the
+    never-crossing request included."""
+    cfg, api, params = llama
+    ec, reqs, rids, bat, done = churn_run
+    for r, rid in zip(reqs, rids):
+        if not r.guided:
+            continue
+        oracle = GuidedEngine(api, params, ec).generate([r])["tokens"][0]
+        np.testing.assert_array_equal(done[rid]["tokens"], oracle)
+
+
+def test_plain_request_equals_scale_one_engine(llama, churn_run):
+    """An unguided request decodes exactly like logit-space CFG at s=1
+    (Eq. 3 with s=1 is the conditional branch) — at 1 NFE/step."""
+    cfg, api, params = llama
+    ec, reqs, rids, bat, done = churn_run
+    (i,) = [i for i, r in enumerate(reqs) if not r.guided]
+    r = reqs[i]
+    eng = GuidedEngine(
+        api, params, EngineConfig(scale=1.0, gamma_bar=2.0, max_batch=1)
+    )
+    oracle = eng.generate([Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens)])
+    np.testing.assert_array_equal(done[rids[i]]["tokens"], oracle["tokens"][0])
+    assert done[rids[i]]["nfes"] == r.max_new_tokens - 1  # 1 NFE/step
+
+
+def test_never_crossing_request_stays_guided(churn_run):
+    ec, reqs, rids, bat, done = churn_run
+    (i,) = [i for i, r in enumerate(reqs) if r.gamma_bar is not None]
+    rec = bat.report()["requests"][str(rids[i])]
+    assert rec["crossed_step"] is None and rec["migrated_step"] is None
+    # paid the full 2-NFE price every decode step
+    assert done[rids[i]]["nfes"] == 2 * (reqs[i].max_new_tokens - 1)
+
+
+def test_two_executables_per_bucket_shape(churn_run):
+    """Acceptance: exactly two step executables compiled per bucket shape —
+    every (lane, capacity) traced exactly once across the whole churn run
+    (admissions, growth, migrations, reuse trigger no retraces)."""
+    ec, reqs, rids, bat, done = churn_run
+    assert bat.compile_counts["guided"], "guided lane never ran"
+    assert bat.compile_counts["cond"], "cond lane never ran"
+    for lane, counts in bat.compile_counts.items():
+        for cap, n in counts.items():
+            assert n == 1, f"{lane} lane retraced at capacity {cap}: {n} traces"
+        assert set(counts) <= set(bat.bc.buckets)
+
+
+def test_nfe_ledger_conservation(churn_run):
+    """Device per-slot ledger must equal the host-mirror expectation
+    (2 per uncrossed guided slot, 1 per crossed/cond slot, 0 for inactive)
+    across admission, migration, slot reuse and completion."""
+    ec, reqs, rids, bat, done = churn_run
+    t = bat.report()["totals"]
+    assert t["nfes_device"] == pytest.approx(t["nfes_expected"])
+    assert t["nfes_device"] == pytest.approx(sum(d["nfes"] for d in done.values()))
+
+
+def test_telemetry_report_fields(churn_run):
+    ec, reqs, rids, bat, done = churn_run
+    rep = bat.report()
+    t = rep["totals"]
+    assert t["num_completed"] == len(reqs)
+    assert t["tokens_out"] == sum(r.max_new_tokens for r in reqs)
+    assert t["tokens_per_sec"] > 0
+    lat = t["step_latency_ms"]
+    assert lat["p50"] > 0 and lat["p99"] >= lat["p90"] >= lat["p50"]
+    assert 0 < t["mean_occupancy"] <= 1
+    late = rep["requests"][str(rids[-1])]
+    assert late["admit_step"] >= 6  # joined mid-flight, not at t=0
+    # migrated requests: crossing recorded before completion
+    migrated = [
+        r for r in rep["requests"].values() if r["migrated_step"] is not None
+    ]
+    assert migrated, "no request migrated guided -> cond in the churn run"
+    for r in migrated:
+        assert r["crossed_step"] <= r["migrated_step"] <= r["complete_step"]
+
+
+def test_slot_reuse_no_kv_bleed(llama):
+    """A replacement tenant in a reused slot must decode exactly as if it
+    had the machine to itself (full-row overwrite at admission)."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(7)
+    ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=1)
+    a = Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=10)
+    b = Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=10)
+    bat = StepBatcher(api, params, ec, BatcherConfig(max_slots=1, buckets=(1,)))
+    ra, rb = bat.submit(a), bat.submit(b)  # b waits for a's slot
+    done = bat.run()
+    rep = bat.report()["requests"]
+    assert rep[str(rb)]["admit_step"] > rep[str(ra)]["admit_step"]
+    for r, rid in ((a, ra), (b, rb)):
+        oracle = GuidedEngine(api, params, ec).generate([r])["tokens"][0]
+        np.testing.assert_array_equal(done[rid]["tokens"], oracle)
+
+
+def test_step_batcher_beats_round_scheduler(llama):
+    """Acceptance: under churn (staggered arrivals, mixed budgets) the
+    step-level batcher's realized savings strictly exceed the round-based
+    scheduler's on the same request set."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(3)
+    ec = EngineConfig(scale=1.5, gamma_bar=-1.0, max_batch=2)
+    reqs = [
+        Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=m)
+        for m in (6, 14, 8, 12, 6)
+    ]
+    sched = ContinuousScheduler(api, params, ec)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    round_stats = sched.stats()
+
+    bat = StepBatcher(api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)))
+    for i, r in enumerate(reqs):
+        bat.submit(r, arrival_step=2 * i)
+    bat.run()
+    step_stats = bat.stats()
+
+    assert step_stats["requests"] == round_stats["requests"] == len(reqs)
+    assert step_stats["mean_savings_pct"] > round_stats["mean_savings_pct"], (
+        step_stats,
+        round_stats,
+    )
+    assert step_stats["mean_savings_pct"] > 0
+
+
+def test_eos_completion(llama):
+    """EOS cuts a request short; its ledger stops with it."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(11)
+    ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=1)
+    r = Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=12)
+    ref = StepBatcher(api, params, ec, BatcherConfig(max_slots=1, buckets=(1,)))
+    rid = ref.submit(r)
+    full = ref.run()[rid]["tokens"]
+    eos = int(full[3])
+    cut = int(np.argmax(full == eos)) + 1  # first emission of the EOS token
+
+    bat = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=1, buckets=(1,), eos_token=eos)
+    )
+    rid2 = bat.submit(Request(prompt=r.prompt, max_new_tokens=12))
+    done = bat.run()[rid2]
+    np.testing.assert_array_equal(done["tokens"], full[:cut])
+    if cut < len(full):
+        assert bat.report()["requests"][str(rid2)]["reason"] == "eos"

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build
-from repro.serving.engine import EngineConfig, GuidedEngine, Request
+from repro.serving.engine import EngineConfig, GuidedEngine, Request, pad_prompts
 from repro.serving.guided_decode import make_serve_step
 
 
@@ -58,6 +58,112 @@ def test_serve_step_shapes(llama):
     out = step(params, inputs)
     assert out["next_token"].shape == (B,)
     assert out["gamma"].shape == (B,)
+
+
+def test_pad_prompts_negative_path():
+    """Uncond branch with a negative prompt: right-aligned in the window
+    spanned by the longest conditional prompt."""
+    reqs = [
+        Request(prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=4,
+                negative_prompt=np.array([9, 8], np.int32)),
+        Request(prompt=np.array([7, 7], np.int32), max_new_tokens=4,
+                negative_prompt=np.array([4, 3, 2], np.int32)),
+    ]
+    toks_c, S = pad_prompts(reqs, use_negative=False)
+    toks_u, S_u = pad_prompts(reqs, use_negative=True)
+    assert S == S_u == 5
+    np.testing.assert_array_equal(toks_c, [[1, 2, 3, 4, 5], [0, 0, 0, 7, 7]])
+    np.testing.assert_array_equal(toks_u, [[0, 0, 0, 9, 8], [0, 0, 4, 3, 2]])
+
+
+def test_pad_prompts_bos_only_path():
+    """Uncond branch without a negative prompt: context-free, the request's
+    first token alone in the last slot (the LM null condition)."""
+    reqs = [
+        Request(prompt=np.array([5, 6, 7], np.int32), max_new_tokens=4),
+        Request(prompt=np.array([2, 3], np.int32), max_new_tokens=4,
+                negative_prompt=np.array([8], np.int32)),
+    ]
+    toks_u, S = pad_prompts(reqs, use_negative=True)
+    assert S == 3
+    np.testing.assert_array_equal(toks_u, [[0, 0, 5], [0, 0, 8]])
+
+
+def test_pad_prompts_rejects_oversized_negative():
+    reqs = [Request(prompt=np.array([1, 2], np.int32), max_new_tokens=4,
+                    negative_prompt=np.array([3, 4, 5], np.int32))]
+    with pytest.raises(AssertionError):
+        pad_prompts(reqs, use_negative=True)
+
+
+def test_crossing_poll_stride_output_unchanged(llama):
+    """Polling the crossed ledger at a stride must change neither tokens
+    nor the NFE ledger — a crossed request already takes the conditional
+    logits (and pays 1 NFE) inside the guided step."""
+    cfg, api, params = llama
+    reqs = [Request(prompt=np.arange(3, 10, dtype=np.int32), max_new_tokens=10)]
+    base = GuidedEngine(
+        api, params, EngineConfig(scale=1.5, gamma_bar=-1.0, max_batch=2)
+    ).generate(reqs)
+    strided = GuidedEngine(
+        api, params,
+        EngineConfig(scale=1.5, gamma_bar=-1.0, max_batch=2, crossing_poll_stride=4),
+    ).generate(reqs)
+    np.testing.assert_array_equal(strided["tokens"], base["tokens"])
+    np.testing.assert_array_equal(strided["nfes"], base["nfes"])
+    # the strided engine dispatched the guided executable for the whole
+    # first stride window, but the ledger (and tokens) didn't notice
+    assert base["guided_steps"] == 1
+    assert strided["guided_steps"] == 4
+
+
+def test_per_request_gamma_bar_and_guided_steps(llama):
+    """Requests carry their own gamma_bar; the engine reports per-request
+    2-NFE step counts (not the batch-global executable count)."""
+    cfg, api, params = llama
+    max_new = 8
+    reqs = [
+        Request(prompt=np.arange(1, 7, dtype=np.int32), max_new_tokens=max_new,
+                gamma_bar=-1.0),  # crosses at the first decode step
+        Request(prompt=np.arange(2, 8, dtype=np.int32), max_new_tokens=max_new,
+                gamma_bar=2.0),  # never crosses
+    ]
+    out = GuidedEngine(
+        api, params, EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
+    ).generate(reqs)
+    assert out["guided_steps"] == max_new - 1  # batch pinned by request 1
+    np.testing.assert_array_equal(
+        out["guided_steps_per_request"], [1, max_new - 1]
+    )
+    np.testing.assert_array_equal(
+        out["nfes"], [max_new, 2 * (max_new - 1)]
+    )
+
+
+def test_scheduler_records_per_request_bookkeeping(llama):
+    """Satellite fix: tokens truncated to each request's own budget and
+    guided_steps is the per-request ledger value, not the batch count."""
+    from repro.serving.scheduler import ContinuousScheduler
+
+    cfg, api, params = llama
+    sched = ContinuousScheduler(
+        api, params, EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
+    )
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
+                max_new_tokens=5, gamma_bar=-1.0),
+        Request(prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
+                max_new_tokens=9, gamma_bar=2.0),
+    ]
+    rids = [sched.submit(r) for r in reqs]
+    done = sched.run()
+    assert len(done[rids[0]]["tokens"]) == 5  # truncated to its own budget
+    assert len(done[rids[1]]["tokens"]) == 9
+    # per-request ledger: crossed-at-step-1 vs never-crossed (batch ran 8
+    # decode steps, the longest member's budget)
+    assert done[rids[0]]["guided_steps"] == 1
+    assert done[rids[1]]["guided_steps"] == 8
 
 
 def test_continuous_scheduler_drains_queue_and_saves_nfes(llama):
