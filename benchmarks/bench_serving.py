@@ -1,17 +1,22 @@
-"""Serving benchmark: step-level batcher vs round-based scheduler under churn.
+"""Serving benchmark: round scheduler vs two-lane vs three-lane batcher.
 
 Runs the same request set (mixed budgets, staggered arrivals, a negative
-prompt, a never-crossing request, plain traffic) through both schedulers
-and reports realized NFE savings vs the always-CFG baseline, tokens/sec
-and step-latency percentiles.  Writes ``BENCH_serving.json`` — the first
-point of the serving perf trajectory (EXPERIMENTS.md).
+prompt, a never-crossing request, plain traffic) through the round-based
+scheduler, the two-lane step batcher, and the three-lane batcher with the
+LinearAG extrapolation lane enabled (guided requests opt in; window
+coefficients fitted from a few collected CFG trajectories), and reports
+realized NFE savings vs the always-CFG baseline, tokens/sec and
+step-latency percentiles.  Writes ``BENCH_serving.json`` — the serving
+perf trajectory (EXPERIMENTS.md).
 
 Modes:
   --smoke    untrained reduced model, gamma_bar=-1 (crossing forced at the
              first decode step, so the AG *mechanics* — lane migration,
              admission churn, ledger conservation — are exercised in
-             seconds and savings are structural, not model-dependent).
-             Asserts mean_savings_pct > 0 and batcher > round scheduler.
+             seconds and savings are structural, not model-dependent; the
+             never-crossing quality-pinned request is what the linear lane
+             rescues from the 2-NFE price).  Asserts savings ladder:
+             round < two-lane < three-lane, all > 0.
   (default)  trained reduced model via benchmarks.common.get_trained_lm
              with a realistic gamma_bar.
 
@@ -64,6 +69,8 @@ def main(argv=None):
     ap.add_argument("--gamma-bar", type=float, default=None)
     ap.add_argument("--train-steps", type=int, default=300)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--linear-window", type=int, default=2,
+                    help="history window K for the LinearAG lane")
     ap.add_argument("--out", default="BENCH_serving.json")
     # tolerate a host harness's own flags (benchmarks/run.py --in-process
     # imports this module and calls main() under its own sys.argv)
@@ -77,6 +84,7 @@ def main(argv=None):
         BatcherConfig,
         ContinuousScheduler,
         EngineConfig,
+        Request,
         StepBatcher,
     )
 
@@ -113,16 +121,54 @@ def main(argv=None):
     rep = bat.report()
     t = rep["totals"]
 
+    # Three-lane point: the same workload with guided requests opted into
+    # the LinearAG extrapolation lane.  Window coefficients are fitted from
+    # two short collected CFG trajectories (the serve-time artifact path
+    # does exactly this once, offline).
+    import dataclasses
+
+    from repro.core.linear_ag import fit_ols_window
+    from repro.serving import collect_cfg_logit_histories
+
+    fit_len = max(args.linear_window + 2, 8)
+    fit_reqs = [
+        Request(
+            prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
+            max_new_tokens=fit_len,
+        )
+        for _ in range(2)
+    ]
+    eps_c, eps_u = collect_cfg_logit_histories(
+        api, params, fit_reqs, dataclasses.replace(ec, gamma_bar=2.0)
+    )
+    coeffs, fit_mse = fit_ols_window(eps_c, eps_u, K=args.linear_window)
+
+    reqs3 = [
+        dataclasses.replace(r, linear=r.guided) for r in reqs
+    ]
+    bat3 = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=args.max_slots), coeffs=coeffs
+    )
+    for r, a in zip(reqs3, arrivals):
+        bat3.submit(r, arrival_step=a)
+    bat3.run()
+    rep3 = bat3.report()
+    t3 = rep3["totals"]
+
     print(f"# serving bench: {cfg.name}, {len(reqs)} requests "
           f"({len(guided_reqs)} guided), max_slots={args.max_slots}, "
-          f"gamma_bar={gamma_bar}")
+          f"gamma_bar={gamma_bar}, K={args.linear_window} (fit MSE {fit_mse:.4g})")
     print(f"round_scheduler_mean_savings_pct,{round_stats['mean_savings_pct']:.2f}")
     print(f"step_batcher_mean_savings_pct,{t['mean_savings_pct']:.2f}")
+    print(f"three_lane_mean_savings_pct,{t3['mean_savings_pct']:.2f}")
+    print(f"three_lane_extrapolated_uncond,{t3['extrapolated_uncond']}")
     print(f"step_batcher_tokens_per_sec,{t['tokens_per_sec']:.1f}")
     print(f"step_batcher_step_latency_ms_p50,{t['step_latency_ms']['p50']:.2f}")
     print(f"step_batcher_step_latency_ms_p99,{t['step_latency_ms']['p99']:.2f}")
     print(f"step_batcher_mean_occupancy,{t['mean_occupancy']:.3f}")
     print(f"nfe_ledger,{t['nfes_device']:.0f},expected,{t['nfes_expected']:.0f}")
+    print(f"nfe_ledger_three_lane,{t3['nfes_device']:.0f},"
+          f"expected,{t3['nfes_expected']:.0f}")
 
     out = {
         "config": {
@@ -133,16 +179,21 @@ def main(argv=None):
             "max_slots": args.max_slots,
             "scale": args.scale,
             "gamma_bar": gamma_bar,
+            "linear_window": args.linear_window,
             "seed": args.seed,
         },
         "round_scheduler": round_stats,
         "step_batcher": rep,
+        "three_lane_batcher": rep3,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
     print(f"# wrote {args.out}")
 
     assert t["nfes_device"] == t["nfes_expected"], "NFE ledger not conserved"
+    assert t3["nfes_device"] == t3["nfes_expected"], (
+        "three-lane NFE ledger not conserved"
+    )
     if args.smoke:
         # structural guarantees of the forced-crossing workload; the trained
         # mode's savings depend on where gamma lands, so only report there
@@ -151,6 +202,14 @@ def main(argv=None):
             "step batcher did not beat the round scheduler: "
             f"{t['mean_savings_pct']:.2f} vs {round_stats['mean_savings_pct']:.2f}"
         )
+        # the linear lane rescues the never-crossing (quality-pinned)
+        # request from the 2-NFE price while keeping guidance applied, so
+        # three-lane realized savings are STRICTLY above two-lane.
+        assert t3["mean_savings_pct"] > t["mean_savings_pct"], (
+            "three-lane batcher did not beat the two-lane batcher: "
+            f"{t3['mean_savings_pct']:.2f} vs {t['mean_savings_pct']:.2f}"
+        )
+        assert t3["extrapolated_uncond"] > 0, "linear lane never engaged"
     print("# serving bench OK")
 
 

@@ -44,8 +44,11 @@ def _bcast(mask, like):
 
 
 def _default_interpret() -> bool:
-    # Pallas interpret mode everywhere except a real TPU backend.
-    return jax.default_backend() != "tpu"
+    # Pallas interpret mode everywhere except a real TPU backend — one rule,
+    # shared with the linear-combine kernel's gating.
+    from repro.kernels.linear_combine import default_interpret
+
+    return default_interpret()
 
 
 class AGStep(NamedTuple):
@@ -149,6 +152,26 @@ class GuidanceExecutor:
     def lane_ledger_cond(nfes, active):
         """Conditional-lane ledger: +1 NFE per *active* slot."""
         return nfes + jnp.where(active, 1.0, 0.0)
+
+    def linear_lane_update(
+        self, eps_u_hat, eps_c, scale, crossed, nfes, gamma_bar, active
+    ) -> AGStep:
+        """LinearAG lane epilogue (DESIGN.md §7, Eq. 8/10 at serve time).
+
+        ``eps_u_hat`` is the 0-NFE affine extrapolation of the slot's score
+        history (``core.linear_ag.apply_window``) standing in for the real
+        unconditional evaluation, so the ledger charges +1 NFE per active
+        slot — the conditional evaluation only; the extrapolated branch is
+        free.  Combine/select/crossing are otherwise identical to
+        ``lane_update``: guidance stays applied (against the estimate) and a
+        slot crosses once gamma(eps_c, eps_u_hat) > gamma_bar, after which
+        the batcher migrates it to the pure conditional lane.
+        """
+        eps_cfg, gamma = self.combine(eps_u_hat, eps_c, scale)
+        eps = jnp.where(_bcast(crossed, eps_cfg), eps_c, eps_cfg)
+        nfes = nfes + jnp.where(active, 1.0, 0.0)  # +1 cond, +0 extrapolated
+        crossed = crossed | (active & (gamma > gamma_bar))
+        return AGStep(eps=eps, gamma=gamma, crossed=crossed, nfes=nfes)
 
     # -- model-bound steps (diffusion sampling) -----------------------------
 

@@ -8,16 +8,37 @@ coefficients, Eq. 8) on the past conditional/unconditional scores:
 Coefficients come from plain OLS over a small set of stored CFG
 trajectories (the paper uses 200; fitting takes seconds).  During sampling
 an LR-based CFG step (Eq. 10) costs 1 NFE instead of 2.
+
+Two coefficient families live here:
+
+* ``OLSCoeffs`` / ``fit_ols`` — the paper-faithful per-step fit with a
+  *growing* regressor list (step i sees the full history), used by the
+  offline diffusion sampler (``linear_ag_sample``).
+* ``WindowCoeffs`` / ``fit_ols_window`` — a fixed-K sliding-window variant
+  for serving: one (2K+1,) coefficient vector shared by every step, so the
+  batched application (``apply_window``) has a single static shape and the
+  serving lane compiles to ONE executable per bucket (DESIGN.md §7).  The
+  regressors for step t are [eps_c(t), eps_c(t-1..t-K), eps_u(t-1..t-K)],
+  newest-first.  ``save_window_coeffs``/``load_window_coeffs`` round-trip
+  the fitted vector as the .npz artifact ``launch/serve.py --linear``
+  loads once at serve time.
+
+``apply_window`` routes through the ``kernels/linear_combine.py`` Pallas
+kernel when ``perf_flags.fused_guidance`` is set (one HBM pass over the
+stacked history) and otherwise through the reference XLA lowering; the two
+paths agree to float tolerance (tests/test_linear_ag.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import os
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import perf_flags
 from repro.core import policy as pol
 from repro.core.guidance import cfg_combine
 
@@ -96,6 +117,117 @@ def lr_predictor(coeffs: OLSCoeffs):
         return out.astype(regs[0].dtype)
 
     return predict
+
+
+# ---------------------------------------------------------------------------
+# fixed-K window coefficients (the serving lane's jit-able variant)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowCoeffs:
+    """One (2K+1,) coefficient vector for the fixed-K sliding window.
+
+    ``beta`` order: [current eps_c, eps_c history (K, newest first),
+    eps_u history (K, newest first)] — the static-shape analogue of
+    ``OLSCoeffs`` that a serving lane can apply at every step without
+    re-tracing.
+    """
+
+    K: int
+    beta: np.ndarray  # (2K+1,) float32
+
+    def __post_init__(self):
+        assert self.beta.shape == (2 * self.K + 1,), (self.K, self.beta.shape)
+
+
+def fit_ols_window(
+    eps_c, eps_u, K: int, *, ridge: float = 1e-6
+) -> tuple[WindowCoeffs, float]:
+    """Fit the fixed-K window regression pooled over all valid steps.
+
+    eps_c, eps_u: (N, steps, *dims) stored CFG trajectories.  For every
+    step t >= K the target is eps_u[:, t] and the regressors are the
+    window [eps_c[:, t], eps_c[:, t-1..t-K], eps_u[:, t-1..t-K]]; rows are
+    pooled over trajectories, steps and tensor elements into one ridge OLS
+    solve.  Returns (coeffs, pooled train MSE).
+    """
+    eps_c = np.asarray(eps_c, np.float64)
+    eps_u = np.asarray(eps_u, np.float64)
+    N, steps = eps_c.shape[:2]
+    assert steps > K, f"need more than K={K} steps to fit (got {steps})"
+    R = 2 * K + 1
+
+    def design(t):  # (N*D, R) for one step — never the full pooled matrix,
+        # which at production vocab sizes would be GBs of host memory
+        regs = [eps_c[:, t]]
+        regs += [eps_c[:, t - k] for k in range(1, K + 1)]
+        regs += [eps_u[:, t - k] for k in range(1, K + 1)]
+        return np.stack([r.reshape(-1) for r in regs], axis=-1)
+
+    XtX = ridge * np.eye(R)
+    Xty = np.zeros(R)
+    for t in range(K, steps):
+        Xt = design(t)
+        XtX += Xt.T @ Xt
+        Xty += Xt.T @ eps_u[:, t].reshape(-1)
+    beta = np.linalg.solve(XtX, Xty)
+    sse, n_rows = 0.0, 0
+    for t in range(K, steps):
+        resid = design(t) @ beta - eps_u[:, t].reshape(-1)
+        sse += float(resid @ resid)
+        n_rows += resid.size
+    return WindowCoeffs(K=K, beta=beta.astype(np.float32)), sse / n_rows
+
+
+def apply_window(beta, eps_c, hist_c, hist_u, *, interpret: Optional[bool] = None):
+    """Batched Eq. 8 window application: the 0-NFE unconditional estimate.
+
+    beta: (2K+1,) jnp array; eps_c: (B, *dims) current conditional score;
+    hist_c/hist_u: (B, K, *dims) ring buffers, newest first.  Returns
+    eps_u_hat with eps_c's shape in float32.  jit-able with one static
+    shape per (B, K, dims) — the property that keeps the serving lane at
+    one executable per bucket.  Behind ``perf_flags.fused_guidance`` the
+    combine streams through the Pallas kernel (one pass over the stacked
+    history); otherwise the reference XLA einsum.
+    """
+    B = eps_c.shape[0]
+    stack = jnp.concatenate(
+        [
+            eps_c.astype(jnp.float32)[:, None],
+            hist_c.astype(jnp.float32),
+            hist_u.astype(jnp.float32),
+        ],
+        axis=1,
+    )  # (B, R, *dims)
+    R = stack.shape[1]
+    beta = jnp.asarray(beta, jnp.float32)
+    assert beta.shape == (R,), (beta.shape, R)
+    if perf_flags.fused_guidance:
+        from repro.kernels.linear_combine import linear_combine_1d
+
+        flat = jnp.moveaxis(stack, 1, 0).reshape(R, -1)  # (R, B*D)
+        out = linear_combine_1d(flat, beta, interpret=interpret)
+        return out.reshape((B,) + eps_c.shape[1:])
+    return jnp.einsum("r,br...->b...", beta, stack)
+
+
+def save_window_coeffs(path: str, coeffs: WindowCoeffs, *, mse: float = 0.0):
+    """Write the serve-time coefficient artifact (.npz)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    # write through a handle so the artifact lands at ``path`` verbatim
+    # (np.savez given a string appends .npz when the suffix is missing,
+    # which would break the load-by-the-same-path contract)
+    with open(path, "wb") as f:
+        np.savez(f, beta=coeffs.beta, K=np.int64(coeffs.K), mse=np.float64(mse))
+
+
+def load_window_coeffs(path: str) -> WindowCoeffs:
+    """Load the artifact written by ``save_window_coeffs``."""
+    with np.load(path) as z:
+        return WindowCoeffs(K=int(z["K"]), beta=np.asarray(z["beta"], np.float32))
 
 
 def linear_ag_sample(model, params, solver, steps, scale, coeffs, x_T, cond, **kw):

@@ -7,8 +7,16 @@ K reads + 1 write per element.
 
 Layout: history stacked (K, N); grid over N // BLOCK; beta lives in a tiny
 (K, 1) block visible to every grid step.
+
+``interpret=None`` (the default) resolves per platform at trace time:
+interpret mode (the kernel's validation path) everywhere except a real TPU
+backend, where the compiled Mosaic kernel runs.  Pass an explicit bool to
+force either mode (tests/test_kernels.py checks interpret==compiled parity
+on TPU and the gating rule itself everywhere).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,14 +25,23 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK = 1024
 
 
+def default_interpret() -> bool:
+    """Interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
 def _kernel(beta_ref, hist_ref, out_ref):
     h = hist_ref[...].astype(jnp.float32)  # (K, BLOCK)
     b = beta_ref[...].astype(jnp.float32)  # (K, 1)
     out_ref[...] = jnp.sum(h * b, axis=0, keepdims=True).astype(out_ref.dtype)
 
 
-def linear_combine_1d(history, beta, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def linear_combine_1d(
+    history, beta, *, block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None
+):
     """history: (K, N); beta: (K,). Returns (1, N) combined tensor."""
+    if interpret is None:
+        interpret = default_interpret()
     K, N = history.shape
     if N % block != 0:
         block = N

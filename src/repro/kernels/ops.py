@@ -35,10 +35,11 @@ def fused_guidance(eps_u, eps_c, scale, *, interpret: bool = True, block: int = 
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block"))
-def linear_combine(history, beta, *, interpret: bool = True, block: int = 1024):
+def linear_combine(history, beta, *, interpret=None, block: int = 1024):
     """hat_eps = sum_k beta_k * history_k.
 
-    history: (K, ...) stacked score tensors; beta: (K,).
+    history: (K, ...) stacked score tensors; beta: (K,).  ``interpret=None``
+    gates on platform (compiled kernel on TPU, interpret elsewhere).
     """
     K = history.shape[0]
     flat = history.reshape(K, -1)

@@ -7,10 +7,23 @@ Example:
 ``--continuous`` serves the same requests through the step-level
 continuous batcher instead (staggered arrivals, per-request completion,
 AG lane migration, telemetry report; DESIGN.md §7).
+
+``--linear`` additionally opens the LinearAG extrapolation lane (implies
+``--continuous``): guided requests migrate to a 1-NFE lane whose
+unconditional branch is a 0-NFE affine extrapolation of their score
+history (Eq. 8/10).  The fixed-K window coefficients are loaded ONCE at
+serve time from the ``--coeffs`` .npz artifact; ``--fit-coeffs`` creates
+that artifact first (collect CFG trajectories from this workload, ridge
+OLS, save) when it does not exist yet:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+      --linear --fit-coeffs --coeffs artifacts/linear_ag_coeffs.npz
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 
 import jax
 import numpy as np
@@ -19,6 +32,37 @@ from repro.configs import get_config
 from repro.models import build
 from repro.serving.engine import EngineConfig, GuidedEngine, Request
 from repro.training import checkpoint
+
+
+def load_or_fit_coeffs(args, api, params, ec, reqs):
+    """Resolve the serve-time WindowCoeffs artifact (load once; optionally
+    fit-and-save it from the workload's own CFG trajectories first)."""
+    from repro.core.linear_ag import (
+        fit_ols_window,
+        load_window_coeffs,
+        save_window_coeffs,
+    )
+    from repro.serving.engine import collect_cfg_logit_histories
+
+    if not os.path.exists(args.coeffs):
+        if not args.fit_coeffs:
+            raise SystemExit(
+                f"--linear needs the coefficient artifact {args.coeffs!r}; "
+                "run once with --fit-coeffs to create it"
+            )
+        fit_ec = dataclasses.replace(ec, gamma_bar=2.0)  # always-CFG collection
+        eps_c, eps_u = collect_cfg_logit_histories(api, params, reqs, fit_ec)
+        coeffs, mse = fit_ols_window(eps_c, eps_u, K=args.linear_window)
+        save_window_coeffs(args.coeffs, coeffs, mse=mse)
+        print(f"[serve] fitted K={coeffs.K} window coeffs "
+              f"(train MSE {mse:.4g}) -> {args.coeffs}")
+    coeffs = load_window_coeffs(args.coeffs)
+    print(f"[serve] loaded LinearAG coeffs from {args.coeffs} (K={coeffs.K})")
+    if coeffs.K != args.linear_window:
+        print(f"[serve] WARNING: artifact window K={coeffs.K} != "
+              f"--linear-window {args.linear_window}; serving with the "
+              f"artifact's K (delete {args.coeffs} and --fit-coeffs to refit)")
+    return coeffs
 
 
 def main():
@@ -36,6 +80,16 @@ def main():
                     help="serve via the step-level continuous batcher")
     ap.add_argument("--arrival-stride", type=int, default=2,
                     help="steps between request arrivals (--continuous)")
+    ap.add_argument("--linear", action="store_true",
+                    help="open the LinearAG extrapolation lane "
+                         "(implies --continuous)")
+    ap.add_argument("--coeffs", default="artifacts/linear_ag_coeffs.npz",
+                    help="window-coefficient artifact loaded at serve time")
+    ap.add_argument("--fit-coeffs", action="store_true",
+                    help="fit + save the artifact from this workload's CFG "
+                         "trajectories if it does not exist")
+    ap.add_argument("--linear-window", type=int, default=4,
+                    help="history window K when fitting (--fit-coeffs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,20 +108,34 @@ def main():
         Request(
             prompt=rng.integers(1, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
             max_new_tokens=args.max_new,
+            linear=args.linear,
         )
         for _ in range(args.requests)
     ]
 
-    if args.continuous:
+    if args.continuous or args.linear:
         from repro.serving import BatcherConfig, StepBatcher
 
-        bat = StepBatcher(api, params, ec, BatcherConfig(max_slots=args.requests))
+        coeffs = (
+            load_or_fit_coeffs(args, api, params, ec, reqs)
+            if args.linear
+            else None
+        )
+        bat = StepBatcher(
+            api, params, ec, BatcherConfig(max_slots=args.requests),
+            coeffs=coeffs,
+        )
         for i, r in enumerate(reqs):
             bat.submit(r, arrival_step=args.arrival_stride * i)
         done = bat.run()
         t = bat.report()["totals"]
-        print(f"[serve] {cfg.name}: {len(done)} requests via step batcher")
+        lanes = "three-lane" if args.linear else "two-lane"
+        print(f"[serve] {cfg.name}: {len(done)} requests via step batcher ({lanes})")
         print(f"  NFEs saved vs always-CFG: {t['mean_savings_pct']:.1f}%")
+        if args.linear:
+            print(f"  0-NFE extrapolated uncond evals: {t['extrapolated_uncond']}")
+            print(f"  lane slot-steps g/l/c: {t['lane_steps']['guided']}/"
+                  f"{t['lane_steps']['linear']}/{t['lane_steps']['cond']}")
         print(f"  tokens/sec: {t['tokens_per_sec']:.1f}  "
               f"step p50/p99: {t['step_latency_ms']['p50']:.1f}/"
               f"{t['step_latency_ms']['p99']:.1f} ms")

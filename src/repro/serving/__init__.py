@@ -2,13 +2,23 @@
 
 Layering (DESIGN.md §7):
   guided_decode — the compiled step functions (whole-batch + lane-packed);
-  engine        — whole-batch oracle (`GuidedEngine`), prompt packing;
+  engine        — whole-batch oracle (`GuidedEngine`), prompt packing, the
+                  eager LinearAG oracle (`linear_ag_generate`) and the CFG
+                  trajectory collector for window-coefficient fitting;
   scheduler     — round-based baseline (`ContinuousScheduler`);
-  batcher       — step-level continuous batching (`StepBatcher`);
+  batcher       — step-level continuous batching over the three-lane
+                  ladder guided -> linear -> cond (`StepBatcher`);
   telemetry     — NFE ledgers, latency, realized savings (`ServingTelemetry`).
 """
 from repro.serving.batcher import BatcherConfig, StepBatcher
-from repro.serving.engine import EngineConfig, GuidedEngine, Request, pad_prompts
+from repro.serving.engine import (
+    EngineConfig,
+    GuidedEngine,
+    Request,
+    collect_cfg_logit_histories,
+    linear_ag_generate,
+    pad_prompts,
+)
 from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.telemetry import ServingTelemetry
 
@@ -20,5 +30,7 @@ __all__ = [
     "Request",
     "ServingTelemetry",
     "StepBatcher",
+    "collect_cfg_logit_histories",
+    "linear_ag_generate",
     "pad_prompts",
 ]

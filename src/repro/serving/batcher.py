@@ -4,33 +4,46 @@ The round-based ``ContinuousScheduler`` drains the queue in whole-batch
 generations: one slow-to-converge or long-budget request pins every batch
 member in the 2-NFE guided step until the round ends.  ``StepBatcher``
 replaces the round with a per-request, per-step lifecycle state machine
-over two *lanes*:
+over an ordered ladder of *lanes*:
 
 * **guided lane** — uncrossed requests, packed into the compiled guided
   step (cond/uncond pack, 2 NFEs per active slot);
+* **linear lane** — LinearAG (Eq. 8/10 at serve time): 1 NFE for the
+  conditional evaluation plus a 0-NFE unconditional estimate extrapolated
+  from the slot's fixed-K score-history ring buffer, so guidance stays
+  applied at conditional-lane cost.  Entered after K guided warmup steps
+  (window full) by requests that opted in (``Request.linear``) and hold
+  fitted ``WindowCoeffs``;
 * **conditional lane** — requests past their gamma_bar crossing plus plain
   (unguided) traffic, packed into the compiled conditional step (1 NFE per
   active slot).
 
+The ladder is ordered by NFE cost and transitions are monotone — a request
+only ever moves guided -> linear -> cond (possibly skipping linear), never
+backwards.  Crossing gamma_bar from either the guided lane (real gamma) or
+the linear lane (gamma against the extrapolated score) migrates to cond.
+
 Every decode step the batcher admits queued requests into freed slots,
 runs each non-empty lane once, streams tokens, completes requests on
-budget/EOS, and migrates freshly-crossed requests guided -> conditional by
-copying their slot row (token, position, conditional KV rows, NFE ledger)
-across lanes.  Lane capacities are *bucketed* (default powers of two), so
-each lane re-traces only when its occupancy outgrows the current bucket:
-exactly two step executables exist per bucket shape — asserted via
-``compile_counts`` in tests — and slot rows are reused in place (a fresh
-request's prefilled caches overwrite the completed tenant's rows, so no KV
-bleeds between tenants; also asserted in tests).
+budget/EOS, and migrates requests down the ladder by copying their slot
+row (token, position, conditional KV rows, NFE ledger, and — into the
+linear lane — the history ring buffer) across lanes.  Lane capacities are
+*bucketed* (default powers of two), so each lane re-traces only when its
+occupancy outgrows the current bucket: exactly one step executable exists
+per (lane, bucket shape) — asserted via ``compile_counts`` in tests — and
+slot rows are reused in place (a fresh request's prefilled caches AND
+zeroed history rows overwrite the completed tenant's, so neither KV nor
+score history bleeds between tenants; also asserted in tests).
 
 Request lifecycle::
 
-    QUEUED -> ADMITTED(guided) --crossing--> MIGRATED(cond) -> DONE
-           \\-> ADMITTED(cond, plain request) ------------------^
+    QUEUED -> ADMITTED(guided) --window full--> LINEAR --gamma_t > gamma_bar--> COND -> DONE
+           \\                  \\--gamma_t > gamma_bar (early crossing)---------^    ^
+            \\-> ADMITTED(cond, plain request) --------------------------------------/
 
 Telemetry (serving/telemetry.py) receives the full event stream; its
 ledger-conservation check (device NFEs == host-expected NFEs) holds across
-admission, migration, reuse and completion.
+admission, migration, reuse and completion in all three lanes.
 """
 from __future__ import annotations
 
@@ -43,13 +56,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import GuidanceExecutor
+from repro.core.linear_ag import WindowCoeffs
 from repro.serving.engine import EngineConfig, Request, pad_prompts
 from repro.serving.guided_decode import (
     LaneState,
+    LinearLaneState,
     cond_lane_step,
     guided_lane_step,
+    linear_lane_step,
 )
 from repro.serving.telemetry import ServingTelemetry
+
+# ladder rank: transitions must strictly increase (never backwards)
+LANE_ORDER = ("guided", "linear", "cond")
 
 
 @dataclasses.dataclass
@@ -91,7 +110,7 @@ class _Lane:
         self.name = name
         self.capacity = 0
         self.rids: List[Optional[int]] = []
-        self.state: Optional[LaneState] = None
+        self.state = None  # LaneState | LinearLaneState
 
     @property
     def active_count(self) -> int:
@@ -105,7 +124,7 @@ class _Lane:
 
 
 class StepBatcher:
-    """Step-level continuous batching over the two compiled lane steps."""
+    """Step-level continuous batching over the three compiled lane steps."""
 
     def __init__(
         self,
@@ -115,6 +134,7 @@ class StepBatcher:
         batch_config: Optional[BatcherConfig] = None,
         telemetry: Optional[ServingTelemetry] = None,
         clock=time.perf_counter,
+        coeffs: Optional[WindowCoeffs] = None,
     ):
         self.api = api
         self.params = params
@@ -123,19 +143,37 @@ class StepBatcher:
         self.telemetry = telemetry or ServingTelemetry(clock=clock)
         self.clock = clock
         self.executor = GuidanceExecutor(backend=config.guidance_backend)
+        # fixed-K window coefficients for the LinearAG lane, fitted offline
+        # (core/linear_ag.fit_ols_window) and loaded ONCE here — the lane
+        # step closes over one device array for the whole serve lifetime.
+        self.coeffs = coeffs
+        self._beta = (
+            jnp.asarray(coeffs.beta, jnp.float32) if coeffs is not None else None
+        )
         self.guided = _Lane("guided")
+        self.linear = _Lane("linear")
         self.cond = _Lane("cond")
         self.cache_len = self.bc.cache_len
+        self._vocab: Optional[int] = None  # logits width, set at first prefill
         self._pending: List[_Pending] = []
         self._next_rid = 0
         self._step_idx = 0
         self._gen: Dict[int, List[int]] = {}  # rid -> emitted tokens
         self._reqs: Dict[int, Request] = {}
         self._host_crossed: Dict[int, bool] = {}
+        self._guided_steps_host: Dict[int, int] = {}  # warmup counter per rid
+        # per-request lane trajectory ("guided" -> "linear" -> "cond"); the
+        # ladder-monotonicity invariant is: each list is a strictly
+        # rank-increasing subsequence of LANE_ORDER.
+        self.lane_history: Dict[int, List[str]] = {}
         self.completed: Dict[int, dict] = {}
-        # capacity -> number of traces; the two-executables-per-bucket
+        # capacity -> number of traces; the one-executable-per-(lane, bucket)
         # invariant is: every value here stays exactly 1.
-        self.compile_counts: Dict[str, Dict[int, int]] = {"guided": {}, "cond": {}}
+        self.compile_counts: Dict[str, Dict[int, int]] = {
+            "guided": {},
+            "linear": {},
+            "cond": {},
+        }
 
         def _traced_guided(params, state):
             K = state.tokens.shape[0]
@@ -145,6 +183,14 @@ class StepBatcher:
                 api, params, state, scale=config.scale, executor=self.executor
             )
 
+        def _traced_linear(params, state, beta):
+            K = state.tokens.shape[0]
+            counts = self.compile_counts["linear"]
+            counts[K] = counts.get(K, 0) + 1
+            return linear_lane_step(
+                api, params, state, beta, scale=config.scale, executor=self.executor
+            )
+
         def _traced_cond(params, state):
             K = state.tokens.shape[0]
             counts = self.compile_counts["cond"]
@@ -152,6 +198,7 @@ class StepBatcher:
             return cond_lane_step(api, params, state)
 
         self._guided_step = jax.jit(_traced_guided)
+        self._linear_step = jax.jit(_traced_linear)
         self._cond_step = jax.jit(_traced_cond)
 
     # -- submission ----------------------------------------------------------
@@ -159,13 +206,20 @@ class StepBatcher:
     def submit(self, request: Request, arrival_step: int = 0) -> int:
         """Queue a request; it becomes admissible at ``arrival_step`` (in
         batcher decode steps — the unit of simulated churn)."""
+        if request.linear:
+            assert request.guided, "linear requires a guided request"
+            assert self.coeffs is not None, (
+                "Request.linear needs WindowCoeffs (pass coeffs= to "
+                "StepBatcher; fit via core.linear_ag.fit_ols_window or load "
+                "the serve-time artifact)"
+            )
         rid = self._next_rid
         self._next_rid += 1
         self._pending.append(_Pending(rid, request, arrival_step))
         self._reqs[rid] = request
         self.telemetry.on_submit(
             rid, len(request.prompt), request.max_new_tokens, request.guided,
-            step=self._step_idx,
+            step=self._step_idx, linear=request.linear,
         )
         return rid
 
@@ -177,18 +231,62 @@ class StepBatcher:
                 return b
         raise AssertionError(f"no bucket fits {need} (buckets={self.bc.buckets})")
 
-    def _empty_state(self, capacity: int, guided: bool) -> LaneState:
+    def _with_history(self) -> bool:
+        return self.coeffs is not None
+
+    def _empty_hist(self, capacity: int):
+        assert self._vocab is not None, "history allocated before first prefill"
+        return jnp.zeros((capacity, self.coeffs.K, 1, self._vocab), jnp.float32)
+
+    def _empty_state(self, capacity: int, kind: str):
         z = lambda *s, dt=jnp.int32: jnp.zeros(s, dt)
-        return LaneState(
+        common = dict(
             tokens=z(capacity, 1),
             position=z(capacity),
             caches_c=self.api.init_caches(capacity, self.cache_len),
-            caches_u=self.api.init_caches(capacity, self.cache_len) if guided else None,
             crossed=z(capacity, dt=bool),
             nfes=z(capacity, dt=jnp.float32),
             active=z(capacity, dt=bool),
             gamma_bar=jnp.ones((capacity,), jnp.float32),
         )
+        if kind == "linear":
+            return LinearLaneState(
+                hist_c=self._empty_hist(capacity),
+                hist_u=self._empty_hist(capacity),
+                **common,
+            )
+        hist = kind == "guided" and self._with_history()
+        return LaneState(
+            caches_u=(
+                self.api.init_caches(capacity, self.cache_len)
+                if kind == "guided"
+                else None
+            ),
+            hist_c=self._empty_hist(capacity) if hist else None,
+            hist_u=self._empty_hist(capacity) if hist else None,
+            **common,
+        )
+
+    @staticmethod
+    def _concat_states(s, fresh):
+        """Row-concat two same-type lane states: cache trees carry the slot
+        axis at 1 (axis 0 is the scan-period stack), every other leaf at 0."""
+        kw = {}
+        for name in s._fields:
+            a, b = getattr(s, name), getattr(fresh, name)
+            if name in ("caches_c", "caches_u"):
+                kw[name] = (
+                    None
+                    if a is None
+                    else jax.tree.map(
+                        lambda x, y: jnp.concatenate([x, y], axis=1), a, b
+                    )
+                )
+            elif a is None:
+                kw[name] = None
+            else:
+                kw[name] = jnp.concatenate([a, b], axis=0)
+        return type(s)(**kw)
 
     def _grow(self, lane: _Lane, need: int):
         """Grow a lane to the smallest bucket holding ``need`` slots; existing
@@ -196,32 +294,11 @@ class StepBatcher:
         cap = self._bucket_for(need)
         if cap <= lane.capacity:
             return
-        fresh = self._empty_state(cap - lane.capacity, guided=lane is self.guided)
+        fresh = self._empty_state(cap - lane.capacity, lane.name)
         if lane.state is None:
             lane.state = fresh
         else:
-            s = lane.state
-            cat0 = lambda o, n: jnp.concatenate([o, n], axis=0)
-            # KV-cache leaves carry the slot axis at 1 (axis 0 is the scan-
-            # period stack), everything else at 0 — same convention as the
-            # engine's cond/uncond concat.
-            cat_caches = lambda o, n: jax.tree.map(
-                lambda a, b: jnp.concatenate([a, b], axis=1), o, n
-            )
-            lane.state = LaneState(
-                tokens=cat0(s.tokens, fresh.tokens),
-                position=cat0(s.position, fresh.position),
-                caches_c=cat_caches(s.caches_c, fresh.caches_c),
-                caches_u=(
-                    cat_caches(s.caches_u, fresh.caches_u)
-                    if s.caches_u is not None
-                    else None
-                ),
-                crossed=cat0(s.crossed, fresh.crossed),
-                nfes=cat0(s.nfes, fresh.nfes),
-                active=cat0(s.active, fresh.active),
-                gamma_bar=cat0(s.gamma_bar, fresh.gamma_bar),
-            )
+            lane.state = self._concat_states(lane.state, fresh)
         lane.rids = lane.rids + [None] * (cap - lane.capacity)
         lane.capacity = cap
 
@@ -234,7 +311,11 @@ class StepBatcher:
 
     @property
     def total_active(self) -> int:
-        return self.guided.active_count + self.cond.active_count
+        return (
+            self.guided.active_count
+            + self.linear.active_count
+            + self.cond.active_count
+        )
 
     # -- admission -----------------------------------------------------------
 
@@ -255,36 +336,42 @@ class StepBatcher:
             assert len(req.prompt) + req.max_new_tokens + 1 <= self.cache_len, (
                 f"request {p.rid} does not fit cache_len={self.cache_len}"
             )
-            lane = self.guided if req.guided else self.cond
-            slot = self._take_slot(lane)
-            if slot is None:
-                continue
-            self._admit(p.rid, req, lane, slot)
-            admitted.append(p)
+            if self._admit(p.rid, req):
+                admitted.append(p)
         for p in admitted:
             self._pending.remove(p)
 
-    def _admit(self, rid: int, req: Request, lane: _Lane, slot: int):
+    def _admit(self, rid: int, req: Request) -> bool:
         """Prefill at the request's own prompt length and overwrite the slot
-        row wholesale — full-row overwrite is what makes slot reuse safe
-        (no KV bleed from the previous tenant)."""
+        row wholesale — full-row overwrite (caches AND history) is what
+        makes slot reuse safe (no KV or score-history bleed from the
+        previous tenant).  Prefill runs before the slot is taken so the
+        first admission can size the history buffers from the logits."""
         toks_c, S = pad_prompts([req], use_negative=False)
         logits_c, ext_c = self.api.forward(
             self.params, {"tokens": toks_c}, mode="prefill", cache_len=self.cache_len
         )
-        first = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        st = lane.state
-        caches_c = _set_row(st.caches_c, slot, ext_c["caches"])
-        caches_u = st.caches_u
-        if lane is self.guided:
+        if self._vocab is None:
+            self._vocab = int(logits_c.shape[-1])
+        ext_u = None
+        if req.guided:
             toks_u, _ = pad_prompts([req], use_negative=True)
             _, ext_u = self.api.forward(
                 self.params, {"tokens": toks_u}, mode="prefill",
                 cache_len=self.cache_len,
             )
+        first = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        lane = self.guided if req.guided else self.cond
+        slot = self._take_slot(lane)
+        if slot is None:
+            return False
+        st = lane.state
+        caches_c = _set_row(st.caches_c, slot, ext_c["caches"])
+        caches_u = st.caches_u
+        if ext_u is not None:
             caches_u = _set_row(st.caches_u, slot, ext_u["caches"])
         gb = self.config.gamma_bar if req.gamma_bar is None else req.gamma_bar
-        lane.state = LaneState(
+        lane.state = st._replace(
             tokens=st.tokens.at[slot].set(first[0]),
             position=st.position.at[slot].set(S),
             caches_c=caches_c,
@@ -293,13 +380,22 @@ class StepBatcher:
             nfes=st.nfes.at[slot].set(0.0),
             active=st.active.at[slot].set(True),
             gamma_bar=st.gamma_bar.at[slot].set(gb),
+            hist_c=(
+                st.hist_c.at[slot].set(0.0) if st.hist_c is not None else None
+            ),
+            hist_u=(
+                st.hist_u.at[slot].set(0.0) if st.hist_u is not None else None
+            ),
         )
         lane.rids[slot] = rid
         self._gen[rid] = [int(np.asarray(first)[0, 0])]
         self._host_crossed[rid] = lane is self.cond
+        self._guided_steps_host[rid] = 0
+        self.lane_history[rid] = [lane.name]
         self.telemetry.on_admit(rid, self._step_idx)
         # degenerate budget: the prefill token alone satisfies it
         self._maybe_complete(rid, lane, slot, float(0.0))
+        return True
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -324,31 +420,70 @@ class StepBatcher:
         )
         return True
 
-    def _migrate(self, rid: int, g_slot: int):
-        """Move a freshly-crossed request guided -> conditional: copy its
-        post-step row (token, position, cond KV, ledger) into a cond slot."""
+    def _enter_lane(self, rid: int, lane_name: str):
+        prev = self.lane_history[rid][-1]
+        assert LANE_ORDER.index(lane_name) > LANE_ORDER.index(prev), (
+            f"ladder violation for request {rid}: {prev} -> {lane_name}"
+        )
+        self.lane_history[rid].append(lane_name)
+
+    def _migrate_to_cond(self, rid: int, src: _Lane, s_slot: int):
+        """Move a freshly-crossed request (from the guided OR linear lane)
+        into the conditional lane: copy its post-step row (token, position,
+        cond KV, ledger); history buffers are dropped — the cond lane never
+        extrapolates."""
         c_slot = self._take_slot(self.cond)
         if c_slot is None:  # cond lane saturated: defer (stays correct, 1 NFE
             return  # on device either way; retried next step)
-        gs, cs = self.guided.state, self.cond.state
-        self.cond.state = LaneState(
-            tokens=cs.tokens.at[c_slot].set(gs.tokens[g_slot]),
-            position=cs.position.at[c_slot].set(gs.position[g_slot]),
+        ss, cs = src.state, self.cond.state
+        self.cond.state = cs._replace(
+            tokens=cs.tokens.at[c_slot].set(ss.tokens[s_slot]),
+            position=cs.position.at[c_slot].set(ss.position[s_slot]),
             caches_c=jax.tree.map(
-                lambda dst, src: dst.at[:, c_slot].set(src[:, g_slot]),
+                lambda dst, s: dst.at[:, c_slot].set(s[:, s_slot]),
                 cs.caches_c,
+                ss.caches_c,
+            ),
+            crossed=cs.crossed.at[c_slot].set(True),
+            nfes=cs.nfes.at[c_slot].set(ss.nfes[s_slot]),
+            active=cs.active.at[c_slot].set(True),
+            gamma_bar=cs.gamma_bar.at[c_slot].set(ss.gamma_bar[s_slot]),
+        )
+        src.state = ss._replace(active=ss.active.at[s_slot].set(False))
+        src.rids[s_slot] = None
+        self.cond.rids[c_slot] = rid
+        self._enter_lane(rid, "cond")
+        self.telemetry.on_migrate(rid, self._step_idx)
+
+    def _migrate_to_linear(self, rid: int, g_slot: int):
+        """Move a warmed-up request guided -> linear: copy its post-step row
+        INCLUDING the history ring buffer (the last K realized cond/uncond
+        score pairs the extrapolation reads); the uncond KV rows are
+        dropped — the linear lane never evaluates that branch again."""
+        l_slot = self._take_slot(self.linear)
+        if l_slot is None:  # linear lane saturated: defer (2 NFEs meanwhile)
+            return
+        gs, ls = self.guided.state, self.linear.state
+        self.linear.state = ls._replace(
+            tokens=ls.tokens.at[l_slot].set(gs.tokens[g_slot]),
+            position=ls.position.at[l_slot].set(gs.position[g_slot]),
+            caches_c=jax.tree.map(
+                lambda dst, s: dst.at[:, l_slot].set(s[:, g_slot]),
+                ls.caches_c,
                 gs.caches_c,
             ),
-            caches_u=None,
-            crossed=cs.crossed.at[c_slot].set(True),
-            nfes=cs.nfes.at[c_slot].set(gs.nfes[g_slot]),
-            active=cs.active.at[c_slot].set(True),
-            gamma_bar=cs.gamma_bar.at[c_slot].set(gs.gamma_bar[g_slot]),
+            crossed=ls.crossed.at[l_slot].set(False),
+            nfes=ls.nfes.at[l_slot].set(gs.nfes[g_slot]),
+            active=ls.active.at[l_slot].set(True),
+            gamma_bar=ls.gamma_bar.at[l_slot].set(gs.gamma_bar[g_slot]),
+            hist_c=ls.hist_c.at[l_slot].set(gs.hist_c[g_slot]),
+            hist_u=ls.hist_u.at[l_slot].set(gs.hist_u[g_slot]),
         )
         self.guided.state = gs._replace(active=gs.active.at[g_slot].set(False))
         self.guided.rids[g_slot] = None
-        self.cond.rids[c_slot] = rid
-        self.telemetry.on_migrate(rid, self._step_idx)
+        self.linear.rids[l_slot] = rid
+        self._enter_lane(rid, "linear")
+        self.telemetry.on_linear(rid, self._step_idx)
 
     # -- the decode step -----------------------------------------------------
 
@@ -361,23 +496,35 @@ class StepBatcher:
         t0 = self.clock()
         self._admit_pending()
 
-        # host-mirror of the device ledger rule, *before* the step runs
-        expected = sum(
-            1.0 if self._host_crossed[r] else 2.0
-            for r in self.guided.rids
-            if r is not None
-        ) + 1.0 * self.cond.active_count
+        # host-mirror of the device ledger rule, *before* the step runs:
+        # 2 per uncrossed guided slot, 1 per crossed guided slot, 1 per
+        # linear slot (extrapolated uncond is 0-NFE), 1 per cond slot.
+        expected = (
+            sum(
+                1.0 if self._host_crossed[r] else 2.0
+                for r in self.guided.rids
+                if r is not None
+            )
+            + 1.0 * self.linear.active_count
+            + 1.0 * self.cond.active_count
+        )
         g_active = self.guided.active_count
         g_uncrossed = sum(
             1
             for r in self.guided.rids
             if r is not None and not self._host_crossed[r]
         )
+        l_active = self.linear.active_count
         c_active = self.cond.active_count
 
         ran = False
         if g_active:
             _, self.guided.state, _ = self._guided_step(self.params, self.guided.state)
+            ran = True
+        if l_active:
+            _, self.linear.state, _ = self._linear_step(
+                self.params, self.linear.state, self._beta
+            )
             ran = True
         if c_active:
             _, self.cond.state = self._cond_step(self.params, self.cond.state)
@@ -393,6 +540,13 @@ class StepBatcher:
                     )
                     if g_active
                     else None,
+                    "l": (
+                        self.linear.state.tokens,
+                        self.linear.state.crossed,
+                        self.linear.state.nfes,
+                    )
+                    if l_active
+                    else None,
                     "c": (self.cond.state.tokens, self.cond.state.nfes)
                     if c_active
                     else None,
@@ -405,6 +559,8 @@ class StepBatcher:
                 guided_active=g_active,
                 guided_uncrossed=g_uncrossed,
                 guided_capacity=self.guided.capacity,
+                linear_active=l_active,
+                linear_capacity=self.linear.capacity,
                 cond_active=c_active,
                 cond_capacity=self.cond.capacity,
                 dt_s=dt,
@@ -415,9 +571,10 @@ class StepBatcher:
 
     def _postprocess(self, fetched):
         # Snapshot the slot maps as they were when the step ran: migrations
-        # below may hand a freed cond slot to a guided request, and that new
+        # below may hand a freed slot to another request, and that new
         # tenant must not consume the old tenant's fetched token.
         g_rids = list(self.guided.rids)
+        l_rids = list(self.linear.rids)
         c_rids = list(self.cond.rids)
         if fetched["c"] is not None:
             toks, nfes = fetched["c"]
@@ -426,9 +583,9 @@ class StepBatcher:
                     continue
                 self._gen[rid].append(int(toks[slot, 0]))
                 self._maybe_complete(rid, self.cond, slot, float(nfes[slot]))
-        if fetched["g"] is not None:
-            toks, crossed, nfes = fetched["g"]
-            for slot, rid in enumerate(g_rids):
+        if fetched["l"] is not None:
+            toks, crossed, nfes = fetched["l"]
+            for slot, rid in enumerate(l_rids):
                 if rid is None:
                     continue
                 self._gen[rid].append(int(toks[slot, 0]))
@@ -437,10 +594,29 @@ class StepBatcher:
                 if bool(crossed[slot]) and not self._host_crossed[rid]:
                     self._host_crossed[rid] = True
                     self.telemetry.on_cross(rid, self._step_idx)
+                if self._maybe_complete(rid, self.linear, slot, float(nfes[slot])):
+                    continue
+                if self._host_crossed[rid]:
+                    self._migrate_to_cond(rid, self.linear, slot)
+        if fetched["g"] is not None:
+            toks, crossed, nfes = fetched["g"]
+            for slot, rid in enumerate(g_rids):
+                if rid is None:
+                    continue
+                self._gen[rid].append(int(toks[slot, 0]))
+                self._guided_steps_host[rid] += 1
+                if bool(crossed[slot]) and not self._host_crossed[rid]:
+                    self._host_crossed[rid] = True
+                    self.telemetry.on_cross(rid, self._step_idx)
                 if self._maybe_complete(rid, self.guided, slot, float(nfes[slot])):
                     continue
                 if self._host_crossed[rid]:
-                    self._migrate(rid, slot)
+                    self._migrate_to_cond(rid, self.guided, slot)
+                elif (
+                    self._reqs[rid].linear
+                    and self._guided_steps_host[rid] >= self.coeffs.K
+                ):
+                    self._migrate_to_linear(rid, slot)
 
     def run(self, max_steps: int = 100_000) -> Dict[int, dict]:
         """Drive steps until every submitted request has completed."""

@@ -25,8 +25,10 @@ import numpy as np
 from repro.core.executor import GuidanceExecutor
 from repro.serving.guided_decode import (
     GuidedState,
+    _packed_cfg_eval,
     cond_decode_step,
     guided_decode_step,
+    push_history,
 )
 
 
@@ -44,6 +46,12 @@ class Request:
     # conditional lane; the engine treats them as scale-irrelevant only via
     # the batcher — engine batches are always guided).
     guided: bool = True
+    # linear=True opts a guided request into the LinearAG extrapolation
+    # lane (DESIGN.md §7): after K guided warmup steps it migrates to the
+    # 1-NFE lane where the unconditional score is an affine extrapolation
+    # of its stored history (Eq. 8/10).  Requires the batcher to hold
+    # fitted WindowCoeffs; ignored by the whole-batch engine.
+    linear: bool = False
 
 
 @dataclasses.dataclass
@@ -177,3 +185,160 @@ class GuidedEngine:
                 np.asarray(jnp.stack(gammas)) if gammas else np.zeros((0, B))
             ),
         }
+
+
+# ---------------------------------------------------------------------------
+# LinearAG at serve time: trajectory collection + the eager B=1 oracle
+# ---------------------------------------------------------------------------
+
+
+def collect_cfg_logit_histories(api, params, requests, config: EngineConfig):
+    """Stored CFG trajectories for ``fit_ols_window``: run each request at
+    B=1 through the always-guided decode (crossing disabled) and record the
+    per-step (logits_c, logits_u) score pairs.
+
+    Returns (eps_c, eps_u): (N, steps, V) float32 with steps truncated to
+    the shortest request budget, the decode-time analogue of the sampler's
+    ``collect_pair_trajectory``.
+    """
+    executor = GuidanceExecutor(backend=config.guidance_backend)
+
+    def _step(p, tok, pos, cc, cu):
+        lc, lu, cc, cu = _packed_cfg_eval(api, p, tok, pos, cc, cu)
+        logits, _ = executor.combine(lu, lc, config.scale)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return lc, lu, nxt, cc, cu
+
+    step_fn = jax.jit(_step)
+    cs, us = [], []
+    for req in requests:
+        toks_c, S = pad_prompts([req], use_negative=False)
+        toks_u, _ = pad_prompts([req], use_negative=True)
+        cache_len = S + req.max_new_tokens + 1
+        logits_c, ext_c = api.forward(
+            params, {"tokens": toks_c}, mode="prefill", cache_len=cache_len
+        )
+        _, ext_u = api.forward(
+            params, {"tokens": toks_u}, mode="prefill", cache_len=cache_len
+        )
+        token = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        position = jnp.full((1,), S, jnp.int32)
+        caches_c, caches_u = ext_c["caches"], ext_u["caches"]
+        rec_c, rec_u = [], []
+        for _ in range(req.max_new_tokens - 1):
+            lc, lu, token, caches_c, caches_u = step_fn(
+                params, token, position, caches_c, caches_u
+            )
+            rec_c.append(np.asarray(lc[:, 0], np.float32))
+            rec_u.append(np.asarray(lu[:, 0], np.float32))
+            position = position + 1
+        cs.append(np.stack(rec_c, axis=1)[0])  # (steps, V)
+        us.append(np.stack(rec_u, axis=1)[0])
+    steps = min(c.shape[0] for c in cs)
+    eps_c = np.stack([c[:steps] for c in cs])
+    eps_u = np.stack([u[:steps] for u in us])
+    return eps_c, eps_u
+
+
+def linear_ag_generate(api, params, request: Request, config: EngineConfig, coeffs):
+    """Eager B=1 oracle for the three-lane ladder (DESIGN.md §7).
+
+    Phases mirror the batcher's lane lifecycle exactly — guided (2 NFE,
+    real cond/uncond pack) until the K-step history window has filled,
+    LinearAG (1 NFE conditional + 0-NFE extrapolated unconditional) until
+    gamma crosses gamma_bar, conditional (1 NFE) after — using the same
+    executor epilogues and the same ``apply_window`` numerics, so the step
+    batcher must match it token-for-token at B=1 under arbitrary churn
+    (asserted in tests/test_batcher.py).
+    """
+    from repro.core.linear_ag import apply_window
+
+    executor = GuidanceExecutor(backend=config.guidance_backend)
+    K = coeffs.K
+    beta = jnp.asarray(coeffs.beta, jnp.float32)
+    req = request
+    gb = jnp.asarray(
+        [config.gamma_bar if req.gamma_bar is None else req.gamma_bar], jnp.float32
+    )
+    active = jnp.ones((1,), bool)
+
+    toks_c, S = pad_prompts([req], use_negative=False)
+    toks_u, _ = pad_prompts([req], use_negative=True)
+    cache_len = S + req.max_new_tokens + 1
+    logits_c, ext_c = api.forward(
+        params, {"tokens": toks_c}, mode="prefill", cache_len=cache_len
+    )
+    _, ext_u = api.forward(
+        params, {"tokens": toks_u}, mode="prefill", cache_len=cache_len
+    )
+    token = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    V = logits_c.shape[-1]
+    position = jnp.full((1,), S, jnp.int32)
+    caches_c, caches_u = ext_c["caches"], ext_u["caches"]
+    hist_c = jnp.zeros((1, K, 1, V), jnp.float32)
+    hist_u = jnp.zeros((1, K, 1, V), jnp.float32)
+    crossed = jnp.zeros((1,), bool)
+    nfes = jnp.zeros((1,), jnp.float32)
+
+    def guided_step(p, tok, pos, cc, cu, crossed, nfes):
+        lc, lu, cc, cu = _packed_cfg_eval(api, p, tok, pos, cc, cu)
+        res = executor.lane_update(lu, lc, config.scale, crossed, nfes, gb, active)
+        nxt = jnp.argmax(res.eps[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, lc, lu, cc, cu, res.crossed, res.nfes, res.gamma
+
+    def linear_step(p, tok, pos, cc, hc, hu, crossed, nfes):
+        lc, cc = api.decode_step(p, tok, cc, pos)
+        u_hat = apply_window(beta, lc, hc, hu)
+        res = executor.linear_lane_update(
+            u_hat, lc, config.scale, crossed, nfes, gb, active
+        )
+        nxt = jnp.argmax(res.eps[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, lc, u_hat, cc, res.crossed, res.nfes, res.gamma
+
+    def cond_step(p, tok, pos, cc, nfes):
+        lc, cc = api.decode_step(p, tok, cc, pos)
+        nxt = jnp.argmax(lc[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cc, nfes + 1.0
+
+    guided_step = jax.jit(guided_step)
+    linear_step = jax.jit(linear_step)
+    cond_step = jax.jit(cond_step)
+
+    tokens = [int(np.asarray(token)[0, 0])]
+    lanes, gammas = [], []
+    lane = "guided"
+    warm = 0
+    for _ in range(req.max_new_tokens - 1):
+        lanes.append(lane)
+        if lane == "guided":
+            token, lc, lu, caches_c, caches_u, crossed, nfes, gamma = guided_step(
+                params, token, position, caches_c, caches_u, crossed, nfes
+            )
+            hist_c = push_history(hist_c, lc)
+            hist_u = push_history(hist_u, lu)
+            warm += 1
+            gammas.append(float(gamma[0]))
+            if bool(crossed[0]):
+                lane = "cond"
+            elif req.linear and warm >= K:
+                lane = "linear"
+        elif lane == "linear":
+            token, lc, u_hat, caches_c, crossed, nfes, gamma = linear_step(
+                params, token, position, caches_c, hist_c, hist_u, crossed, nfes
+            )
+            hist_c = push_history(hist_c, lc)
+            hist_u = push_history(hist_u, u_hat)
+            gammas.append(float(gamma[0]))
+            if bool(crossed[0]):
+                lane = "cond"
+        else:
+            token, caches_c, nfes = cond_step(params, token, position, caches_c, nfes)
+        position = position + 1
+        tokens.append(int(np.asarray(token)[0, 0]))
+    return {
+        "tokens": np.asarray(tokens, np.int32),
+        "nfes": float(np.asarray(nfes)[0]),
+        "lanes": lanes,
+        "gammas": np.asarray(gammas, np.float64),
+        "linear_steps": sum(1 for l in lanes if l == "linear"),
+    }

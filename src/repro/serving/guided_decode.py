@@ -122,6 +122,12 @@ class LaneState(NamedTuple):
     lane carries ``caches_u=None`` (None is an empty pytree node, so the
     same NamedTuple jits for both lanes).  ``gamma_bar`` is per-slot: a
     request can carry its own crossing threshold.
+
+    ``hist_c``/``hist_u`` are optional (B, K, 1, V) float32 score-history
+    ring buffers, newest first — present only when the batcher serves a
+    LinearAG lane, so the guided phase can warm up the window that the
+    linear lane extrapolates from.  Rows are zeroed at admission (full-row
+    overwrite), so history never bleeds across slot tenants.
     """
 
     tokens: jnp.ndarray  # (K, 1) last token per slot
@@ -132,6 +138,34 @@ class LaneState(NamedTuple):
     nfes: jnp.ndarray  # (K,) float32
     active: jnp.ndarray  # (K,) bool
     gamma_bar: jnp.ndarray  # (K,) float32
+    hist_c: object = None  # (B, K, 1, V) f32 or None
+    hist_u: object = None
+
+
+class LinearLaneState(NamedTuple):
+    """Slot state of the LinearAG lane (DESIGN.md §7, Eq. 8/10 at serve
+    time): conditional KV only (1 NFE/step), plus the per-slot fixed-K
+    score-history ring buffers the 0-NFE unconditional extrapolation reads.
+    ``hist_u`` holds *realized* unconditional scores: true evaluations from
+    the guided warmup, then the lane's own extrapolations (errors compound
+    autoregressively, per the paper)."""
+
+    tokens: jnp.ndarray  # (B, 1)
+    position: jnp.ndarray  # (B,)
+    caches_c: object
+    crossed: jnp.ndarray  # (B,) bool
+    nfes: jnp.ndarray  # (B,) float32
+    active: jnp.ndarray  # (B,) bool
+    gamma_bar: jnp.ndarray  # (B,) float32
+    hist_c: jnp.ndarray  # (B, K, 1, V) f32, newest first
+    hist_u: jnp.ndarray  # (B, K, 1, V) f32, newest first
+
+
+def push_history(hist, x):
+    """Shift a newest-first (B, K, ...) ring buffer, inserting ``x`` (B, ...)."""
+    return jnp.concatenate(
+        [x.astype(hist.dtype)[:, None], hist[:, :-1]], axis=1
+    )
 
 
 def guided_lane_step(
@@ -142,7 +176,10 @@ def guided_lane_step(
 
     Same cond/uncond pack as ``guided_decode_step`` but over slot capacity;
     the epilogue is the executor's active-masked ``lane_update`` (inactive
-    slots pay no NFEs and never cross).  Returns (next, new_state, gamma).
+    slots pay no NFEs and never cross).  When the lane carries history
+    buffers, the realized (cond, uncond) score pair is pushed so the
+    LinearAG window warms up during the guided phase.  Returns
+    (next, new_state, gamma).
     """
     executor = get_executor(executor)
     logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
@@ -153,9 +190,44 @@ def guided_lane_step(
         state.gamma_bar, state.active,
     )
     nxt = _select(res.eps, True, None)
+    hist_c, hist_u = state.hist_c, state.hist_u
+    if hist_c is not None:
+        hist_c = push_history(hist_c, logits_c)
+        hist_u = push_history(hist_u, logits_u)
     new_state = state._replace(
         tokens=nxt, position=state.position + 1, caches_c=new_c, caches_u=new_u,
+        crossed=res.crossed, nfes=res.nfes, hist_c=hist_c, hist_u=hist_u,
+    )
+    return nxt, new_state, res.gamma
+
+
+def linear_lane_step(
+    api, params, state: LinearLaneState, beta, *, scale: float,
+    executor: Optional[GuidanceExecutor] = None,
+):
+    """One LinearAG-lane step: 1 NFE conditional eval + 0-NFE extrapolated
+    unconditional (Eq. 8 over the slot's fixed-K window), CFG combine and
+    gamma against the estimate, per-slot crossing.  ``beta`` is the
+    (2K+1,) window coefficient vector fitted offline (``fit_ols_window``)
+    and loaded once at serve time.  Returns (next, new_state, gamma).
+    """
+    from repro.core.linear_ag import apply_window
+
+    executor = get_executor(executor)
+    logits_c, new_c = api.decode_step(
+        params, state.tokens, state.caches_c, state.position
+    )
+    u_hat = apply_window(beta, logits_c, state.hist_c, state.hist_u)
+    res = executor.linear_lane_update(
+        u_hat, logits_c, scale, state.crossed, state.nfes,
+        state.gamma_bar, state.active,
+    )
+    nxt = _select(res.eps, True, None)
+    new_state = state._replace(
+        tokens=nxt, position=state.position + 1, caches_c=new_c,
         crossed=res.crossed, nfes=res.nfes,
+        hist_c=push_history(state.hist_c, logits_c),
+        hist_u=push_history(state.hist_u, u_hat),
     )
     return nxt, new_state, res.gamma
 

@@ -10,9 +10,14 @@ turns that stream into the serving-side Table-1 accounting:
   had it never crossed gamma_bar);
 * a host-side *expected* NFE counter mirroring the device ledger rule
   (+2 per active uncrossed guided slot, +1 per active crossed/conditional
-  slot).  ``report()["totals"]["nfes_device"]`` must equal
+  slot, +1 per active LinearAG slot — its extrapolated unconditional
+  branch is 0-NFE).  ``report()["totals"]["nfes_device"]`` must equal
   ``["nfes_expected"]`` — the ledger-conservation invariant (DESIGN.md §7)
-  that catches lost or double-counted slots across migration and reuse;
+  that catches lost or double-counted slots across migration and reuse,
+  now across all three lanes;
+* per-lane slot-step totals (``lane_steps``) and the count of 0-NFE
+  extrapolated unconditional evaluations (``extrapolated_uncond`` — each
+  one is an NFE the linear lane saved while keeping guidance applied);
 * tokens/sec and step-latency percentiles (p50/p90/p99) over the run.
 
 ``to_json`` writes the report for ``benchmarks/bench_serving.py``; the
@@ -34,10 +39,12 @@ class RequestRecord:
     prompt_len: int
     max_new_tokens: int
     guided: bool
+    linear: bool = False  # opted into the LinearAG extrapolation lane
     submit_step: int = 0
     admit_step: Optional[int] = None
     crossed_step: Optional[int] = None  # batcher step at which AG truncated
-    migrated_step: Optional[int] = None
+    linear_step: Optional[int] = None  # entered the LinearAG lane (warmup done)
+    migrated_step: Optional[int] = None  # entered the conditional lane
     complete_step: Optional[int] = None
     tokens_out: int = 0
     nfes: float = 0.0  # device ledger at completion (decode NFEs)
@@ -69,11 +76,11 @@ class ServingTelemetry:
 
     # -- request lifecycle ---------------------------------------------------
 
-    def on_submit(self, rid, prompt_len, max_new_tokens, guided, step=0):
+    def on_submit(self, rid, prompt_len, max_new_tokens, guided, step=0, linear=False):
         self.requests[rid] = RequestRecord(
             rid=rid, prompt_len=int(prompt_len),
             max_new_tokens=int(max_new_tokens), guided=bool(guided),
-            submit_step=int(step),
+            linear=bool(linear), submit_step=int(step),
         )
 
     def on_admit(self, rid, step):
@@ -82,6 +89,11 @@ class ServingTelemetry:
     def on_cross(self, rid, step):
         if self.requests[rid].crossed_step is None:
             self.requests[rid].crossed_step = int(step)
+
+    def on_linear(self, rid, step):
+        """Request migrated guided -> linear (history window warm)."""
+        if self.requests[rid].linear_step is None:
+            self.requests[rid].linear_step = int(step)
 
     def on_migrate(self, rid, step):
         self.requests[rid].migrated_step = int(step)
@@ -98,9 +110,12 @@ class ServingTelemetry:
     def on_step(
         self, step, *, guided_active, guided_uncrossed, guided_capacity,
         cond_active, cond_capacity, dt_s, nfes_expected,
+        linear_active=0, linear_capacity=0,
     ):
         """One decode step.  ``nfes_expected`` is the host-mirror increment:
-        2*guided_uncrossed + 1*(guided_active - guided_uncrossed) + cond_active."""
+        2*guided_uncrossed + 1*(guided_active - guided_uncrossed)
+        + 1*linear_active + 1*cond_active (the linear lane's extrapolated
+        unconditional branch costs 0 NFEs)."""
         if self._t_start is None:
             self._t_start = self.clock() - dt_s
         self._t_end = self.clock()
@@ -111,6 +126,8 @@ class ServingTelemetry:
                 "step": int(step),
                 "guided_active": int(guided_active),
                 "guided_capacity": int(guided_capacity),
+                "linear_active": int(linear_active),
+                "linear_capacity": int(linear_capacity),
                 "cond_active": int(cond_active),
                 "cond_capacity": int(cond_capacity),
             }
@@ -132,17 +149,30 @@ class ServingTelemetry:
         nfes_total = sum(r.nfes for r in done)
         base_total = sum(r.baseline_nfes for r in guided_done)
         occ = self.step_occupancy
-        cap = [o["guided_capacity"] + o["cond_capacity"] for o in occ]
-        act = [o["guided_active"] + o["cond_active"] for o in occ]
+        cap = [
+            o["guided_capacity"] + o.get("linear_capacity", 0) + o["cond_capacity"]
+            for o in occ
+        ]
+        act = [
+            o["guided_active"] + o.get("linear_active", 0) + o["cond_active"]
+            for o in occ
+        ]
+        lane_steps = {
+            "guided": sum(o["guided_active"] for o in occ),
+            "linear": sum(o.get("linear_active", 0) for o in occ),
+            "cond": sum(o["cond_active"] for o in occ),
+        }
         return {
             "requests": {
                 str(r.rid): {
                     "prompt_len": r.prompt_len,
                     "max_new_tokens": r.max_new_tokens,
                     "guided": r.guided,
+                    "linear": r.linear,
                     "submit_step": r.submit_step,
                     "admit_step": r.admit_step,
                     "crossed_step": r.crossed_step,
+                    "linear_step": r.linear_step,
                     "migrated_step": r.migrated_step,
                     "complete_step": r.complete_step,
                     "tokens_out": r.tokens_out,
@@ -161,6 +191,11 @@ class ServingTelemetry:
                 "nfes_device": nfes_total,
                 "nfes_expected": self.nfes_expected,
                 "baseline_nfes": base_total,
+                "lane_steps": lane_steps,
+                # every LinearAG slot-step replaced one unconditional network
+                # evaluation with a 0-NFE affine extrapolation while keeping
+                # guidance applied — the lane's realized NFE saving.
+                "extrapolated_uncond": lane_steps["linear"],
                 "mean_savings_pct": (
                     100.0 * (1.0 - nfes_total_guided(guided_done) / base_total)
                     if base_total > 0

@@ -1,0 +1,157 @@
+"""Tiny deterministic ModelApi stand-in for fast serving-ladder tests.
+
+A 1-layer tanh-RNN language model with an SSM-style cache (hidden state
+only, like the Mamba blocks): the cache pytree carries the slot axis at 1
+(axis 0 is the scan-period stack), matching the engine/batcher convention,
+so the whole three-lane batcher machinery — admission, ring buffers,
+migration, ledger — runs against it unchanged, at ~1000x the speed of the
+reduced transformer configs.  Property tests (tests/test_properties.py)
+draw random workloads against this api; deterministic ladder tests reuse
+the same helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VOCAB = 17
+DIM = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class _ToyCfg:
+    vocab_size: int = VOCAB
+    name: str = "toy-lm"
+
+
+def _toy_params():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(42), 3)
+    return {
+        "emb": jax.random.normal(k1, (VOCAB, DIM)) * 0.5,
+        "W": jax.random.normal(k2, (DIM, DIM)) * 0.4,
+        "U": jax.random.normal(k3, (DIM, VOCAB)) * 0.8,
+    }
+
+
+def _cell(params, h, tok):
+    h = jnp.tanh(h @ params["W"] + params["emb"][tok])
+    return h, h @ params["U"]
+
+
+class ToyLM:
+    """Implements the ModelApi surface the serving stack consumes."""
+
+    cfg = _ToyCfg()
+
+    def init(self, key):
+        return _toy_params()
+
+    def init_caches(self, batch, cache_len):
+        return {"h": jnp.zeros((1, batch, DIM), jnp.float32)}
+
+    def forward(self, params, inputs, *, mode="prefill", cache_len=None):
+        toks = inputs["tokens"]  # (B, S)
+        B, S = toks.shape
+        h = jnp.zeros((B, DIM), jnp.float32)
+        outs = []
+        for s in range(S):
+            h, logits = _cell(params, h, toks[:, s])
+            outs.append(logits)
+        return jnp.stack(outs, axis=1), {"caches": {"h": h[None]}}
+
+    def decode_step(self, params, token, caches, position):
+        h, logits = _cell(params, caches["h"][0], token[:, 0])
+        return logits[:, None, :], {"h": h[None]}
+
+
+@functools.lru_cache(maxsize=1)
+def toy_serving():
+    """(api, params) shared by tests (cheap, deterministic)."""
+    api = ToyLM()
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=1)
+def toy_coeffs(K: int = 2):
+    """Window coefficients fitted on two collected toy CFG trajectories."""
+    from repro.core.linear_ag import fit_ols_window
+    from repro.serving import EngineConfig, Request, collect_cfg_logit_histories
+
+    api, params = toy_serving()
+    rng = np.random.default_rng(9)
+    reqs = [
+        Request(
+            prompt=rng.integers(1, VOCAB, size=5).astype(np.int32),
+            max_new_tokens=10,
+        )
+        for _ in range(2)
+    ]
+    ec = EngineConfig(scale=1.5, gamma_bar=2.0, max_batch=1)
+    eps_c, eps_u = collect_cfg_logit_histories(api, params, reqs, ec)
+    coeffs, _ = fit_ols_window(eps_c, eps_u, K=K)
+    return coeffs
+
+
+def run_ladder_case(reqs, arrivals, *, max_slots, gamma_bar=0.5, scale=1.5):
+    """Run a workload through the three-lane batcher and assert the ladder
+    invariants that must hold for ANY admission order / budgets / crossing
+    pattern:
+
+      * every request completes with exactly its own budget;
+      * NFE ledger conservation: device == host-expected == sum per-request;
+      * lane transitions are monotone on the guided -> linear -> cond
+        ladder (never backwards, never repeated);
+      * one step executable per (lane, bucket) — no silent retraces;
+      * B=1 oracle token parity for every guided request (eager LinearAG
+        ladder for linear requests, whole-batch engine otherwise).
+
+    Returns (batcher, done) for extra case-specific asserts.
+    """
+    from repro.serving import (
+        BatcherConfig,
+        EngineConfig,
+        GuidedEngine,
+        StepBatcher,
+        linear_ag_generate,
+    )
+    from repro.serving.batcher import LANE_ORDER
+
+    api, params = toy_serving()
+    coeffs = toy_coeffs()
+    ec = EngineConfig(scale=scale, gamma_bar=gamma_bar, max_batch=max_slots)
+    bat = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=max_slots), coeffs=coeffs
+    )
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, arrivals)]
+    done = bat.run()
+    assert set(done) == set(rids)
+
+    rep = bat.report()
+    t = rep["totals"]
+    assert t["nfes_device"] == t["nfes_expected"], (
+        t["nfes_device"], t["nfes_expected"])
+    assert t["nfes_device"] == sum(d["nfes"] for d in done.values())
+
+    for rid in rids:
+        assert len(done[rid]["tokens"]) == reqs[rids.index(rid)].max_new_tokens
+        hist = bat.lane_history[rid]
+        ranks = [LANE_ORDER.index(l) for l in hist]
+        assert ranks == sorted(set(ranks)), f"non-monotone ladder: {hist}"
+
+    for lane, counts in bat.compile_counts.items():
+        for cap, n in counts.items():
+            assert n == 1, f"{lane} lane retraced at capacity {cap}: {n}"
+
+    for r, rid in zip(reqs, rids):
+        if not r.guided:
+            continue
+        if r.linear:
+            oracle = linear_ag_generate(api, params, r, ec, coeffs)["tokens"]
+        else:
+            oracle = GuidedEngine(api, params, ec).generate([r])["tokens"][0]
+        np.testing.assert_array_equal(done[rid]["tokens"], oracle)
+    return bat, done

@@ -1,0 +1,163 @@
+"""Golden serving fixtures: seeded workloads + their expected outputs.
+
+``tests/test_golden.py`` locks the engine and both batcher variants
+bit-exactly (tokens, NFE ledgers, lifecycle steps) against
+``tests/fixtures/golden_serving.json`` so refactors cannot silently drift
+the decode path.  Regenerate deliberately after an *intended* numerical
+change:
+
+    PYTHONPATH=src python tests/make_golden.py
+
+The three-lane case stores the fitted window coefficients IN the fixture
+(rather than refitting at test time) so the lock is independent of the
+test host's LAPACK solve.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import numpy as np
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "golden_serving.json")
+
+
+@functools.lru_cache(maxsize=1)
+def golden_model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build
+
+    cfg = get_config("llama3.2-1b").reduced()
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _prompts(seed, lens):
+    cfg, _, _ = golden_model()
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32) for n in lens]
+
+
+def run_engine_case():
+    """Whole-batch engine: token AND score (gamma) trajectories."""
+    from repro.serving import EngineConfig, GuidedEngine, Request
+
+    cfg, api, params = golden_model()
+    p = _prompts(21, [6, 5, 4])
+    reqs = [
+        Request(prompt=p[0], max_new_tokens=8),
+        Request(prompt=p[1], max_new_tokens=8, negative_prompt=p[2]),
+    ]
+    ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=2)
+    out = GuidedEngine(api, params, ec).generate(reqs)
+    return {
+        "tokens": out["tokens"].tolist(),
+        "nfes": out["nfes"].tolist(),
+        "gammas": np.asarray(out["gammas"], np.float64).tolist(),
+    }
+
+
+def _batcher_record(bat, done, rids):
+    rep = bat.report()["requests"]
+    return {
+        str(rid): {
+            "tokens": done[rid]["tokens"].tolist(),
+            "nfes": done[rid]["nfes"],
+            "lane_history": bat.lane_history[rid],
+            "admit_step": rep[str(rid)]["admit_step"],
+            "crossed_step": rep[str(rid)]["crossed_step"],
+            "linear_step": rep[str(rid)]["linear_step"],
+            "migrated_step": rep[str(rid)]["migrated_step"],
+            "complete_step": rep[str(rid)]["complete_step"],
+        }
+        for rid in rids
+    }
+
+
+def run_batcher_case():
+    """Two-lane churn under a fixed seed: late arrival, slot reuse, a
+    never-crossing neighbour, plain traffic."""
+    from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
+
+    cfg, api, params = golden_model()
+    p = _prompts(22, [6, 5, 6, 4])
+    reqs = [
+        Request(prompt=p[0], max_new_tokens=8),
+        Request(prompt=p[1], max_new_tokens=6),
+        Request(prompt=p[2], max_new_tokens=5, gamma_bar=2.0),
+        Request(prompt=p[3], max_new_tokens=4, guided=False),
+    ]
+    ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=2)
+    bat = StepBatcher(api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)))
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 0, 2, 4])]
+    done = bat.run()
+    return {
+        "requests": _batcher_record(bat, done, rids),
+        "compile_counts": bat.compile_counts,
+    }
+
+
+def fit_golden_coeffs():
+    """Fit the three-lane case's window coefficients (generation time only;
+    the fixture stores the vector so test hosts never re-solve)."""
+    from repro.core.linear_ag import fit_ols_window
+    from repro.serving import EngineConfig, Request, collect_cfg_logit_histories
+
+    cfg, api, params = golden_model()
+    p = _prompts(20, [6, 5])
+    fit_reqs = [Request(prompt=q, max_new_tokens=10) for q in p]
+    eps_c, eps_u = collect_cfg_logit_histories(
+        api, params, fit_reqs, EngineConfig(scale=1.5, gamma_bar=2.0)
+    )
+    coeffs, _ = fit_ols_window(eps_c, eps_u, K=2)
+    return coeffs
+
+
+def run_three_lane_case(coeffs):
+    """Three-lane churn: full ladder, never-crossing linear request, slot
+    reuse — driven by the FIXTURE's coefficient vector."""
+    from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
+
+    cfg, api, params = golden_model()
+    p = _prompts(23, [6, 5, 6])
+    reqs = [
+        Request(prompt=p[0], max_new_tokens=12, linear=True),
+        Request(prompt=p[1], max_new_tokens=8, linear=True, gamma_bar=2.0),
+        Request(prompt=p[2], max_new_tokens=6),
+    ]
+    ec = EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
+    bat = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)),
+        coeffs=coeffs,
+    )
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]
+    done = bat.run()
+    t = bat.report()["totals"]
+    return {
+        "requests": _batcher_record(bat, done, rids),
+        "compile_counts": bat.compile_counts,
+        "lane_steps": t["lane_steps"],
+        "nfes_device": t["nfes_device"],
+    }
+
+
+def main():
+    coeffs = fit_golden_coeffs()
+    fixture = {
+        "engine": run_engine_case(),
+        "batcher": run_batcher_case(),
+        "coeffs": {"K": coeffs.K, "beta": coeffs.beta.tolist()},
+        "three_lane": run_three_lane_case(coeffs),
+    }
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump(fixture, f, indent=2, sort_keys=True)
+    print(f"wrote {FIXTURE}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,12 @@
 """Step-level continuous batching: churn, lane migration, slot reuse,
-compile-count and NFE-ledger-conservation invariants (DESIGN.md §7)."""
+compile-count and NFE-ledger-conservation invariants (DESIGN.md §7),
+including the three-lane LinearAG extrapolation ladder."""
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.linear_ag import fit_ols_window
 from repro.models import build
 from repro.serving import (
     BatcherConfig,
@@ -13,7 +15,10 @@ from repro.serving import (
     GuidedEngine,
     Request,
     StepBatcher,
+    collect_cfg_logit_histories,
+    linear_ag_generate,
 )
+from repro.serving.batcher import LANE_ORDER
 
 
 @pytest.fixture(scope="module")
@@ -191,6 +196,197 @@ def test_step_batcher_beats_round_scheduler(llama):
         round_stats,
     )
     assert step_stats["mean_savings_pct"] > 0
+
+
+# ---------------------------------------------------------------------------
+# three-lane ladder: the LinearAG extrapolation lane
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def coeffs(llama):
+    """Fixed-K window coefficients fitted on two collected CFG trajectories
+    (the serve-time artifact content)."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(5)
+    fit_reqs = [
+        Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=12),
+        Request(prompt=_prompt(rng, cfg, 5), max_new_tokens=12),
+    ]
+    eps_c, eps_u = collect_cfg_logit_histories(
+        api, params, fit_reqs, EngineConfig(scale=1.5, gamma_bar=2.0)
+    )
+    c, _ = fit_ols_window(eps_c, eps_u, K=2)
+    return c
+
+
+@pytest.fixture(scope="module")
+def linear_churn_run(llama, coeffs):
+    """Three-lane churn: linear requests with a late arrival joining a
+    reused slot, a never-crossing (quality-pinned) linear request, a
+    non-linear guided neighbour and plain unguided traffic."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(5)
+    _ = [_prompt(rng, cfg, 6), _prompt(rng, cfg, 5)]  # skip the fit prompts
+    ec = EngineConfig(scale=1.5, gamma_bar=0.45, max_batch=2)
+    reqs = [
+        Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=14, linear=True),
+        Request(prompt=_prompt(rng, cfg, 5), max_new_tokens=6),
+        Request(
+            prompt=_prompt(rng, cfg, 6), max_new_tokens=10,
+            linear=True, gamma_bar=2.0,
+        ),
+        Request(prompt=_prompt(rng, cfg, 4), max_new_tokens=5, guided=False),
+    ]
+    arrivals = [0, 0, 4, 6]
+    bat = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)),
+        coeffs=coeffs,
+    )
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, arrivals)]
+    done = bat.run()
+    return ec, reqs, rids, bat, done
+
+
+def test_linear_churn_completes_all(linear_churn_run):
+    ec, reqs, rids, bat, done = linear_churn_run
+    assert set(done) == set(rids)
+    for r, rid in zip(reqs, rids):
+        assert len(done[rid]["tokens"]) == r.max_new_tokens
+
+
+def test_linear_churn_b1_parity_with_eager_oracle(llama, linear_churn_run, coeffs):
+    """Acceptance: the linear lane is token-identical to the eager LinearAG
+    ladder at B=1 under churn — late arrivals, slot reuse, never-crossing
+    neighbours included.  Non-linear guided requests still match the
+    whole-batch engine."""
+    cfg, api, params = llama
+    ec, reqs, rids, bat, done = linear_churn_run
+    for r, rid in zip(reqs, rids):
+        if not r.guided:
+            continue
+        if r.linear:
+            out = linear_ag_generate(api, params, r, ec, coeffs)
+            oracle = out["tokens"]
+            assert done[rid]["nfes"] == out["nfes"]
+        else:
+            oracle = GuidedEngine(api, params, ec).generate([r])["tokens"][0]
+        np.testing.assert_array_equal(done[rid]["tokens"], oracle)
+
+
+def test_lane_ladder_monotone(linear_churn_run):
+    """Transitions only ever move down the guided -> linear -> cond ladder."""
+    ec, reqs, rids, bat, done = linear_churn_run
+    for rid in rids:
+        ranks = [LANE_ORDER.index(l) for l in bat.lane_history[rid]]
+        assert ranks == sorted(set(ranks)), bat.lane_history[rid]
+    # the workload exercises the full ladder: some request crossed gamma_bar
+    # from INSIDE the linear lane (guided -> linear -> cond)
+    assert any(
+        bat.lane_history[rid] == ["guided", "linear", "cond"] for rid in rids
+    ), {r: bat.lane_history[r] for r in rids}
+
+
+def test_linear_never_crossing_nfe_formula(linear_churn_run, coeffs):
+    """A quality-pinned linear request pays 2 NFEs for K warmup steps and
+    1 NFE (cond eval only; extrapolated uncond is free) for every step
+    after — and never reaches the cond lane."""
+    ec, reqs, rids, bat, done = linear_churn_run
+    (i,) = [i for i, r in enumerate(reqs) if r.gamma_bar is not None]
+    steps = reqs[i].max_new_tokens - 1
+    assert done[rids[i]]["nfes"] == 2 * coeffs.K + (steps - coeffs.K)
+    assert bat.lane_history[rids[i]] == ["guided", "linear"]
+    rec = bat.report()["requests"][str(rids[i])]
+    assert rec["linear_step"] is not None and rec["migrated_step"] is None
+
+
+def test_one_executable_per_lane_bucket_three_lanes(linear_churn_run):
+    """Exactly one step executable per (lane, bucket) across the whole
+    three-lane churn run — admissions, growth, both migration kinds and
+    slot reuse trigger no retraces."""
+    ec, reqs, rids, bat, done = linear_churn_run
+    for lane in ("guided", "linear", "cond"):
+        assert bat.compile_counts[lane], f"{lane} lane never ran"
+        for cap, n in bat.compile_counts[lane].items():
+            assert n == 1, f"{lane} lane retraced at capacity {cap}: {n}"
+            assert cap in bat.bc.buckets
+
+
+def test_linear_ledger_conservation(linear_churn_run):
+    """Device ledger == host mirror (+2 uncrossed guided, +1 linear, +1
+    cond, 0 inactive) across all three lanes, both migration kinds and
+    slot reuse."""
+    ec, reqs, rids, bat, done = linear_churn_run
+    t = bat.report()["totals"]
+    assert t["nfes_device"] == pytest.approx(t["nfes_expected"])
+    assert t["nfes_device"] == pytest.approx(sum(d["nfes"] for d in done.values()))
+
+
+def test_linear_telemetry_fields(linear_churn_run):
+    ec, reqs, rids, bat, done = linear_churn_run
+    rep = bat.report()
+    t = rep["totals"]
+    assert t["lane_steps"]["linear"] > 0
+    assert t["extrapolated_uncond"] == t["lane_steps"]["linear"]
+    for rid in rids:
+        rec = rep["requests"][str(rid)]
+        if rec["linear_step"] is not None:
+            assert rec["admit_step"] <= rec["linear_step"]
+            if rec["migrated_step"] is not None:
+                # entered linear before crossing into cond
+                assert rec["linear_step"] < rec["migrated_step"]
+                assert rec["crossed_step"] <= rec["migrated_step"]
+
+
+def test_linear_slot_reuse_no_history_bleed(llama, coeffs):
+    """A linear request admitted into a reused slot must decode exactly as
+    if it had the machine to itself: full-row overwrite covers the history
+    ring buffers too (zeroed at admission)."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(13)
+    ec = EngineConfig(scale=1.5, gamma_bar=2.0, max_batch=1)
+    a = Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=9, linear=True)
+    b = Request(prompt=_prompt(rng, cfg, 6), max_new_tokens=9, linear=True)
+    bat = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=1, buckets=(1,)), coeffs=coeffs
+    )
+    ra, rb = bat.submit(a), bat.submit(b)  # b waits for a's slots
+    done = bat.run()
+    for r, rid in ((a, ra), (b, rb)):
+        oracle = linear_ag_generate(api, params, r, ec, coeffs)
+        np.testing.assert_array_equal(done[rid]["tokens"], oracle["tokens"])
+        assert done[rid]["nfes"] == oracle["nfes"]
+
+
+def test_three_lane_beats_two_lane_on_realized_savings(llama, coeffs):
+    """Acceptance: with a quality-pinned (never-crossing) request in the
+    mix, the linear lane strictly improves realized savings over the
+    two-lane batcher on the same workload."""
+    cfg, api, params = llama
+    rng = np.random.default_rng(17)
+    ec = EngineConfig(scale=1.5, gamma_bar=-1.0, max_batch=2)
+    prompts = [_prompt(rng, cfg, 6), _prompt(rng, cfg, 5)]
+
+    def workload(linear):
+        return [
+            Request(prompt=prompts[0], max_new_tokens=8, linear=linear),
+            Request(
+                prompt=prompts[1], max_new_tokens=10, gamma_bar=2.0,
+                linear=linear,
+            ),
+        ]
+
+    results = {}
+    for linear in (False, True):
+        bat = StepBatcher(
+            api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)),
+            coeffs=coeffs if linear else None,
+        )
+        for i, r in enumerate(workload(linear)):
+            bat.submit(r, arrival_step=i)
+        bat.run()
+        results[linear] = bat.stats()["mean_savings_pct"]
+    assert results[True] > results[False], results
 
 
 def test_eos_completion(llama):

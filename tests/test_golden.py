@@ -1,0 +1,97 @@
+"""Golden regression lock: seeded serving workloads must reproduce the
+checked-in token/score trajectories bit-exactly (tokens, NFE ledgers,
+lifecycle steps; gammas to float tolerance), so refactors of the decode
+path, the lane state machine or the executor cannot silently drift.
+
+Fixtures live in tests/fixtures/golden_serving.json; regenerate them only
+for an *intended* numerical change via::
+
+    PYTHONPATH=src python tests/make_golden.py
+"""
+import json
+
+import numpy as np
+import pytest
+
+from tests.make_golden import (
+    FIXTURE,
+    fit_golden_coeffs,
+    run_batcher_case,
+    run_engine_case,
+    run_three_lane_case,
+)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def _check_requests(got, want):
+    assert set(got) == set(want)
+    for rid, g in got.items():
+        w = want[rid]
+        np.testing.assert_array_equal(
+            np.asarray(g["tokens"]), np.asarray(w["tokens"]),
+            err_msg=f"request {rid} token drift",
+        )
+        assert g["nfes"] == w["nfes"], f"request {rid} NFE ledger drift"
+        for field in (
+            "lane_history", "admit_step", "crossed_step", "linear_step",
+            "migrated_step", "complete_step",
+        ):
+            assert g[field] == w[field], (rid, field, g[field], w[field])
+
+
+def test_engine_tokens_and_gammas_locked(golden):
+    got = run_engine_case()
+    want = golden["engine"]
+    np.testing.assert_array_equal(
+        np.asarray(got["tokens"]), np.asarray(want["tokens"])
+    )
+    np.testing.assert_array_equal(np.asarray(got["nfes"]), np.asarray(want["nfes"]))
+    np.testing.assert_allclose(
+        np.asarray(got["gammas"]), np.asarray(want["gammas"]), atol=1e-5
+    )
+
+
+def test_batcher_two_lane_locked(golden):
+    got = run_batcher_case()
+    _check_requests(got["requests"], golden["batcher"]["requests"])
+    assert got["compile_counts"] == {
+        k: {int(c): n for c, n in v.items()}
+        for k, v in golden["batcher"]["compile_counts"].items()
+    }
+
+
+def test_batcher_three_lane_locked(golden):
+    """The three-lane run is driven by the FIXTURE's coefficient vector
+    (not a refit), so the lock also covers the artifact-loading path."""
+    from repro.core.linear_ag import WindowCoeffs
+
+    coeffs = WindowCoeffs(
+        K=int(golden["coeffs"]["K"]),
+        beta=np.asarray(golden["coeffs"]["beta"], np.float32),
+    )
+    got = run_three_lane_case(coeffs)
+    _check_requests(got["requests"], golden["three_lane"]["requests"])
+    assert got["lane_steps"] == golden["three_lane"]["lane_steps"]
+    assert got["nfes_device"] == golden["three_lane"]["nfes_device"]
+    # the golden workload must keep exercising the full ladder (a crossing
+    # from INSIDE the linear lane) and the never-crossing linear tail
+    histories = [r["lane_history"] for r in got["requests"].values()]
+    assert ["guided", "linear", "cond"] in histories, histories
+    assert ["guided", "linear"] in histories, histories
+
+
+def test_golden_coeffs_refit_is_close(golden):
+    """Refitting on this host should land near the stored vector (loose
+    tolerance: guards against accidental regressor-order changes without
+    locking LAPACK bit patterns)."""
+    refit = fit_golden_coeffs()
+    assert refit.K == int(golden["coeffs"]["K"])
+    np.testing.assert_allclose(
+        refit.beta, np.asarray(golden["coeffs"]["beta"], np.float32),
+        rtol=1e-3, atol=1e-3,
+    )

@@ -55,6 +55,43 @@ def test_flash_attention_sweep(S, hq, hkv, d, causal, dtype, key):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
 
 
+def test_linear_combine_interpret_gating():
+    """interpret=None resolves per platform: the compiled Mosaic kernel only
+    on a real TPU backend, interpret (validation) mode everywhere else —
+    so TPU/GPU-hosted runs never silently fall back to the interpreter."""
+    from repro.kernels.linear_combine import default_interpret
+
+    assert default_interpret() == (jax.default_backend() != "tpu")
+
+
+def test_linear_combine_default_gating_matches_explicit(key):
+    """The platform-gated default produces the same numbers as forcing the
+    resolved mode explicitly (and, off-TPU, as the reference oracle)."""
+    h = jax.random.normal(key, (5, 1024))
+    b = jax.random.normal(jax.random.PRNGKey(2), (5,))
+    gated = linear_combine(h, b)  # interpret=None -> platform default
+    explicit = linear_combine(h, b, interpret=jax.default_backend() != "tpu")
+    np.testing.assert_array_equal(np.asarray(gated), np.asarray(explicit))
+    np.testing.assert_allclose(
+        np.asarray(gated), np.asarray(linear_combine_ref(h, b)[0]), atol=1e-5
+    )
+
+
+@pytest.mark.skipif(
+    jax.default_backend() != "tpu",
+    reason="compiled (non-interpret) Pallas kernels need a TPU backend",
+)
+def test_linear_combine_compiled_vs_interpret_parity(key):
+    """On TPU the compiled kernel must agree with interpret mode."""
+    h = jax.random.normal(key, (7, 2048))
+    b = jax.random.normal(jax.random.PRNGKey(2), (7,))
+    compiled = linear_combine(h, b, interpret=False)
+    interp = linear_combine(h, b, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(compiled), np.asarray(interp), atol=1e-5, rtol=1e-5
+    )
+
+
 def test_fused_guidance_matches_core_semantics(key):
     """The kernel implements exactly core.guidance.cfg_combine_with_gamma."""
     from repro.core.guidance import cfg_combine_with_gamma

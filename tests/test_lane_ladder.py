@@ -1,0 +1,95 @@
+"""Deterministic three-lane ladder invariants on the toy LM (fast path).
+
+The hypothesis suite in tests/test_properties.py drives the same helper
+(`tests/_toy_lm.run_ladder_case`) with *random* admission orders, budgets
+and crossing thresholds; this file pins a set of hand-picked adversarial
+cases so the invariants are exercised even where hypothesis is not
+installed (it is importorskip'd there)."""
+import numpy as np
+import pytest
+
+from repro.serving import EngineConfig, Request, linear_ag_generate
+from tests._toy_lm import VOCAB, run_ladder_case, toy_coeffs, toy_serving
+
+
+def _p(rng, n):
+    return rng.integers(1, VOCAB, size=n).astype(np.int32)
+
+
+def test_full_ladder_mixed_churn():
+    """Linear, never-crossing-linear, plain-guided and unguided requests
+    with late arrivals through 2 slots: all ladder invariants hold and the
+    full guided -> linear -> cond path is taken."""
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=_p(rng, 4), max_new_tokens=9, linear=True),
+        Request(prompt=_p(rng, 5), max_new_tokens=6),
+        Request(prompt=_p(rng, 3), max_new_tokens=12, linear=True, gamma_bar=2.0),
+        Request(prompt=_p(rng, 4), max_new_tokens=5, guided=False),
+        Request(prompt=_p(rng, 4), max_new_tokens=7, linear=True),
+    ]
+    bat, done = run_ladder_case(
+        reqs, [0, 0, 2, 3, 5], max_slots=2, gamma_bar=0.95
+    )
+    histories = [bat.lane_history[r] for r in done]
+    assert ["guided", "linear", "cond"] in histories, histories
+    assert ["guided", "linear"] in histories, histories  # quality-pinned
+    assert ["cond"] in histories  # unguided admitted straight to cond
+
+
+def test_single_slot_serializes_ladder():
+    """max_slots=1 forces strict slot reuse across every lane."""
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(prompt=_p(rng, 4), max_new_tokens=8, linear=True),
+        Request(prompt=_p(rng, 4), max_new_tokens=8, linear=True, gamma_bar=2.0),
+        Request(prompt=_p(rng, 3), max_new_tokens=4, guided=False),
+    ]
+    run_ladder_case(reqs, [0, 0, 0], max_slots=1, gamma_bar=0.95)
+
+
+def test_immediate_crossing_skips_linear_lane():
+    """gamma_bar=-1 crosses on the first decode step — before the K-step
+    warmup completes — so a linear-opted request legally skips the linear
+    lane (guided -> cond) and the ladder stays monotone."""
+    rng = np.random.default_rng(2)
+    reqs = [Request(prompt=_p(rng, 4), max_new_tokens=6, linear=True, gamma_bar=-1.0)]
+    bat, done = run_ladder_case(reqs, [0], max_slots=1, gamma_bar=0.95)
+    (rid,) = done
+    assert bat.lane_history[rid] == ["guided", "cond"]
+
+
+def test_budget_inside_warmup_never_leaves_guided():
+    """A budget shorter than the warmup window completes in the guided lane."""
+    rng = np.random.default_rng(3)
+    K = toy_coeffs().K
+    reqs = [
+        Request(
+            prompt=_p(rng, 4), max_new_tokens=K, linear=True, gamma_bar=2.0
+        )
+    ]
+    bat, done = run_ladder_case(reqs, [0], max_slots=1, gamma_bar=0.95)
+    (rid,) = done
+    assert bat.lane_history[rid] == ["guided"]
+    assert done[rid]["nfes"] == 2 * (K - 1)
+
+
+def test_oracle_lane_trace_matches_batcher_history():
+    """The eager oracle's per-step lane labels compress to exactly the
+    batcher's lane_history at B=1."""
+    api, params = toy_serving()
+    coeffs = toy_coeffs()
+    rng = np.random.default_rng(4)
+    r = Request(prompt=_p(rng, 5), max_new_tokens=10, linear=True)
+    ec = EngineConfig(scale=1.5, gamma_bar=0.95, max_batch=1)
+    ora = linear_ag_generate(api, params, r, ec, coeffs)
+    compressed = [ora["lanes"][0]]
+    for lane in ora["lanes"][1:]:
+        if lane != compressed[-1]:
+            compressed.append(lane)
+    bat, done = run_ladder_case([r], [0], max_slots=1, gamma_bar=0.95)
+    (rid,) = done
+    assert bat.lane_history[rid] == compressed
+    assert done[rid]["nfes"] == ora["nfes"]
+    rep = bat.report()["totals"]
+    assert rep["extrapolated_uncond"] == ora["linear_steps"]

@@ -1,10 +1,22 @@
-"""OLS fitting + LinearAG (section 5.1 / Appendix C)."""
+"""OLS fitting + LinearAG (section 5.1 / Appendix C), including the
+fixed-K window variant the serving lane applies (DESIGN.md §7)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro import perf_flags
 from repro.core import policy as pol
-from repro.core.linear_ag import eval_ols, fit_ols, linear_ag_sample, lr_predictor
+from repro.core.linear_ag import (
+    apply_window,
+    eval_ols,
+    fit_ols,
+    fit_ols_window,
+    linear_ag_sample,
+    load_window_coeffs,
+    lr_predictor,
+    save_window_coeffs,
+)
 from repro.diffusion.sampler import collect_pair_trajectory, sample_with_policy
 from repro.diffusion.solvers import get_solver
 from tests._toy import make_toy, NUM_CLASSES, DIM
@@ -42,6 +54,80 @@ def test_lr_predictor_matches_manual():
     manual = b[0] * h["eps_c"][0] + b[1] * h["eps_c"][1] + b[2] * h["eps_c"][2]
     manual = manual + b[3] * h["eps_u"][0] + b[4] * h["eps_u"][1]
     np.testing.assert_allclose(out, manual, rtol=1e-5)
+
+
+def test_fit_ols_window_recovers_planted_window_affine():
+    """If eps_u really is a fixed affine window of the past, the pooled
+    K-window fit recovers the planted coefficients exactly."""
+    rng = np.random.default_rng(0)
+    N, steps, D, K = 16, 7, 24, 2
+    eps_c = rng.normal(size=(N, steps, D))
+    eps_u = np.zeros_like(eps_c)
+    # plant (newest-first window order): cur_c, c_{t-1}, c_{t-2}, u_{t-1}, u_{t-2}
+    planted = np.array([0.3, 0.5, -0.2, 0.25, 0.1])
+    for t in range(steps):
+        eps_u[:, t] = 0.3 * eps_c[:, t]
+        if t >= 1:
+            eps_u[:, t] += 0.5 * eps_c[:, t - 1] + 0.25 * eps_u[:, t - 1]
+        if t >= 2:
+            eps_u[:, t] += -0.2 * eps_c[:, t - 2] + 0.1 * eps_u[:, t - 2]
+    coeffs, mse = fit_ols_window(eps_c, eps_u, K=K)
+    assert mse < 1e-10
+    np.testing.assert_allclose(coeffs.beta, planted, atol=1e-5)
+
+
+def test_apply_window_matches_manual_and_oldest_first_ordering():
+    rng = np.random.default_rng(1)
+    K, B, D = 2, 3, 16
+    eps_c = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    hist_c = jnp.asarray(rng.normal(size=(B, K, D)), jnp.float32)
+    hist_u = jnp.asarray(rng.normal(size=(B, K, D)), jnp.float32)
+    beta = jnp.asarray([0.3, 0.5, -0.2, 0.25, 0.1], jnp.float32)
+    out = apply_window(beta, eps_c, hist_c, hist_u)
+    manual = (
+        0.3 * eps_c
+        + 0.5 * hist_c[:, 0] - 0.2 * hist_c[:, 1]  # newest first
+        + 0.25 * hist_u[:, 0] + 0.1 * hist_u[:, 1]
+    )
+    np.testing.assert_allclose(out, manual, rtol=1e-5, atol=1e-6)
+
+
+def test_apply_window_fused_kernel_parity():
+    """perf_flags.fused_guidance routes the combine through the Pallas
+    linear_combine kernel — same numbers as the reference XLA path."""
+    rng = np.random.default_rng(2)
+    K, B = 3, 2
+    shape = (B, 1, 512)
+    eps_c = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    hist_c = jnp.asarray(rng.normal(size=(B, K) + shape[1:]), jnp.float32)
+    hist_u = jnp.asarray(rng.normal(size=(B, K) + shape[1:]), jnp.float32)
+    beta = jnp.asarray(rng.normal(size=(2 * K + 1,)), jnp.float32)
+    ref = apply_window(beta, eps_c, hist_c, hist_u)
+    prev = perf_flags.set_flags(fused_guidance=True)
+    try:
+        fused = apply_window(beta, eps_c, hist_c, hist_u)
+    finally:
+        perf_flags.set_flags(**prev)
+    assert ref.shape == fused.shape == shape
+    np.testing.assert_allclose(ref, fused, rtol=1e-5, atol=1e-5)
+
+
+def test_window_coeffs_artifact_round_trip(tmp_path):
+    rng = np.random.default_rng(3)
+    coeffs, mse = fit_ols_window(
+        rng.normal(size=(6, 6, 12)), rng.normal(size=(6, 6, 12)), K=2
+    )
+    path = str(tmp_path / "nested" / "coeffs.npz")
+    save_window_coeffs(path, coeffs, mse=mse)
+    loaded = load_window_coeffs(path)
+    assert loaded.K == coeffs.K
+    np.testing.assert_array_equal(loaded.beta, coeffs.beta)
+
+
+def test_fit_ols_window_needs_more_steps_than_window():
+    rng = np.random.default_rng(4)
+    with pytest.raises(AssertionError):
+        fit_ols_window(rng.normal(size=(4, 2, 8)), rng.normal(size=(4, 2, 8)), K=2)
 
 
 def test_linear_ag_on_toy_close_to_cfg():

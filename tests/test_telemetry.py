@@ -1,0 +1,140 @@
+"""Direct ServingTelemetry coverage: percentile math, the realized-savings
+formula and the three-lane accounting, against hand-computed values (the
+batcher tests exercise these only indirectly)."""
+import numpy as np
+import pytest
+
+from repro.serving.telemetry import RequestRecord, ServingTelemetry
+
+
+class FakeClock:
+    """Deterministic clock: each call advances by ``tick`` seconds."""
+
+    def __init__(self, tick=0.05):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+def _mk(latencies_s=(0.010, 0.020, 0.030, 0.040)):
+    tel = ServingTelemetry(clock=FakeClock())
+    for i, dt in enumerate(latencies_s):
+        tel.on_step(
+            i, guided_active=1, guided_uncrossed=1, guided_capacity=2,
+            cond_active=1, cond_capacity=1, linear_active=1, linear_capacity=1,
+            dt_s=dt, nfes_expected=4.0,  # 2 guided + 1 linear + 1 cond
+        )
+    return tel
+
+
+def test_step_latency_percentiles_hand_computed():
+    """np.percentile linear interpolation on [10, 20, 30, 40] ms:
+    p50 = 25, p90 = 37, p99 = 39.7; mean = 25."""
+    t = _mk().report()["totals"]["step_latency_ms"]
+    assert t["mean"] == pytest.approx(25.0)
+    assert t["p50"] == pytest.approx(25.0)
+    assert t["p90"] == pytest.approx(37.0)
+    assert t["p99"] == pytest.approx(39.7)
+
+
+def test_latency_empty_run_is_zeroed():
+    t = ServingTelemetry(clock=FakeClock()).report()["totals"]
+    assert t["step_latency_ms"] == {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+    assert t["wall_time_s"] == 0.0 and t["tokens_per_sec"] == 0.0
+    assert t["mean_occupancy"] == 0.0
+
+
+def test_request_savings_pct_hand_computed():
+    """Baseline is the always-CFG price 2*(tokens-1); a guided request that
+    finished at 5 NFEs over 5 tokens saved 1 - 5/8 = 37.5%."""
+    r = RequestRecord(rid=0, prompt_len=4, max_new_tokens=5, guided=True)
+    r.tokens_out, r.nfes, r.complete_step = 5, 5.0, 9
+    assert r.baseline_nfes == 8.0
+    assert r.savings_pct == pytest.approx(37.5)
+    # an unguided request's baseline is 1 NFE/step (it can never save)
+    u = RequestRecord(rid=1, prompt_len=4, max_new_tokens=4, guided=False)
+    u.tokens_out, u.nfes, u.complete_step = 4, 3.0, 9
+    assert u.baseline_nfes == 3.0
+    assert u.savings_pct == pytest.approx(0.0)
+    # degenerate single-token request: zero baseline, zero savings
+    d = RequestRecord(rid=2, prompt_len=4, max_new_tokens=1, guided=True)
+    d.tokens_out, d.complete_step = 1, 0
+    assert d.baseline_nfes == 0.0 and d.savings_pct == 0.0
+
+
+def test_mean_savings_over_guided_population_only():
+    """totals.mean_savings_pct pools guided requests only: with guided
+    ledgers (5 of 8) and (4 of 4) -> 100 * (1 - 9/12) = 25%; the unguided
+    request must not dilute the baseline."""
+    tel = ServingTelemetry(clock=FakeClock())
+    tel.on_submit(0, 4, 5, True)
+    tel.on_submit(1, 4, 3, True)
+    tel.on_submit(2, 4, 4, False)
+    for rid in (0, 1, 2):
+        tel.on_admit(rid, 0)
+    tel.on_complete(0, 5, nfes=5.0, tokens_out=5)
+    tel.on_complete(1, 5, nfes=4.0, tokens_out=3)
+    tel.on_complete(2, 5, nfes=3.0, tokens_out=4)
+    t = tel.report()["totals"]
+    assert t["baseline_nfes"] == 12.0
+    assert t["nfes_device"] == 12.0  # all lanes' ledgers, incl. unguided
+    assert t["mean_savings_pct"] == pytest.approx(25.0)
+
+
+def test_three_lane_step_accounting_and_conservation():
+    tel = _mk()
+    t = tel.report()["totals"]
+    assert t["lane_steps"] == {"guided": 4, "linear": 4, "cond": 4}
+    assert t["extrapolated_uncond"] == 4  # one 0-NFE extrapolation per step
+    assert t["nfes_expected"] == pytest.approx(16.0)
+    # occupancy: 3 active of 4 capacity every step
+    assert t["mean_occupancy"] == pytest.approx(0.75)
+
+
+def test_tokens_per_sec_consistent_with_wall_time():
+    tel = _mk()
+    tel.on_submit(0, 4, 9, True)
+    tel.on_admit(0, 0)
+    tel.on_complete(0, 3, nfes=12.0, tokens_out=9)
+    t = tel.report()["totals"]
+    assert t["wall_time_s"] > 0
+    assert t["tokens_per_sec"] == pytest.approx(9 / t["wall_time_s"])
+
+
+def test_lifecycle_steps_recorded_once():
+    """crossed/linear steps latch the FIRST occurrence; migration records
+    the cond entry."""
+    tel = ServingTelemetry(clock=FakeClock())
+    tel.on_submit(0, 4, 8, True, linear=True)
+    tel.on_admit(0, 1)
+    tel.on_linear(0, 3)
+    tel.on_linear(0, 4)  # ignored
+    tel.on_cross(0, 5)
+    tel.on_cross(0, 6)  # ignored
+    tel.on_migrate(0, 5)
+    tel.on_complete(0, 7, nfes=10.0, tokens_out=8)
+    r = tel.report()["requests"]["0"]
+    assert r["linear"] is True
+    assert r["admit_step"] == 1
+    assert r["linear_step"] == 3
+    assert r["crossed_step"] == 5
+    assert r["migrated_step"] == 5
+    assert r["complete_step"] == 7
+    assert r["reason"] == "budget"
+
+
+def test_two_lane_on_step_backward_compatible():
+    """Callers that never pass linear kwargs (two-lane batcher, older
+    benchmarks) still account correctly with linear_* defaulted to 0."""
+    tel = ServingTelemetry(clock=FakeClock())
+    tel.on_step(
+        0, guided_active=2, guided_uncrossed=1, guided_capacity=2,
+        cond_active=1, cond_capacity=2, dt_s=0.01, nfes_expected=4.0,
+    )
+    t = tel.report()["totals"]
+    assert t["lane_steps"] == {"guided": 2, "linear": 0, "cond": 1}
+    assert t["extrapolated_uncond"] == 0
+    assert t["mean_occupancy"] == pytest.approx(3 / 4)
