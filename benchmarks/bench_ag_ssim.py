@@ -5,7 +5,6 @@ Claim validated: AG is strictly better at replicating the baseline than
 reducing the number of diffusion steps, across the NFE range.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import N_CLASSES, emit, get_trained_dit

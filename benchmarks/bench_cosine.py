@@ -4,7 +4,6 @@ Claim validated: gamma_t rises (near-monotonically) toward 1 during the
 denoising process — the convergence AG exploits.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import N_CLASSES, emit, get_trained_dit

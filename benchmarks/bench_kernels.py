@@ -7,7 +7,6 @@ of the XLA-fused reference as the us_per_call column.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core.executor import GuidanceExecutor

@@ -6,7 +6,6 @@ Claim validated: LinearAG > naive alternation (the LR captures real path
 regularity), at equal NFEs.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import N_CLASSES, emit, get_trained_dit

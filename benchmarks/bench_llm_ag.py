@@ -3,7 +3,6 @@
 Metrics: NFE savings, per-step gamma trace, and the fidelity of AG decode
 vs full-CFG decode (top-1 agreement over generated tokens).
 """
-import jax
 import numpy as np
 
 from benchmarks.common import emit, get_trained_lm

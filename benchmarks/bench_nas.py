@@ -5,7 +5,6 @@ high early in the diffusion process and decays toward the end, while
 cond/uncond weights rise late.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import N_CLASSES, emit, get_trained_dit

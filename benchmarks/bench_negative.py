@@ -14,7 +14,6 @@ fed to the uncond branch.  Validations:
        non-empty negative prompts" (Fig. 7).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import N_CLASSES, emit, get_trained_dit

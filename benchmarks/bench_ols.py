@@ -1,7 +1,6 @@
 """Fig. 15 reproduction: per-step OLS train/test MSE for the LinearAG
 estimator (Eq. 8), fit on stored CFG trajectories."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import N_CLASSES, emit, get_trained_dit

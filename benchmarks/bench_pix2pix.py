@@ -26,7 +26,6 @@ from repro.metrics.ssim import ssim
 from repro.models import build
 from repro.training import checkpoint
 from repro.training.optim import adamw
-from repro.training.train_loop import make_dit_train_step
 
 K = 4  # classes per condition; composite table is (K+1)^2
 P2P_STEPS = int(os.environ.get("REPRO_P2P_STEPS", "500"))

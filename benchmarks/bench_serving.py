@@ -6,8 +6,14 @@ scheduler, the two-lane step batcher, and the three-lane batcher with the
 LinearAG extrapolation lane enabled (guided requests opt in; window
 coefficients fitted from a few collected CFG trajectories), and reports
 realized NFE savings vs the always-CFG baseline, tokens/sec and
-step-latency percentiles.  Writes ``BENCH_serving.json`` — the serving
-perf trajectory (EXPERIMENTS.md).
+step-latency percentiles.
+
+Each run APPENDS a timestamped entry to the ``history`` list in
+``BENCH_serving.json`` (a legacy single-snapshot file is migrated in
+place), so the serving perf trajectory accumulates across commits
+(EXPERIMENTS.md).  ``--smoke`` additionally fails if realized three-lane
+savings regress more than ``REGRESSION_PTS`` vs the previous comparable
+entry — the serving-smoke CI job's gate.
 
 Modes:
   --smoke    untrained reduced model, gamma_bar=-1 (crossing forced at the
@@ -17,21 +23,64 @@ Modes:
              never-crossing quality-pinned request is what the linear lane
              rescues from the 2-NFE price).  Asserts savings ladder:
              round < two-lane < three-lane, all > 0.
+  --mesh dxm run the three-lane batcher sharded on a (d, m) data x model
+             host mesh (DESIGN.md §8) and record the point under
+             ``three_lane_sharded`` — savings/ledgers must match the
+             unsharded batcher exactly (tokens are bit-identical).
   (default)  trained reduced model via benchmarks.common.get_trained_lm
              with a realistic gamma_bar.
 
-Usage: PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
+Usage: PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--mesh dxm]
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
 import sys
 
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 import numpy as np
+
+# --smoke fails when realized three-lane savings drop more than this many
+# percentage points vs the previous smoke entry in the history
+REGRESSION_PTS = 2.0
+
+
+def load_history(path) -> list:
+    """Existing run entries; migrates the legacy single-snapshot dict."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "history" in data:
+        return data["history"]
+    return [data]  # legacy snapshot becomes the first history entry
+
+
+# config knobs that must match for two history entries' savings to be
+# comparable (mesh is excluded: sharded runs are bit-identical by contract)
+COMPARABLE_KEYS = (
+    "arch", "smoke", "requests", "max_slots", "scale", "gamma_bar",
+    "linear_window", "seed",
+)
+
+
+def previous_smoke_savings(history, config) -> float | None:
+    """Headline (three-lane, unsharded) savings of the last history entry
+    whose workload knobs match ``config`` — a locally-committed run with
+    different knobs must not gate an incomparable CI run."""
+    for entry in reversed(history):
+        prev = entry.get("config", {})
+        if any(prev.get(k) != config.get(k) for k in COMPARABLE_KEYS):
+            continue
+        three = entry.get("three_lane_batcher")
+        if three and "totals" in three:
+            return three["totals"]["mean_savings_pct"]
+    return None
 
 
 def build_workload(cfg, rng, n_requests):
@@ -71,6 +120,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--linear-window", type=int, default=2,
                     help="history window K for the LinearAG lane")
+    ap.add_argument("--mesh", default=None, metavar="DXM",
+                    help="add a sharded three-lane point on a (d, m) host "
+                         "mesh, e.g. 8x1 (needs that many jax devices; see "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     ap.add_argument("--out", default="BENCH_serving.json")
     # tolerate a host harness's own flags (benchmarks/run.py --in-process
     # imports this module and calls main() under its own sys.argv)
@@ -151,13 +204,44 @@ def main(argv=None):
     )
     for r, a in zip(reqs3, arrivals):
         bat3.submit(r, arrival_step=a)
-    bat3.run()
+    done3 = bat3.run()
     rep3 = bat3.report()
     t3 = rep3["totals"]
 
+    # Sharded smoke point (DESIGN.md §8): the same three-lane workload on a
+    # data x model host mesh.  Bit-identical tokens and ledgers are the
+    # acceptance bar (tests pin it; here we assert and record the point).
+    rep3s = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+
+        d, m = (int(s) for s in args.mesh.split("x"))
+        mesh = make_host_mesh((d, m))
+        bat3s = StepBatcher(
+            api, params, ec, BatcherConfig(max_slots=args.max_slots),
+            coeffs=coeffs, mesh=mesh,
+        )
+        for r, a in zip(reqs3, arrivals):
+            bat3s.submit(r, arrival_step=a)
+        done3s = bat3s.run()
+        rep3s = bat3s.report()
+        t3s = rep3s["totals"]
+        assert t3s["nfes_device"] == t3s["nfes_expected"], (
+            "sharded NFE ledger not conserved"
+        )
+        for rid in done3:
+            np.testing.assert_array_equal(
+                done3s[rid]["tokens"], done3[rid]["tokens"],
+                err_msg=f"sharded tokens drifted for request {rid}",
+            )
+        assert t3s["mean_savings_pct"] == t3["mean_savings_pct"], (
+            "sharded savings drifted from the unsharded three-lane point"
+        )
+
     print(f"# serving bench: {cfg.name}, {len(reqs)} requests "
           f"({len(guided_reqs)} guided), max_slots={args.max_slots}, "
-          f"gamma_bar={gamma_bar}, K={args.linear_window} (fit MSE {fit_mse:.4g})")
+          f"gamma_bar={gamma_bar}, K={args.linear_window} (fit MSE {fit_mse:.4g})"
+          + (f", mesh={args.mesh}" if args.mesh else ""))
     print(f"round_scheduler_mean_savings_pct,{round_stats['mean_savings_pct']:.2f}")
     print(f"step_batcher_mean_savings_pct,{t['mean_savings_pct']:.2f}")
     print(f"three_lane_mean_savings_pct,{t3['mean_savings_pct']:.2f}")
@@ -170,7 +254,10 @@ def main(argv=None):
     print(f"nfe_ledger_three_lane,{t3['nfes_device']:.0f},"
           f"expected,{t3['nfes_expected']:.0f}")
 
-    out = {
+    entry = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
         "config": {
             "arch": cfg.name,
             "smoke": args.smoke,
@@ -180,15 +267,31 @@ def main(argv=None):
             "scale": args.scale,
             "gamma_bar": gamma_bar,
             "linear_window": args.linear_window,
+            "mesh": args.mesh,
             "seed": args.seed,
         },
         "round_scheduler": round_stats,
         "step_batcher": rep,
         "three_lane_batcher": rep3,
     }
+    if rep3s is not None:
+        entry["three_lane_sharded"] = rep3s
+    history = load_history(args.out)
+    prev_savings = previous_smoke_savings(history, entry["config"])
+    if args.smoke and prev_savings is not None:
+        # perf-trajectory gate (serving-smoke CI job): realized savings may
+        # wiggle with workload edits but must not silently collapse.  The
+        # gate runs BEFORE the entry is persisted — a regressed run must not
+        # rewrite its own baseline and pass on the next attempt.
+        assert t3["mean_savings_pct"] >= prev_savings - REGRESSION_PTS, (
+            f"three-lane realized savings regressed "
+            f"{prev_savings - t3['mean_savings_pct']:.2f} pts vs the previous "
+            f"history entry ({t3['mean_savings_pct']:.2f} vs {prev_savings:.2f})"
+        )
+    history.append(entry)
     with open(args.out, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-    print(f"# wrote {args.out}")
+        json.dump({"history": history}, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out} ({len(history)} history entries)")
 
     assert t["nfes_device"] == t["nfes_expected"], "NFE ledger not conserved"
     assert t3["nfes_device"] == t3["nfes_expected"], (

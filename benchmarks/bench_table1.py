@@ -6,7 +6,6 @@ level the paper reports (SSIM ~= 0.91 between *independent* CFG runs is the
 paper's quality bar; we report AG-vs-baseline SSIM which must be >= that).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import N_CLASSES, emit, get_trained_dit

@@ -14,8 +14,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import ImageDataset, TokenDataset

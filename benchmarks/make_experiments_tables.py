@@ -33,7 +33,8 @@ def dryrun_table(recs, multi_pod: bool) -> str:
             continue
         m = r["memory"]["peak_est_bytes"] / 2 ** 30
         c = r["collectives"]
-        gb = lambda x: f"{x/2**20:.1f}M" if x < 2 ** 30 else f"{x/2**30:.2f}G"
+        def gb(x):
+            return f"{x/2**20:.1f}M" if x < 2**30 else f"{x/2**30:.2f}G"
         rows.append(
             f"| {r['arch']} | {r['shape']} | ok | {m:.2f} | {'yes' if r['fits_hbm'] else 'NO'} "
             f"| {gb(c['all-gather'])} | {gb(c['all-reduce'])} | {gb(c['reduce-scatter'])} "

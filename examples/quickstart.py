@@ -15,7 +15,6 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")  # benchmarks/ lives at the repo root
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

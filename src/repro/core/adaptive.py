@@ -20,12 +20,10 @@ Two execution strategies (DESIGN.md §3 — TPU adaptation):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.executor import GuidanceExecutor, get_executor
 from repro.diffusion.sampler import EpsModel

@@ -29,7 +29,6 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro import perf_flags
@@ -92,9 +91,20 @@ class GuidanceExecutor:
 
         gamma is computed over all non-batch axes in f32, identically on
         both backends (parity asserted in tests/test_executor.py).
+
+        Under an active mesh (sharded serving, DESIGN.md §8) the reference
+        lowering is used even when the fused backend is requested: a Pallas
+        call is opaque to GSPMD, so the partitioner would gather both score
+        tensors onto every device before invoking it, while the jnp
+        epilogue — per-row elementwise ops plus a vocab-axis reduction —
+        partitions cleanly along both the slot ("data") and vocab ("model")
+        axes.  (A shard_map-wrapped kernel is the TPU follow-up; the masked
+        lane epilogues below stay shard_map-safe: no cross-slot reductions.)
         """
+        from repro.sharding.partition import active_mesh
+
         backend = self.resolved_backend()
-        if backend == "fused" and jnp.ndim(scale) == 0:
+        if backend == "fused" and jnp.ndim(scale) == 0 and active_mesh() is None:
             from repro.kernels.ops import fused_guidance
 
             interpret = (

@@ -7,7 +7,6 @@ HBM pass; these jnp versions are the reference semantics (and the oracle).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

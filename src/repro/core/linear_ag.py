@@ -32,15 +32,13 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional, Sequence
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import perf_flags
 from repro.core import policy as pol
-from repro.core.guidance import cfg_combine
 
 
 @dataclasses.dataclass

@@ -10,11 +10,9 @@ Lion (the paper's §4.1 choice); model weights stay frozen.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.guidance import cfg_combine
 from repro.diffusion.sampler import EpsModel

@@ -9,7 +9,7 @@ LR-approximated CFG step.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

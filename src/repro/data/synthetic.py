@@ -1,4 +1,4 @@
-"""Offline-safe synthetic data (DESIGN.md §8: CC3M/OUI are unavailable).
+"""Offline-safe synthetic data (DESIGN.md §9: CC3M/OUI are unavailable).
 
 Conditioned image data: procedurally rendered latents where the class id
 controls global structure (blob count / orientation / frequency) — enough
@@ -14,7 +14,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +48,7 @@ class ImageDataset:
         u = xx[None] * jnp.cos(theta) + yy[None] * jnp.sin(theta)
         v = -xx[None] * jnp.sin(theta) + yy[None] * jnp.cos(theta)
         base = jnp.sin(freq * jnp.pi * u) * jnp.cos(0.5 * freq * jnp.pi * v)
-        blob = jnp.exp(-4.0 * (u ** 2 + 0.5 * v ** 2))
+        blob = jnp.exp(-4.0 * (u**2 + 0.5 * v**2))
         # strong class-dependent DC offset + linear ramp (low-frequency)
         dc = (c[:, None, None] / (K - 1) - 0.5) * 1.2
         ramp = 0.6 * (u * jnp.cos(3 * theta) + v * jnp.sin(3 * theta))

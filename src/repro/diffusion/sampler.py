@@ -14,7 +14,7 @@ The combine + gamma epilogue routes through ``core.executor`` (DESIGN.md
 §6), so the fused Pallas kernel is one flag away for every policy.  Static
 policies (no CFG_LR, no collection) compile to ONE executable: a
 ``lax.scan`` whose body dispatches on the step kind with ``lax.switch`` —
-the same single-executable property ``ag_sample_jit`` has (DESIGN.md §9).
+the same single-executable property ``ag_sample_jit`` has (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -23,12 +23,11 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import policy as pol
 from repro.core.executor import GuidanceExecutor, get_executor
-from repro.diffusion.schedule import Schedule, timestep_subsequence
-from repro.diffusion.solvers import Solver, SolverState
+from repro.diffusion.schedule import timestep_subsequence
+from repro.diffusion.solvers import Solver
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,7 +44,8 @@ def linear_schedule(T: int = 1000, beta0: float = 1e-4, beta1: float = 2e-2) -> 
 
 
 def cosine_schedule(T: int = 1000, s: float = 8e-3) -> Schedule:
-    f = lambda t: np.cos((t / T + s) / (1 + s) * np.pi / 2) ** 2
+    def f(t):
+        return np.cos((t / T + s) / (1 + s) * np.pi / 2) ** 2
     ab = f(np.arange(T + 1)) / f(0)
     betas = np.clip(1 - ab[1:] / ab[:-1], 0, 0.999)
     return Schedule(betas=betas)

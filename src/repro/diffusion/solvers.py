@@ -11,9 +11,8 @@ t_next are traced int32 scalars indexing the schedule tables.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.diffusion.schedule import Schedule

@@ -38,8 +38,6 @@ def _kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *, bq, bk, scale, causal
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    run = (not causal) or True  # structural skip below
-
     @pl.when((ki * bk <= qi * bq + bq - 1) if causal else (ki >= 0))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)

@@ -17,7 +17,6 @@ the row tiles are (1, BLOCK) so the VPU sees aligned vectors.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

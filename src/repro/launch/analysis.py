@@ -1,4 +1,4 @@
-"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §9).
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §10).
 
 Three terms per (arch x shape x mesh), all in seconds:
 
@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
 
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 

@@ -9,6 +9,8 @@ touch jax device state (the dry-run sets XLA_FLAGS before any jax import).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 
@@ -29,14 +31,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist (tests / smoke runs): a (1, N) data x model mesh."""
+def make_host_mesh(shape=None):
+    """Data x model mesh over whatever devices exist (tests / smoke runs).
+
+    Defaults to the data-majority ``(N, 1)``: host CPUs (and the simulated-
+    device CI path, ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
+    serve small models whose parallel win is the batch-slot axis on "data",
+    not tensor parallelism — the old ``(1, N)`` default put every host
+    device on "model".  Pass ``shape=(d, m)`` to override (``d * m`` must
+    equal the device count; callers wanting a fallback catch ValueError).
+    """
     n = len(jax.devices())
-    return make_mesh((1, n), ("data", "model"))
+    if shape is None:
+        shape = (n, 1)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != 2 or math.prod(shape) != n:
+        raise ValueError(
+            f"mesh shape {shape} does not tile the {n} available devices"
+        )
+    return make_mesh(shape, ("data", "model"))
 
 
 # TPU v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s
 ICI_BW_PER_LINK = 50e9  # B/s  (per link/direction)
-HBM_BYTES = 16 * 2 ** 30
+HBM_BYTES = 16 * 2**30

@@ -18,6 +18,13 @@ OLS, save) when it does not exist yet:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --linear --fit-coeffs --coeffs artifacts/linear_ag_coeffs.npz
+
+``--mesh dxm`` serves sharded (DESIGN.md §8): params and lane state are
+partitioned on a (d, m) data x model mesh — e.g. ``--mesh 8x1`` on
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, or a pod slice's
+real device count on TPU.  Tokens, NFE ledgers and lifecycle events are
+bit-identical to the unsharded run.  A shape that does not tile the
+available devices falls back to the data-majority host mesh.
 """
 from __future__ import annotations
 
@@ -29,9 +36,27 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
 from repro.models import build
 from repro.serving.engine import EngineConfig, GuidedEngine, Request
 from repro.training import checkpoint
+
+
+def resolve_mesh(arg):
+    """``--mesh dxm`` -> a data x model Mesh; ``--mesh host`` -> the
+    data-majority default; a non-tiling shape falls back to the host mesh
+    (serving must come up even when the flag mismatches the machine)."""
+    if arg is None:
+        return None
+    if arg == "host":
+        return make_host_mesh()
+    try:
+        return make_host_mesh(tuple(int(s) for s in arg.split("x")))
+    except ValueError as e:
+        fallback = make_host_mesh()
+        print(f"[serve] WARNING: --mesh {arg!r}: {e}; falling back to host "
+              f"mesh {dict(fallback.shape)}")
+        return fallback
 
 
 def load_or_fit_coeffs(args, api, params, ec, reqs):
@@ -90,6 +115,10 @@ def main():
                          "trajectories if it does not exist")
     ap.add_argument("--linear-window", type=int, default=4,
                     help="history window K when fitting (--fit-coeffs)")
+    ap.add_argument("--mesh", default=None, metavar="DXM",
+                    help="serve sharded on a (d, m) data x model mesh "
+                         "(e.g. 8x1), or 'host' for the data-majority "
+                         "default over all devices")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -99,6 +128,10 @@ def main():
     params = api.init(jax.random.PRNGKey(args.seed))
     if args.load:
         params = checkpoint.load(args.load, params)
+    mesh = resolve_mesh(args.mesh)
+    if mesh is not None:
+        print(f"[serve] mesh {dict(mesh.shape)} over "
+              f"{len(jax.devices())} devices")
 
     ec = EngineConfig(
         scale=args.scale, gamma_bar=args.gamma_bar, max_batch=args.requests
@@ -123,7 +156,7 @@ def main():
         )
         bat = StepBatcher(
             api, params, ec, BatcherConfig(max_slots=args.requests),
-            coeffs=coeffs,
+            coeffs=coeffs, mesh=mesh,
         )
         for i, r in enumerate(reqs):
             bat.submit(r, arrival_step=args.arrival_stride * i)
@@ -143,7 +176,7 @@ def main():
               f"expected {t['nfes_expected']:.0f}")
         return
 
-    eng = GuidedEngine(api, params, ec)
+    eng = GuidedEngine(api, params, ec, mesh=mesh)
     out = eng.generate(reqs)
     full_cfg_nfes = 2.0 * args.max_new
     print(f"[serve] {cfg.name}: {args.requests} requests, {args.max_new} new tokens each")

@@ -15,14 +15,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import ImageDataset, TokenDataset
 from repro.diffusion.schedule import cosine_schedule
 from repro.models import build
-from repro.sharding.partition import use_mesh
 from repro.training import checkpoint
 from repro.training.optim import adamw
 from repro.training.train_loop import make_dit_train_step, make_lm_train_step

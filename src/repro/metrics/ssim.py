@@ -6,7 +6,6 @@ averaged.  Inputs are assumed in [-1, 1] (dynamic range 2).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 
@@ -15,8 +14,6 @@ def _box_filter(x, win: int):
     B, C, H, W = x.shape
     pad = jnp.pad(x, ((0, 0), (0, 0), (1, 0), (1, 0)))
     cs = jnp.cumsum(jnp.cumsum(pad, axis=2), axis=3)
-    h = H - win + 1
-    w = W - win + 1
     total = (
         cs[:, :, win:, win:]
         - cs[:, :, :-win, win:]
@@ -38,11 +35,11 @@ def ssim(a, b, *, win: int = 8, dynamic_range: float = 2.0):
     bb = _box_filter(b * b, win) - mu_b * mu_b
     ab = _box_filter(a * b, win) - mu_a * mu_b
     num = (2 * mu_a * mu_b + c1) * (2 * ab + c2)
-    den = (mu_a ** 2 + mu_b ** 2 + c1) * (aa + bb + c2)
+    den = (mu_a**2 + mu_b**2 + c1) * (aa + bb + c2)
     s = num / den
     return jnp.mean(s, axis=(1, 2, 3))
 
 
 def psnr(a, b, *, dynamic_range: float = 2.0):
     mse = jnp.mean(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)), axis=(1, 2, 3))
-    return 10.0 * jnp.log10(dynamic_range ** 2 / jnp.maximum(mse, 1e-12))
+    return 10.0 * jnp.log10(dynamic_range**2 / jnp.maximum(mse, 1e-12))

@@ -3,15 +3,13 @@
 A config induces a *layer plan*: a period of block kinds, repeated
 ``num_layers // period`` times.  Parameters for each position in the period
 are stacked over periods and executed with ``lax.scan`` so the lowered HLO
-stays compact for the multi-pod dry-run (see DESIGN.md §9).
+stays compact for the multi-pod dry-run (see DESIGN.md §10).
 
 Block kinds: "attn" or "ssm" mixer + "mlp" / "moe" / "moe+mlp" (arctic's
 dense residual) feed-forward.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +126,6 @@ def _apply_block(p, cfg, kind, x, positions, *, mode, cache, chunk):
     else:
         h = cm.rmsnorm(p["ssm_norm"], x)
         ssm_mode = mode if mode in ("decode", "prefill") else "train"
-        pos1 = positions  # unused by ssm
         y, new_cache = mamba2.ssm_apply(p["ssm"], cfg, h, mode=ssm_mode, cache=cache)
         x = x + y
     if ffn != "none":

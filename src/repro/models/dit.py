@@ -107,8 +107,6 @@ def dit_apply(params, cfg, x_t, t, cond_id):
     x_t: (B, C, H, W) noisy latents; t: (B,) timesteps in [0, timesteps);
     cond_id: (B,) int32 class condition (cfg.vocab_size = null token).
     """
-    B = x_t.shape[0]
-    d = cfg.d_model
     dtype = cm.dtype_of(cfg)
     tok = patchify(cfg, x_t.astype(dtype)) @ params["patch"]["w"]
     tok = tok + params["pos_embed"][None]

@@ -11,7 +11,6 @@ Without an active mesh the same local function runs directly (tests / smoke).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ DESIGN.md §3); ``input_specs(shape, guided=True)`` doubles the batch.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax

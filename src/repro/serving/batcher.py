@@ -44,9 +44,20 @@ Request lifecycle::
 Telemetry (serving/telemetry.py) receives the full event stream; its
 ledger-conservation check (device NFEs == host-expected NFEs) holds across
 admission, migration, reuse and completion in all three lanes.
+
+Sharded serving (DESIGN.md §8): pass ``mesh=`` (a data x model ``Mesh``,
+e.g. ``launch.mesh.make_host_mesh()``) and every lane's traced executable
+compiles under ``NamedSharding`` specs — the batch-slot axis on ("data",),
+model params and KV caches partitioned by ``sharding/partition.py``'s
+logical-axis rules, slot buffers donated so cross-lane migration is a
+device-side resharding copy.  All host-side lane bookkeeping (admission,
+migration, slot reuse, ledgers) is device-count-agnostic: tokens, NFE
+ledgers and lifecycle events are bit-identical to the single-device run
+(asserted against the golden fixtures in tests/test_sharded_serving.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
@@ -66,6 +77,12 @@ from repro.serving.guided_decode import (
     linear_lane_step,
 )
 from repro.serving.telemetry import ServingTelemetry
+from repro.sharding.partition import (
+    serving_rules,
+    shard_lane_state,
+    shard_params,
+    use_mesh,
+)
 
 # ladder rank: transitions must strictly increase (never backwards)
 LANE_ORDER = ("guided", "linear", "cond")
@@ -135,14 +152,27 @@ class StepBatcher:
         telemetry: Optional[ServingTelemetry] = None,
         clock=time.perf_counter,
         coeffs: Optional[WindowCoeffs] = None,
+        mesh=None,
     ):
         self.api = api
-        self.params = params
         self.config = config
         self.bc = batch_config or BatcherConfig(max_slots=config.max_batch)
         self.telemetry = telemetry or ServingTelemetry(clock=clock)
         self.clock = clock
         self.executor = GuidanceExecutor(backend=config.guidance_backend)
+        # Sharded serving (DESIGN.md §8): params are placed ONCE per the
+        # partition rules; lane steps trace under the mesh so the model's
+        # logical-axis annotations and the lane-state constraints activate.
+        # Everything below this point — admission, migration, slot reuse —
+        # is host bookkeeping and never looks at the device count.
+        self.mesh = mesh
+        self.mesh_shape = (
+            tuple(mesh.shape[a] for a in mesh.axis_names)
+            if mesh is not None
+            else None
+        )
+        with self._mesh_ctx():
+            self.params = shard_params(params)
         # fixed-K window coefficients for the LinearAG lane, fitted offline
         # (core/linear_ag.fit_ols_window) and loaded ONCE here — the lane
         # step closes over one device array for the whole serve lifetime.
@@ -197,9 +227,21 @@ class StepBatcher:
             counts[K] = counts.get(K, 0) + 1
             return cond_lane_step(api, params, state)
 
-        self._guided_step = jax.jit(_traced_guided)
-        self._linear_step = jax.jit(_traced_linear)
-        self._cond_step = jax.jit(_traced_cond)
+        # The state argument (index 1) is donated: the previous step's lane
+        # buffers alias the new ones in place (no double-buffered KV), and
+        # under a mesh the donated buffers stay device-resident so lane
+        # migration below is a device-side resharding copy, never a host
+        # round-trip.  params (index 0) and beta are never donated.
+        self._guided_step = jax.jit(_traced_guided, donate_argnums=(1,))
+        self._linear_step = jax.jit(_traced_linear, donate_argnums=(1,))
+        self._cond_step = jax.jit(_traced_cond, donate_argnums=(1,))
+
+    def _mesh_ctx(self):
+        """Active-mesh context for lane-step tracing and buffer placement;
+        a no-op context when serving unsharded."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return use_mesh(self.mesh, serving_rules(self.mesh))
 
     # -- submission ----------------------------------------------------------
 
@@ -239,7 +281,9 @@ class StepBatcher:
         return jnp.zeros((capacity, self.coeffs.K, 1, self._vocab), jnp.float32)
 
     def _empty_state(self, capacity: int, kind: str):
-        z = lambda *s, dt=jnp.int32: jnp.zeros(s, dt)
+        def z(*s, dt=jnp.int32):
+            return jnp.zeros(s, dt)
+
         common = dict(
             tokens=z(capacity, 1),
             position=z(capacity),
@@ -250,22 +294,28 @@ class StepBatcher:
             gamma_bar=jnp.ones((capacity,), jnp.float32),
         )
         if kind == "linear":
-            return LinearLaneState(
+            state = LinearLaneState(
                 hist_c=self._empty_hist(capacity),
                 hist_u=self._empty_hist(capacity),
                 **common,
             )
-        hist = kind == "guided" and self._with_history()
-        return LaneState(
-            caches_u=(
-                self.api.init_caches(capacity, self.cache_len)
-                if kind == "guided"
-                else None
-            ),
-            hist_c=self._empty_hist(capacity) if hist else None,
-            hist_u=self._empty_hist(capacity) if hist else None,
-            **common,
-        )
+        else:
+            hist = kind == "guided" and self._with_history()
+            state = LaneState(
+                caches_u=(
+                    self.api.init_caches(capacity, self.cache_len)
+                    if kind == "guided"
+                    else None
+                ),
+                hist_c=self._empty_hist(capacity) if hist else None,
+                hist_u=self._empty_hist(capacity) if hist else None,
+                **common,
+            )
+        # under a mesh, fresh slot rows (KV + history) are born sharded —
+        # grow never allocates a replicated copy that the first step must
+        # then redistribute
+        with self._mesh_ctx():
+            return shard_lane_state(state)
 
     @staticmethod
     def _concat_states(s, fresh):
@@ -517,18 +567,24 @@ class StepBatcher:
         l_active = self.linear.active_count
         c_active = self.cond.active_count
 
+        # the mesh context matters at trace time only (first call per
+        # bucket): the lane-state constraints and the model's logical-axis
+        # annotations resolve against it and are baked into the executable
         ran = False
-        if g_active:
-            _, self.guided.state, _ = self._guided_step(self.params, self.guided.state)
-            ran = True
-        if l_active:
-            _, self.linear.state, _ = self._linear_step(
-                self.params, self.linear.state, self._beta
-            )
-            ran = True
-        if c_active:
-            _, self.cond.state = self._cond_step(self.params, self.cond.state)
-            ran = True
+        with self._mesh_ctx():
+            if g_active:
+                _, self.guided.state, _ = self._guided_step(
+                    self.params, self.guided.state
+                )
+                ran = True
+            if l_active:
+                _, self.linear.state, _ = self._linear_step(
+                    self.params, self.linear.state, self._beta
+                )
+                ran = True
+            if c_active:
+                _, self.cond.state = self._cond_step(self.params, self.cond.state)
+                ran = True
 
         if ran:
             fetched = jax.device_get(
@@ -639,7 +695,9 @@ class StepBatcher:
         }
 
     def report(self) -> dict:
-        return self.telemetry.report(compile_counts=self.compile_counts)
+        rep = self.telemetry.report(compile_counts=self.compile_counts)
+        rep["mesh_shape"] = list(self.mesh_shape) if self.mesh_shape else None
+        return rep
 
 
 def _set_row(dst_caches, slot, src_caches):

@@ -15,6 +15,7 @@ B=1 (asserted in tests/test_batcher.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
@@ -30,6 +31,7 @@ from repro.serving.guided_decode import (
     guided_decode_step,
     push_history,
 )
+from repro.sharding.partition import serving_rules, shard_params, use_mesh
 
 
 @dataclasses.dataclass
@@ -105,13 +107,26 @@ def pad_prompts(
 
 
 class GuidedEngine:
-    """Synchronous batched engine (one batch of requests per call)."""
+    """Synchronous batched engine (one batch of requests per call).
 
-    def __init__(self, api, params, config: EngineConfig):
+    ``mesh=`` shards the whole-batch decode the same way the step batcher
+    shards its lanes (DESIGN.md §8): params placed per the partition rules,
+    the batch axis of the decode state on "data", KV caches allocated
+    sharded by the jitted step.  Prefill stays eager and mesh-agnostic (its
+    B=1..B rows rarely divide a device axis); the decoded tokens are
+    bit-identical either way.
+    """
+
+    def __init__(self, api, params, config: EngineConfig, mesh=None):
         self.api = api
-        self.params = params
         self.config = config
+        self.mesh = mesh
+        with self._mesh_ctx():
+            self.params = shard_params(params)
         self.executor = GuidanceExecutor(backend=config.guidance_backend)
+        # NOTE: no donation here (unlike the batcher's lane steps) — the
+        # generate() loop keeps per-step ``nxt`` references, which alias
+        # ``state.tokens`` and would die with the donated buffer.
         self._guided_step = jax.jit(
             lambda p, s, gb: guided_decode_step(
                 api, p, s, scale=config.scale, gamma_bar=gb,
@@ -119,6 +134,11 @@ class GuidedEngine:
             )
         )
         self._cond_step = jax.jit(lambda p, s: cond_decode_step(api, p, s))
+
+    def _mesh_ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return use_mesh(self.mesh, serving_rules(self.mesh))
 
     def _pad_prompts(self, requests: Sequence[Request], use_negative: bool):
         return pad_prompts(requests, use_negative=use_negative)
@@ -160,16 +180,19 @@ class GuidedEngine:
         # see EngineConfig.crossing_poll_stride and tests).
         stride = max(1, cfgc.crossing_poll_stride)
         all_crossed = False
-        for step in range(max_new - 1):
-            if not all_crossed and step % stride == 0:
-                all_crossed = bool(jnp.all(state.crossed))
-            if not all_crossed:
-                nxt, state, gamma = self._guided_step(self.params, state, gamma_bar)
-                gammas.append(gamma)  # device array; materialized once at the end
-                guided_steps += 1
-            else:
-                nxt, state = self._cond_step(self.params, state)
-            out.append(nxt)
+        with self._mesh_ctx():
+            for step in range(max_new - 1):
+                if not all_crossed and step % stride == 0:
+                    all_crossed = bool(jnp.all(state.crossed))
+                if not all_crossed:
+                    nxt, state, gamma = self._guided_step(
+                        self.params, state, gamma_bar
+                    )
+                    gammas.append(gamma)  # device array; materialized at the end
+                    guided_steps += 1
+                else:
+                    nxt, state = self._cond_step(self.params, state)
+                out.append(nxt)
         tokens = jnp.concatenate(out, axis=1)
         nfes = np.asarray(state.nfes)
         # Per-request 2-NFE steps: each of the (max_new - 1) decode steps

@@ -15,13 +15,13 @@ is the AG-truncated tail.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.executor import GuidanceExecutor, get_executor
+from repro.sharding.partition import constrain_lane_state
 
 
 class GuidedState(NamedTuple):
@@ -69,6 +69,7 @@ def guided_decode_step(
     (Eq. 3 in logit space).  Returns (next_token, new_state, gamma).
     """
     executor = get_executor(executor)
+    state = constrain_lane_state(state)
     logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
         api, params, state.tokens, state.position, state.caches_c, state.caches_u
     )
@@ -78,14 +79,14 @@ def guided_decode_step(
     )
 
     nxt = _select(res.eps, greedy, key)
-    new_state = GuidedState(
+    new_state = constrain_lane_state(GuidedState(
         tokens=nxt,
         position=state.position + 1,
         caches_c=new_c,
         caches_u=new_u,
         crossed=res.crossed,
         nfes=res.nfes,
-    )
+    ))
     return nxt, new_state, res.gamma
 
 
@@ -95,18 +96,19 @@ def cond_decode_step(api, params, state: GuidedState, *, greedy: bool = True, ke
     The uncond cache is left untouched (stale); if a negative prompt changes
     mid-stream the engine re-enters the guided phase.
     """
+    state = constrain_lane_state(state)
     logits, new_c = api.decode_step(
         params, state.tokens, state.caches_c, state.position
     )
     nxt = _select(logits, greedy, key)
-    return nxt, GuidedState(
+    return nxt, constrain_lane_state(GuidedState(
         tokens=nxt,
         position=state.position + 1,
         caches_c=new_c,
         caches_u=state.caches_u,
         crossed=state.crossed,
         nfes=state.nfes + 1.0,
-    )
+    ))
 
 
 # ---------------------------------------------------------------------------
@@ -180,8 +182,13 @@ def guided_lane_step(
     buffers, the realized (cond, uncond) score pair is pushed so the
     LinearAG window warms up during the guided phase.  Returns
     (next, new_state, gamma).
+
+    Under an active mesh the state is constrained on entry and exit
+    (slot axis on "data", DESIGN.md §8) so the compiled step keeps lane
+    buffers device-sharded across steps; without a mesh this is identity.
     """
     executor = get_executor(executor)
+    state = constrain_lane_state(state)
     logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
         api, params, state.tokens, state.position, state.caches_c, state.caches_u
     )
@@ -194,10 +201,10 @@ def guided_lane_step(
     if hist_c is not None:
         hist_c = push_history(hist_c, logits_c)
         hist_u = push_history(hist_u, logits_u)
-    new_state = state._replace(
+    new_state = constrain_lane_state(state._replace(
         tokens=nxt, position=state.position + 1, caches_c=new_c, caches_u=new_u,
         crossed=res.crossed, nfes=res.nfes, hist_c=hist_c, hist_u=hist_u,
-    )
+    ))
     return nxt, new_state, res.gamma
 
 
@@ -214,6 +221,7 @@ def linear_lane_step(
     from repro.core.linear_ag import apply_window
 
     executor = get_executor(executor)
+    state = constrain_lane_state(state)
     logits_c, new_c = api.decode_step(
         params, state.tokens, state.caches_c, state.position
     )
@@ -223,26 +231,27 @@ def linear_lane_step(
         state.gamma_bar, state.active,
     )
     nxt = _select(res.eps, True, None)
-    new_state = state._replace(
+    new_state = constrain_lane_state(state._replace(
         tokens=nxt, position=state.position + 1, caches_c=new_c,
         crossed=res.crossed, nfes=res.nfes,
         hist_c=push_history(state.hist_c, logits_c),
         hist_u=push_history(state.hist_u, u_hat),
-    )
+    ))
     return nxt, new_state, res.gamma
 
 
 def cond_lane_step(api, params, state: LaneState):
     """One conditional-lane step: 1 NFE per active slot (the AG tail and
     plain unguided traffic).  Returns (next, new_state)."""
+    state = constrain_lane_state(state)
     logits, new_c = api.decode_step(
         params, state.tokens, state.caches_c, state.position
     )
     nxt = _select(logits, True, None)
-    new_state = state._replace(
+    new_state = constrain_lane_state(state._replace(
         tokens=nxt, position=state.position + 1, caches_c=new_c,
         nfes=GuidanceExecutor.lane_ledger_cond(state.nfes, state.active),
-    )
+    ))
     return nxt, new_state
 
 

@@ -14,11 +14,14 @@ Logical axes
   heads    -> "model" (GSPMD pads when head count is not divisible)
   experts  -> "data"  (expert parallelism; a2a over "data" in the MoE block)
   ssm_inner-> "model"
+  slots    -> ("pod", "data") when present, else ("data",): the batch-slot
+              axis of serving lane state (DESIGN.md §8)
   (anything unlisted) -> replicated
 """
 from __future__ import annotations
 
 import contextlib
+import math
 import re
 import threading
 from typing import Optional
@@ -54,7 +57,44 @@ def _default_rules(mesh: Mesh) -> dict:
         "ssm_heads": model,
         "layers": None,
         "cond": None,
+        "slots": batch,
     }
+
+
+# Serving-lane rules override (DESIGN.md §8): the batch-slot axis owns
+# "data", so the KV-cache length axis must stay unsharded — a spec may not
+# map one mesh axis to two dims (the same constraint the dry-run's decode
+# shapes resolve via shape_rules in launch/dryrun.py).  Long-context
+# serving can flip this trade by passing its own rules to ``use_mesh``.
+SERVING_RULES = {"kvlen": None, "seq": None}
+
+# Sentinel rules key: when set (serving contexts), ``lsc`` filters every
+# spec through ``even_spec`` instead of relying on GSPMD's uneven-dim
+# padding.  Train/dry-run contexts never set it, so their lowerings keep
+# padded sharding for non-divisible dims (e.g. heads on a bigger "model"
+# axis).
+EVEN_ONLY = "__serving_even_only__"
+
+
+def serving_rules(mesh) -> dict:
+    """Logical-axis rules for sharded serving on ``mesh``.
+
+    1D meshes — (N, 1) data-majority or (1, N) tensor-parallel — shard the
+    batch-slot axis over "data" and params/activations over "model" as
+    usual.  On a *mixed* mesh (both axes > 1) the slot and batch axes are
+    replicated instead: XLA's CPU SPMD partitioner miscompiles the decode
+    step when the cond/uncond pack is data-sharded under a second sharded
+    axis — slicing the pack back into its halves yields zeros (observed on
+    a (4, 2) host mesh, jax 0.4.37; the golden parity in
+    tests/test_sharded_serving.py pins this workaround).  Tensor
+    parallelism ("model") is unaffected either way.
+    """
+    rules = dict(SERVING_RULES)
+    rules[EVEN_ONLY] = True
+    if mesh is not None and sum(int(s) > 1 for s in mesh.shape.values()) > 1:
+        rules["slots"] = None
+        rules["batch"] = None
+    return rules
 
 
 @contextlib.contextmanager
@@ -94,12 +134,24 @@ def logical_spec(*names: Optional[str]) -> P:
 
 
 def lsc(x, *names: Optional[str]):
-    """Logical sharding constraint; identity when no mesh is active."""
+    """Logical sharding constraint; identity when no mesh is active.
+
+    Under serving rules (``EVEN_ONLY`` set, see ``serving_rules``) the
+    resolved spec is filtered to evenly-divisible axes via ``even_spec``: a
+    *mixed* uneven/even spec actively miscompiles on the multi-device CPU
+    backend — XLA's SPMD partitioner emits "Involuntary full
+    rematerialization" on the decode cache updates and produces zeros
+    (observed on a (4, 2) host mesh; tests/test_sharded_serving.py pins the
+    parity that caught it).  Train/dry-run contexts keep the raw spec so
+    GSPMD can pad non-divisible dims (e.g. heads on a larger "model" axis).
+    """
     ctx = getattr(_state, "ctx", None)
     if ctx is None:
         return x
-    mesh, _ = ctx
+    mesh, rules = ctx
     spec = logical_spec(*names)
+    if rules.get(EVEN_ONLY):
+        spec = even_spec(spec, x.shape, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
@@ -209,3 +261,168 @@ def param_shardings(params):
         param_specs(params),
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def shard_params(params):
+    """Place ``params`` on the active mesh per ``PARAM_RULES``.
+
+    Unlike the jit-internal constraints, ``jax.device_put`` refuses shard
+    counts that do not divide the dim, so every spec is filtered down to its
+    evenly-divisible axes first (the eager analogue of GSPMD's padding).
+    Identity when no mesh is active.
+    """
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return params
+    mesh, _ = ctx
+
+    def put(x, spec):
+        spec = even_spec(spec, x.shape, mesh)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        put, params, param_specs(params), is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving lane state (DESIGN.md §8): per-leaf logical axes for the
+# fixed-capacity LaneState / LinearLaneState / GuidedState pytrees.  The
+# batch-slot axis rides "slots" (-> "data"); KV caches carry it at axis 1
+# (axis 0 is the scan-period stack); history ring buffers keep the vocab
+# axis on "model" like every logits tensor.
+# ---------------------------------------------------------------------------
+
+LANE_FIELD_AXES: dict = {
+    "tokens": ("slots", None),
+    "position": ("slots",),
+    "crossed": ("slots",),
+    "nfes": ("slots",),
+    "active": ("slots",),
+    "gamma_bar": ("slots",),
+    "hist_c": ("slots", None, None, "vocab"),
+    "hist_u": ("slots", None, None, "vocab"),
+}
+
+CACHE_KEY_AXES: dict = {
+    "k": (None, "slots", "kvlen", "kvheads", "head_dim"),
+    "v": (None, "slots", "kvlen", "kvheads", "head_dim"),
+    "pos": (None, "slots", "kvlen"),
+    "state": (None, "slots", "ssm_heads", None, None),
+    "conv_x": (None, "slots", None, "ssm_inner"),
+}
+
+
+def _axis_size(mesh, entry) -> int:
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    return math.prod(mesh.shape[n] for n in names)
+
+
+def even_spec(spec: P, shape, mesh) -> P:
+    """Drop spec entries whose shard count does not divide the dim.
+
+    ``with_sharding_constraint`` tolerates uneven dims inside jit (GSPMD
+    replicates them), but ``jax.device_put`` refuses — this filter makes one
+    spec valid for both, so host-side buffer placement and traced
+    constraints agree.  Entries for axes already used earlier in the spec
+    are dropped too (a mesh axis may shard at most one dim).
+    """
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    used: set = set()
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = _axis_size(mesh, entry)
+        if size == 1 or any(n in used for n in names) or dim % size != 0:
+            out.append(None)  # trivial or uneven shard: replicate this dim
+        else:
+            used.update(names)
+            out.append(names[0] if len(names) == 1 else entry)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def lane_leaf_spec(axes, shape, mesh, rules=None) -> P:
+    """Resolve logical lane axes -> an evenly-divisible PartitionSpec.
+
+    ``mesh`` only needs ``.shape`` and ``.axis_names`` (tests pass stubs);
+    ``rules`` defaults to the mesh's default rules + ``SERVING_RULES``.
+    """
+    if rules is None:
+        rules = dict(_default_rules(mesh), **SERVING_RULES)
+    resolved = tuple(
+        None if a is None else rules.get(a)
+        for a in tuple(axes) + (None,) * (len(shape) - len(axes))
+    )
+    return even_spec(P(*resolved), shape, mesh)
+
+
+def _cache_leaf_axes(path, ndim) -> tuple:
+    key = next(
+        (
+            e.key
+            for e in reversed(path)
+            if isinstance(e, jax.tree_util.DictKey)
+        ),
+        None,
+    )
+    axes = CACHE_KEY_AXES.get(key)
+    if axes is None:  # unknown cache kind: slot axis at 1, rest replicated
+        axes = (None, "slots") + (None,) * (ndim - 2)
+    return axes
+
+
+def _map_lane_leaves(fn, state):
+    """Apply ``fn(axes, leaf) -> leaf`` over every array leaf of a lane
+    state NamedTuple (LaneState / LinearLaneState / GuidedState), resolving
+    each leaf's logical axes from ``LANE_FIELD_AXES`` / ``CACHE_KEY_AXES``."""
+    kw = {}
+    for name in state._fields:
+        v = getattr(state, name)
+        if v is None:
+            kw[name] = None
+        elif name in ("caches_c", "caches_u"):
+            kw[name] = jax.tree_util.tree_map_with_path(
+                lambda p, x: fn(_cache_leaf_axes(p, x.ndim), x), v
+            )
+        else:
+            kw[name] = fn(LANE_FIELD_AXES.get(name, ("slots",)), v)
+    return type(state)(**kw)
+
+
+def constrain_lane_state(state):
+    """Trace-time sharding constraints on every lane-state leaf (identity
+    when no mesh is active) — applied on entry to and exit from the lane
+    step functions so the compiled executables keep lane buffers sharded
+    across steps instead of round-tripping layouts."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return state
+    mesh, rules = ctx
+
+    def con(axes, x):
+        spec = lane_leaf_spec(axes, x.shape, mesh, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return _map_lane_leaves(con, state)
+
+
+def shard_lane_state(state):
+    """Host-side placement of freshly-allocated lane buffers on the active
+    mesh (identity without one).  Uses ``jax.device_put`` with even-filtered
+    specs, so a grown lane's new rows are born device-sharded rather than
+    resharded on the first step."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return state
+    mesh, rules = ctx
+
+    def put(axes, x):
+        spec = lane_leaf_spec(axes, x.shape, mesh, rules)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return _map_lane_leaves(put, state)

@@ -23,7 +23,6 @@ def cross_entropy_from_hidden(
         if "lm_head" in params
         else params["embed"]["table"].T
     )
-    V = cfg.vocab_size
     seq_chunk = min(seq_chunk, S)
     while S % seq_chunk:  # e.g. VLM text length 3840: fall back to 256
         seq_chunk //= 2

@@ -6,7 +6,7 @@ AdamW is the workhorse for training the DiT / LM examples.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,6 @@ applied by the launcher, launch/train.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -42,8 +42,10 @@ def _prompts(seed, lens):
     return [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32) for n in lens]
 
 
-def run_engine_case():
-    """Whole-batch engine: token AND score (gamma) trajectories."""
+def run_engine_case(mesh=None):
+    """Whole-batch engine: token AND score (gamma) trajectories.  ``mesh``
+    runs the identical batch sharded (tests/test_sharded_serving.py asserts
+    token/NFE bit-equality against the meshless fixture)."""
     from repro.serving import EngineConfig, GuidedEngine, Request
 
     cfg, api, params = golden_model()
@@ -53,7 +55,7 @@ def run_engine_case():
         Request(prompt=p[1], max_new_tokens=8, negative_prompt=p[2]),
     ]
     ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=2)
-    out = GuidedEngine(api, params, ec).generate(reqs)
+    out = GuidedEngine(api, params, ec, mesh=mesh).generate(reqs)
     return {
         "tokens": out["tokens"].tolist(),
         "nfes": out["nfes"].tolist(),
@@ -78,9 +80,11 @@ def _batcher_record(bat, done, rids):
     }
 
 
-def run_batcher_case():
+def run_batcher_case(mesh=None):
     """Two-lane churn under a fixed seed: late arrival, slot reuse, a
-    never-crossing neighbour, plain traffic."""
+    never-crossing neighbour, plain traffic.  ``mesh`` runs the identical
+    workload sharded (tests/test_sharded_serving.py asserts bit-equality
+    against the fixture generated without one)."""
     from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
 
     cfg, api, params = golden_model()
@@ -92,7 +96,9 @@ def run_batcher_case():
         Request(prompt=p[3], max_new_tokens=4, guided=False),
     ]
     ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=2)
-    bat = StepBatcher(api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)))
+    bat = StepBatcher(
+        api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)), mesh=mesh
+    )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 0, 2, 4])]
     done = bat.run()
     return {
@@ -117,9 +123,10 @@ def fit_golden_coeffs():
     return coeffs
 
 
-def run_three_lane_case(coeffs):
+def run_three_lane_case(coeffs, mesh=None):
     """Three-lane churn: full ladder, never-crossing linear request, slot
-    reuse — driven by the FIXTURE's coefficient vector."""
+    reuse — driven by the FIXTURE's coefficient vector.  ``mesh`` runs the
+    identical workload sharded (see ``run_batcher_case``)."""
     from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
 
     cfg, api, params = golden_model()
@@ -132,7 +139,7 @@ def run_three_lane_case(coeffs):
     ec = EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
     bat = StepBatcher(
         api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)),
-        coeffs=coeffs,
+        coeffs=coeffs, mesh=mesh,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]
     done = bat.run()

@@ -6,7 +6,6 @@ and crossing thresholds; this file pins a set of hand-picked adversarial
 cases so the invariants are exercised even where hypothesis is not
 installed (it is importorskip'd there)."""
 import numpy as np
-import pytest
 
 from repro.serving import EngineConfig, Request, linear_ag_generate
 from tests._toy_lm import VOCAB, run_ladder_case, toy_coeffs, toy_serving

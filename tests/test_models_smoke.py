@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCH_NAMES, get_config
-from repro.data.synthetic import ImageDataset, TokenDataset
+from repro.data.synthetic import ImageDataset
 from repro.diffusion.schedule import cosine_schedule
 from repro.models import build
 from repro.models.common import padded_vocab

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.mesh import make_mesh
 from repro.models.moe import _dispatch, _route, init_moe, moe_apply

@@ -2,7 +2,6 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -11,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import policy as pol
 from repro.core.guidance import cfg_combine, cosine_similarity
-from repro.core.linear_ag import fit_ols, eval_ols, fit_ols_window
+from repro.core.linear_ag import fit_ols, fit_ols_window
 from repro.metrics.ssim import ssim
 from repro.serving import Request
 from tests._toy_lm import VOCAB, run_ladder_case
@@ -29,7 +28,7 @@ finite = st.floats(-10, 10, allow_nan=False, width=32)
     st.integers(1, 4),
     st.integers(2, 32),
     st.floats(-5, 20, allow_nan=False),
-    st.integers(0, 2 ** 31 - 1),
+    st.integers(0, 2**31 - 1),
 )
 def test_cfg_combine_is_affine_interpolation(b, d, s, seed):
     key = jax.random.PRNGKey(seed)
@@ -40,7 +39,7 @@ def test_cfg_combine_is_affine_interpolation(b, d, s, seed):
     np.testing.assert_allclose(out - np.asarray(u), s * np.asarray(c - u), atol=1e-4)
 
 
-@given(st.integers(1, 5), st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+@given(st.integers(1, 5), st.integers(2, 64), st.integers(0, 2**31 - 1))
 def test_cosine_in_unit_interval(b, d, seed):
     key = jax.random.PRNGKey(seed)
     a = jax.random.normal(key, (b, d))
@@ -65,7 +64,7 @@ def test_linear_ag_policy_nfe_formula(steps):
     assert p.nfes() == steps + n_cfg
 
 
-@given(st.integers(0, 2 ** 31 - 1))
+@given(st.integers(0, 2**31 - 1))
 def test_ssim_identity_and_symmetry(seed):
     key = jax.random.PRNGKey(seed)
     a = jax.random.uniform(key, (1, 2, 16, 16), minval=-1, maxval=1)
@@ -75,7 +74,7 @@ def test_ssim_identity_and_symmetry(seed):
     assert float(ssim(a, b)[0]) <= 1.0 + 1e-6
 
 
-@given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+@given(st.integers(2, 5), st.integers(0, 2**31 - 1))
 def test_ols_never_worse_than_zero_predictor_on_train(steps, seed):
     rng = np.random.default_rng(seed)
     eps_c = rng.normal(size=(6, steps, 12))
@@ -85,7 +84,7 @@ def test_ols_never_worse_than_zero_predictor_on_train(steps, seed):
     assert np.all(train_mse <= base + 1e-8)
 
 
-@given(st.integers(1, 3), st.integers(4, 8), st.integers(0, 2 ** 31 - 1))
+@given(st.integers(1, 3), st.integers(4, 8), st.integers(0, 2**31 - 1))
 def test_window_ols_never_worse_than_zero_predictor_on_train(K, steps, seed):
     rng = np.random.default_rng(seed)
     eps_c = rng.normal(size=(6, steps, 12))
@@ -114,7 +113,7 @@ _req = st.tuples(
     st.lists(_req, min_size=1, max_size=4),
     st.lists(st.integers(0, 6), min_size=4, max_size=4),
     st.integers(1, 3),
-    st.integers(0, 2 ** 31 - 1),
+    st.integers(0, 2**31 - 1),
 )
 def test_lane_ladder_invariants_under_random_churn(specs, arrivals, max_slots, seed):
     """Random admission order, budgets and crossing thresholds ⇒ every

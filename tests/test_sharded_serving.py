@@ -1,0 +1,334 @@
+"""Mesh-parity suite for sharded serving (DESIGN.md §8).
+
+The contract under test: running the three-lane batcher on a jax mesh
+changes WHERE work executes but not WHAT it computes — tokens, NFE
+ledgers and lifecycle events are bit-identical to the single-device
+golden fixtures (tests/fixtures/golden_serving.json), and the
+one-executable-per-(lane, bucket) invariant holds per mesh shape.
+
+Mesh shapes are derived from the visible device count, so the same file
+serves two jobs:
+
+* tier-1 (1 CPU device): the (1, 1) mesh — the full sharded code path
+  (param placement, lane constraints, donation) with trivial sharding —
+  plus a subprocess run that forces 8 simulated devices via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and checks the
+  (8,1)/(4,2)/(1,8) matrix;
+* the CI ``sharded`` job: sets that flag for the whole process and pins
+  one matrix shape per job via ``REPRO_MESH=dxm``.
+"""
+import json
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_host_mesh
+from repro.sharding.partition import (
+    SERVING_RULES,
+    even_spec,
+    lane_leaf_spec,
+    shard_lane_state,
+    use_mesh,
+)
+from tests.make_golden import (
+    FIXTURE,
+    run_batcher_case,
+    run_engine_case,
+    run_three_lane_case,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mesh_shapes():
+    """(data, model) shapes tiling the visible devices; ``REPRO_MESH=dxm``
+    (the CI sharded matrix) pins a single one."""
+    pin = os.environ.get("REPRO_MESH")
+    if pin:
+        d, m = (int(s) for s in pin.split("x"))
+        return [(d, m)]
+    n = jax.device_count()
+    shapes = {(n, 1), (1, n)}
+    shapes.update((d, n // d) for d in range(2, n) if n % d == 0)
+    return sorted(shapes)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def _golden_coeffs(golden):
+    from repro.core.linear_ag import WindowCoeffs
+
+    return WindowCoeffs(
+        K=int(golden["coeffs"]["K"]),
+        beta=np.asarray(golden["coeffs"]["beta"], np.float32),
+    )
+
+
+def assert_bit_identical(got, want):
+    """Tokens, NFE ledgers and every lifecycle step must match exactly."""
+    assert set(got["requests"]) == set(want["requests"])
+    for rid, w in want["requests"].items():
+        g = got["requests"][rid]
+        np.testing.assert_array_equal(
+            np.asarray(g["tokens"]), np.asarray(w["tokens"]),
+            err_msg=f"request {rid} token drift under mesh",
+        )
+        assert g["nfes"] == w["nfes"], f"request {rid} NFE ledger drift"
+        for field in (
+            "lane_history", "admit_step", "crossed_step", "linear_step",
+            "migrated_step", "complete_step",
+        ):
+            assert g[field] == w[field], (rid, field, g[field], w[field])
+    want_cc = {
+        k: {int(c): n for c, n in v.items()}
+        for k, v in want["compile_counts"].items()
+    }
+    assert got["compile_counts"] == want_cc, (
+        "compile-count drift: not one executable per (lane, bucket, mesh)"
+    )
+
+
+def check_golden_parity(shape):
+    """Run both golden batcher workloads under ``shape`` and compare to the
+    single-device fixtures.  Shared by the in-process parametrized test and
+    the forced-8-device subprocess below."""
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    mesh = make_host_mesh(shape)
+    got = run_three_lane_case(_golden_coeffs(golden), mesh=mesh)
+    assert_bit_identical(got, golden["three_lane"])
+    assert got["lane_steps"] == golden["three_lane"]["lane_steps"]
+    assert got["nfes_device"] == golden["three_lane"]["nfes_device"]
+    got2 = run_batcher_case(mesh=mesh)
+    assert_bit_identical(got2, golden["batcher"])
+    # the whole-batch engine's mesh path holds the same contract: tokens
+    # and NFE ledgers bit-identical, gammas to float tolerance
+    eng = run_engine_case(mesh=mesh)
+    np.testing.assert_array_equal(
+        np.asarray(eng["tokens"]), np.asarray(golden["engine"]["tokens"]),
+        err_msg="engine token drift under mesh",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(eng["nfes"]), np.asarray(golden["engine"]["nfes"])
+    )
+    np.testing.assert_allclose(
+        np.asarray(eng["gammas"]), np.asarray(golden["engine"]["gammas"]),
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize(
+    "shape", _mesh_shapes(), ids=lambda s: f"{s[0]}x{s[1]}"
+)
+def test_sharded_batcher_matches_golden(shape, golden):
+    if np.prod(shape) != jax.device_count():
+        pytest.skip(f"{shape} does not tile {jax.device_count()} devices")
+    check_golden_parity(shape)
+
+
+@pytest.mark.skipif(
+    jax.device_count() >= 8,
+    reason="already multi-device in-process (CI sharded job)",
+)
+def test_simulated_eight_device_matrix():
+    """Force 8 host devices in a subprocess and run the full mesh matrix —
+    tier-1's local stand-in for the CI sharded job (no TPU needed)."""
+    code = (
+        "from tests.test_sharded_serving import check_golden_parity\n"
+        "for shape in [(8, 1), (4, 2), (1, 8)]:\n"
+        "    check_golden_parity(shape)\n"
+        "    print('parity ok', shape, flush=True)\n"
+    )
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), REPO]
+            + ([os.environ["PYTHONPATH"]] if os.environ.get("PYTHONPATH") else [])
+        ),
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, f"sharded matrix failed:\n{proc.stdout}\n{proc.stderr}"
+    for shape in ["(8, 1)", "(4, 2)", "(1, 8)"]:
+        assert f"parity ok {shape}" in proc.stdout, proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# churn property under an active mesh
+# ---------------------------------------------------------------------------
+
+
+def test_churn_under_mesh_keeps_ladder_invariants():
+    """A representative churn workload through the data-majority host mesh:
+    all ladder invariants (conservation, monotonicity, one-executable-per-
+    bucket, B=1 oracle parity) must hold exactly as unsharded."""
+    from repro.serving import Request
+    from tests._toy_lm import VOCAB, run_ladder_case
+
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(
+            prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+            max_new_tokens=9, linear=True,
+        ),
+        Request(
+            prompt=rng.integers(1, VOCAB, size=5).astype(np.int32),
+            max_new_tokens=6,
+        ),
+        Request(
+            prompt=rng.integers(1, VOCAB, size=3).astype(np.int32),
+            max_new_tokens=11, linear=True, gamma_bar=2.0,
+        ),
+        Request(
+            prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+            max_new_tokens=5, guided=False,
+        ),
+    ]
+    run_ladder_case(reqs, [0, 0, 2, 3], max_slots=2, gamma_bar=0.95,
+                    mesh=make_host_mesh())
+
+
+def test_churn_property_under_mesh():
+    """Hypothesis: random admission orders / budgets / thresholds under an
+    active mesh keep every ladder invariant (the sharded twin of
+    tests/test_properties.py's ladder property)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.serving import Request
+    from tests._toy_lm import VOCAB, run_ladder_case
+
+    mesh = make_host_mesh()
+
+    @settings(max_examples=8, deadline=None, derandomize=True)
+    @given(st.data())
+    def prop(data):
+        n = data.draw(st.integers(1, 4), label="n_requests")
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16), label="seed"))
+        reqs, arrivals = [], []
+        for i in range(n):
+            linear = data.draw(st.booleans(), label=f"linear{i}")
+            guided = linear or data.draw(st.booleans(), label=f"guided{i}")
+            reqs.append(
+                Request(
+                    prompt=rng.integers(
+                        1, VOCAB, size=int(rng.integers(3, 7))
+                    ).astype(np.int32),
+                    max_new_tokens=data.draw(st.integers(4, 10), label=f"budget{i}"),
+                    guided=guided,
+                    linear=linear,
+                    gamma_bar=data.draw(
+                        st.sampled_from([None, -1.0, 2.0]), label=f"gb{i}"
+                    ),
+                )
+            )
+            arrivals.append(data.draw(st.integers(0, 6), label=f"arrival{i}"))
+        run_ladder_case(reqs, arrivals, max_slots=2, gamma_bar=0.9, mesh=mesh)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# partition rules for the lane-state leaves
+# ---------------------------------------------------------------------------
+
+
+def _stub_mesh(data, model):
+    return SimpleNamespace(
+        shape={"data": data, "model": model}, axis_names=("data", "model")
+    )
+
+
+def test_lane_leaf_specs_slot_axis_on_data():
+    mesh = _stub_mesh(8, 1)
+    assert lane_leaf_spec(("slots", None), (8, 1), mesh) == P("data")
+    assert lane_leaf_spec(("slots",), (8,), mesh) == P("data")
+    # KV cache leaf: period stack replicated, slot axis 1 on "data";
+    # kvlen must NOT grab "data" (SERVING_RULES) even when divisible
+    spec = lane_leaf_spec(
+        ("", "slots", "kvlen", "kvheads", "head_dim"), (2, 8, 16, 4, 32), mesh
+    )
+    assert spec == P(None, "data")
+
+
+def test_lane_leaf_specs_vocab_and_heads_on_model():
+    mesh = _stub_mesh(2, 4)
+    # history ring buffer (B, K, 1, V): slots -> data, vocab -> model
+    assert lane_leaf_spec(
+        ("slots", None, None, "vocab"), (4, 2, 1, 512), mesh
+    ) == P("data", None, None, "model")
+    # kv heads ride "model" when divisible
+    spec = lane_leaf_spec(
+        (None, "slots", "kvlen", "kvheads", "head_dim"), (2, 4, 16, 4, 32), mesh
+    )
+    assert spec == P(None, "data", None, "model")
+
+
+def test_lane_leaf_specs_drop_uneven_dims():
+    mesh = _stub_mesh(8, 1)
+    # a 2-slot bucket cannot split 8 ways -> replicated, not an error
+    assert lane_leaf_spec(("slots", None), (2, 1), mesh) == P()
+    mesh24 = _stub_mesh(2, 4)
+    # vocab 510 % 4 != 0 -> vocab axis dropped, slots kept
+    assert lane_leaf_spec(
+        ("slots", None, None, "vocab"), (4, 2, 1, 510), mesh24
+    ) == P("data")
+
+
+def test_even_spec_dedupes_mesh_axes():
+    mesh = _stub_mesh(2, 4)
+    # second "data" entry must be dropped: one mesh axis, one dim
+    assert even_spec(P("data", "data"), (4, 4), mesh) == P("data")
+
+
+def test_shard_lane_state_places_leaves():
+    """End-to-end placement on the real host mesh: every leaf is committed
+    with a sharding whose mesh is the serving mesh."""
+    from repro.serving.guided_decode import LaneState
+
+    mesh = make_host_mesh()
+    n = jax.device_count()
+    import jax.numpy as jnp
+
+    state = LaneState(
+        tokens=jnp.zeros((n, 1), jnp.int32),
+        position=jnp.zeros((n,), jnp.int32),
+        caches_c=[{
+            "k": jnp.zeros((2, n, 4, 2, 8)),
+            "pos": jnp.zeros((2, n, 4), jnp.int32),
+        }],
+        caches_u=None,
+        crossed=jnp.zeros((n,), bool),
+        nfes=jnp.zeros((n,), jnp.float32),
+        active=jnp.zeros((n,), bool),
+        gamma_bar=jnp.ones((n,), jnp.float32),
+    )
+    with use_mesh(mesh, SERVING_RULES):
+        placed = shard_lane_state(state)
+    assert placed.tokens.sharding.mesh.shape == mesh.shape
+    if n > 1:  # data-majority host mesh: slot axis actually split
+        assert placed.tokens.sharding.spec == P("data")
+        assert placed.caches_c[0]["k"].sharding.spec == P(None, "data")
+
+
+def test_make_host_mesh_defaults_and_override():
+    n = jax.device_count()
+    mesh = make_host_mesh()
+    assert tuple(mesh.shape[a] for a in ("data", "model")) == (n, 1)
+    mesh = make_host_mesh((1, n))
+    assert tuple(mesh.shape[a] for a in ("data", "model")) == (1, n)
+    with pytest.raises(ValueError):
+        make_host_mesh((n + 1, 1))

@@ -1,8 +1,6 @@
 """Partition rules + small-mesh lowering (the dry-run machinery in miniature)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -1,7 +1,6 @@
 """Direct ServingTelemetry coverage: percentile math, the realized-savings
 formula and the three-lane accounting, against hand-computed values (the
 batcher tests exercise these only indirectly)."""
-import numpy as np
 import pytest
 
 from repro.serving.telemetry import RequestRecord, ServingTelemetry
