@@ -20,7 +20,9 @@ def main(steps: int = 20, scale: float = 4.0, n_batches: int = 4, batch: int = 8
     gammas = []
     for _ in range(n_batches):
         key, k1, k2 = jax.random.split(key, 3)
-        x_T = jax.random.normal(k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+        x_T = jax.random.normal(
+            k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw)
+        )
         cond = jax.random.randint(k2, (batch,), 0, N_CLASSES)
         _, info = sample_with_policy(
             model, params, solver, pol.cfg_policy(steps, scale), x_T, cond, collect=True
@@ -40,7 +42,9 @@ def main(steps: int = 20, scale: float = 4.0, n_batches: int = 4, batch: int = 8
     for sname in ("ddim", "euler"):
         sv = get_solver(sname, sched)
         key2, k1, k2 = jax.random.split(jax.random.PRNGKey(42), 3)
-        x_T = jax.random.normal(k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+        x_T = jax.random.normal(
+            k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw)
+        )
         cond = jax.random.randint(k2, (batch,), 0, N_CLASSES)
         _, inf = sample_with_policy(
             model, params, sv, pol.cfg_policy(steps, scale), x_T, cond, collect=True

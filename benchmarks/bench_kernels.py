@@ -60,6 +60,66 @@ def main():
     us2 = timed(jax.jit(lambda hh, bb: jnp.einsum("k,kn->n", bb, hh)), h, b)
     emit("kernel_linear_combine", us2, f"allclose={int(ok2)};K={K}")
 
+    bench_decode_attention()
+
+
+def bench_decode_attention():
+    """Serving-shape decode attention: the bandwidth-bound hot spot of
+    every lane step (one query vs a ring KV cache per slot).
+
+    Three tracked cases mirror what the step batcher actually runs: GQA
+    (grouped queries, no repeated KV in HBM), a wrapped ring cache (decode
+    position past the cache length, slots hold mixed-generation entries),
+    and a sliding window (validity-masked tail).  Each reports reference
+    parity plus the HBM traffic model — the kernel streams K+V exactly
+    once, so bytes_min is the structural floor the TPU run should approach
+    (on CPU the Pallas kernel runs in interpret mode; the timed column is
+    the XLA reference, as for the other kernels in this file).
+    """
+    from repro.kernels import decode_attention
+    from repro.kernels.ref import decode_attention_ref
+
+    def ring_pos(B, S, position):
+        """pos_cache for a cache in ring state at ``position``: slot i
+        holds the newest absolute position p <= position with p % S == i,
+        exactly what attention_decode's `% S` update leaves behind."""
+        base = jnp.arange(S)[None, :].repeat(B, 0)
+        cur = position[:, None]
+        p = cur - ((cur - base) % S)
+        return p.astype(jnp.int32)
+
+    cases = [
+        # (tag, B, S, Hq, Hkv, D, window, decode position)
+        ("gqa", 8, 1024, 8, 2, 64, None, 600),
+        ("ring_wrap", 8, 512, 8, 8, 64, None, 900),  # position > S: wrapped
+        ("sliding_window", 8, 1024, 8, 4, 64, 256, 800),
+    ]
+    for i, (tag, B, S, Hq, Hkv, D, window, cur) in enumerate(cases):
+        ks = jax.random.split(jax.random.PRNGKey(100 + i), 3)
+        q = jax.random.normal(ks[0], (B, Hq, 1, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+        position = jnp.full((B,), cur, jnp.int32)
+        pos = ring_pos(B, S, position)
+        out = decode_attention(q, k, v, pos, position, window=window, bk=256)
+        ref = decode_attention_ref(q, k, v, pos, position, window=window)
+        ok = bool(jnp.allclose(out, ref, atol=1e-5))
+        # bandwidth model: K+V streamed once + q/out; no score round-trip
+        bytes_min = 2 * B * S * Hkv * D * 4 + 2 * B * Hq * D * 4
+        us = timed(
+            jax.jit(
+                lambda q, k, v, pos, position, _w=window: decode_attention_ref(
+                    q, k, v, pos, position, window=_w
+                )
+            ),
+            q, k, v, pos, position,
+        )
+        emit(
+            f"kernel_decode_attention_{tag}", us,
+            f"allclose={int(ok)};B={B};S={S};Hq={Hq};Hkv={Hkv};D={D};"
+            f"window={window};bytes_min={bytes_min}",
+        )
+
 
 if __name__ == "__main__":
     main()

@@ -17,10 +17,14 @@ def main(max_new: int = 24, n_requests: int = 4, scale: float = 1.5):
                 max_new_tokens=max_new)
         for _ in range(n_requests)
     ]
-    eng_cfg = GuidedEngine(api, params, EngineConfig(scale=scale, gamma_bar=1.1, max_batch=8))
+    eng_cfg = GuidedEngine(
+        api, params, EngineConfig(scale=scale, gamma_bar=1.1, max_batch=8)
+    )
     out_cfg = eng_cfg.generate(reqs)
     for gb in (0.8, 0.9, 0.95, 0.99):
-        eng = GuidedEngine(api, params, EngineConfig(scale=scale, gamma_bar=gb, max_batch=8))
+        eng = GuidedEngine(
+            api, params, EngineConfig(scale=scale, gamma_bar=gb, max_batch=8)
+        )
         out = eng.generate(reqs)
         agree = float(np.mean(out["tokens"] == out_cfg["tokens"]))
         nfe = float(np.mean(out["nfes"]))

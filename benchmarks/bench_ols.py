@@ -13,20 +13,32 @@ def collect(model, params, solver, steps, scale, n, batch, key, cfg):
     cs, us = [], []
     for _ in range(n):
         key, k1, k2 = jax.random.split(key, 3)
-        x_T = jax.random.normal(k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+        x_T = jax.random.normal(
+            k1, (batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw)
+        )
         cond = jax.random.randint(k2, (batch,), 0, N_CLASSES)
-        _, info = collect_pair_trajectory(model, params, solver, steps, scale, x_T, cond)
+        _, info = collect_pair_trajectory(
+            model, params, solver, steps, scale, x_T, cond
+        )
         cs.append(np.moveaxis(np.asarray(info["eps_c"]), 0, 1))
         us.append(np.moveaxis(np.asarray(info["eps_u"]), 0, 1))
     return np.concatenate(cs), np.concatenate(us)
 
 
-def main(steps: int = 20, scale: float = 4.0, n_train: int = 6, n_test: int = 3, batch: int = 8):
+def main(
+    steps: int = 20,
+    scale: float = 4.0,
+    n_train: int = 6,
+    n_test: int = 3,
+    batch: int = 8,
+):
     cfg, api, params, sched = get_trained_dit()
     model = dit_eps_model(api)
     solver = get_solver("dpmpp_2m", sched)
     key = jax.random.PRNGKey(3)
-    eps_c, eps_u = collect(model, params, solver, steps, scale, n_train + n_test, batch, key, cfg)
+    eps_c, eps_u = collect(
+        model, params, solver, steps, scale, n_train + n_test, batch, key, cfg
+    )
     n_tr = n_train * batch
     coeffs, train_mse = fit_ols(eps_c[:n_tr], eps_u[:n_tr])
     test_mse = eval_ols(coeffs, eps_c[n_tr:], eps_u[n_tr:])

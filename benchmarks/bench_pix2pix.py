@@ -63,7 +63,9 @@ def get_trained_p2p(steps=P2P_STEPS, seed=0):
     path = os.path.join(CKPT_DIR, f"dit_p2p_{steps}_k{K}.npz")
     if os.path.exists(path):
         return cfg, api, checkpoint.load(path, params), sched
-    ds = DoubleDataset(ImageDataset(num_classes=K * K, channels=cfg.latent_ch, hw=cfg.latent_hw))
+    ds = DoubleDataset(
+        ImageDataset(num_classes=K * K, channels=cfg.latent_ch, hw=cfg.latent_hw)
+    )
     opt = adamw(lr=2e-3, warmup=50)
     st = opt.init(params)
     # custom train step: independent dropout of the two conditions
@@ -132,7 +134,11 @@ def sample_p2p(api, params, sched, x_T, img_c, txt_c, *, steps, s_text, s_img,
             eps, _ = api.forward(params, {"x_t": x, "t": t, "cond": comp_id(img_c, txt_c)})
             nfe += 1
         x, state = solver.step(
-            x, eps, jnp.asarray(int(ts[i]), jnp.int32), jnp.asarray(int(ts[i + 1]), jnp.int32), state
+            x,
+            eps,
+            jnp.asarray(int(ts[i]), jnp.int32),
+            jnp.asarray(int(ts[i + 1]), jnp.int32),
+            state,
         )
     return x, nfe, np.asarray(gammas) if gammas else None
 

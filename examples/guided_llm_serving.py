@@ -41,16 +41,23 @@ def main():
                 max_new_tokens=args.max_new),
         Request(prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
                 max_new_tokens=args.max_new,
-                negative_prompt=rng.integers(1, cfg.vocab_size, size=4).astype(np.int32)),
+                negative_prompt=rng.integers(1, cfg.vocab_size, size=4).astype(
+                    np.int32
+                )),
     ]
 
     print("== full CFG decoding (2 NFEs / step) ==")
-    eng_cfg = GuidedEngine(api, params, EngineConfig(scale=args.scale, gamma_bar=1.1, max_batch=4))
+    eng_cfg = GuidedEngine(
+        api, params, EngineConfig(scale=args.scale, gamma_bar=1.1, max_batch=4)
+    )
     out_cfg = eng_cfg.generate(reqs)
     print(f"  NFEs: {out_cfg['nfes']}")
 
     print(f"== Adaptive Guidance (gamma_bar={args.gamma_bar}) ==")
-    eng = GuidedEngine(api, params, EngineConfig(scale=args.scale, gamma_bar=args.gamma_bar, max_batch=4))
+    eng = GuidedEngine(
+        api, params,
+        EngineConfig(scale=args.scale, gamma_bar=args.gamma_bar, max_batch=4),
+    )
     out = eng.generate(reqs)
     agree = float(np.mean(out["tokens"] == out_cfg["tokens"]))
     print(f"  NFEs: {out['nfes']} (CFG: {out_cfg['nfes']})")

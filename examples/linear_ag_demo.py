@@ -45,14 +45,18 @@ def main():
     k1, k2 = jax.random.split(jax.random.PRNGKey(1))
     x_T = jax.random.normal(k1, (8, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
     cond = jax.random.randint(k2, (8,), 0, N_CLASSES)
-    baseline, _ = sample_with_policy(model, params, solver, pol.cfg_policy(S, sc), x_T, cond)
+    baseline, _ = sample_with_policy(
+        model, params, solver, pol.cfg_policy(S, sc), x_T, cond
+    )
 
     print("== LinearAG sampling (Eq. 11) ==")
     x_lag, info = linear_ag_sample(model, params, solver, S, sc, coeffs, x_T, cond)
     s_lag = float(np.mean(np.asarray(ssim(x_lag, baseline))))
     print(f"  NFEs {info['nfe']} (CFG: {2 * S}), SSIM vs baseline {s_lag:.4f}")
 
-    x_alt, _ = sample_with_policy(model, params, solver, pol.alternating_policy(S, sc), x_T, cond)
+    x_alt, _ = sample_with_policy(
+        model, params, solver, pol.alternating_policy(S, sc), x_T, cond
+    )
     s_alt = float(np.mean(np.asarray(ssim(x_alt, baseline))))
     print(f"  naive alternation ({pol.alternating_policy(S, sc).nfes()} NFEs): SSIM {s_alt:.4f}")
     print(f"  => LinearAG {'captures path regularity (wins)' if s_lag > s_alt else 'did not beat naive here'}")

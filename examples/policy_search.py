@@ -41,7 +41,9 @@ def main():
     )
 
     print("== DARTS search over guidance options ==")
-    space = nas.SearchSpace(steps=args.steps, scales=(args.scale / 2, args.scale, 2 * args.scale))
+    space = nas.SearchSpace(
+        steps=args.steps, scales=(args.scale / 2, args.scale, 2 * args.scale)
+    )
     alpha, history = nas.search(
         model, params, solver, space, dataset, jax.random.PRNGKey(1),
         epochs=args.epochs, lr=5e-2,

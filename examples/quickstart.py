@@ -45,12 +45,16 @@ def main():
 
     key = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
-    x_T = jax.random.normal(k1, (args.batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
+    x_T = jax.random.normal(
+        k1, (args.batch, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw)
+    )
     cond = jax.random.randint(k2, (args.batch,), 0, N_CLASSES)
 
     print("== 2. CFG baseline ==")
     S, sc = args.sample_steps, args.scale
-    baseline, _ = sample_with_policy(model, params, solver, pol.cfg_policy(S, sc), x_T, cond)
+    baseline, _ = sample_with_policy(
+        model, params, solver, pol.cfg_policy(S, sc), x_T, cond
+    )
     print(f"  CFG: {2 * S} NFEs")
 
     print("== 3. Adaptive Guidance ==")
@@ -71,7 +75,9 @@ def main():
 
     print("== 4. naive step reduction at matched NFEs ==")
     n_matched = max(2, int(round(nfes.mean())) // 2)
-    naive, _ = sample_with_policy(model, params, solver, pol.cfg_policy(n_matched, sc), x_T, cond)
+    naive, _ = sample_with_policy(
+        model, params, solver, pol.cfg_policy(n_matched, sc), x_T, cond
+    )
     s_nv = np.asarray(ssim(naive, baseline))
     print(f"  CFG-{n_matched}-steps ({2 * n_matched} NFEs): SSIM {s_nv.mean():.4f}")
     verdict = "AG wins" if s_ag.mean() > s_nv.mean() else "naive wins (unexpected!)"

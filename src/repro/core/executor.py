@@ -163,6 +163,30 @@ class GuidanceExecutor:
         """Conditional-lane ledger: +1 NFE per *active* slot."""
         return nfes + jnp.where(active, 1.0, 0.0)
 
+    def frozen_lane_update(
+        self, eps_u, eps_c, scale, crossed, nfes, gamma_bar, live, linear_mode
+    ) -> AGStep:
+        """``lane_update`` under a horizon freeze mask (DESIGN.md §12).
+
+        ``live`` is ``active & ~frozen``: a slot that completed (budget or
+        EOS) mid-horizon stays in the compiled batch but must stop paying
+        NFEs and can no longer cross — the masked ledger is what lets the
+        host learn of a completion one horizon late without the ledger
+        drifting.  ``linear_mode`` marks slots whose unconditional branch
+        is the 0-NFE LinearAG extrapolation (``eps_u`` already carries the
+        estimate for them): they pay +1 like the linear lane, everyone
+        else pays the usual +2 uncrossed / +1 crossed.  Crossed slots
+        dominate ``linear_mode`` in both the price and the eps selection,
+        so the horizon scan's boundary-deferred migrations are ledger- and
+        token-identical to the per-step ladder.
+        """
+        eps_cfg, gamma = self.combine(eps_u, eps_c, scale)
+        eps = jnp.where(_bcast(crossed, eps_cfg), eps_c, eps_cfg)
+        one_nfe = crossed | linear_mode
+        nfes = nfes + jnp.where(live, jnp.where(one_nfe, 1.0, 2.0), 0.0)
+        crossed = crossed | (live & (gamma > gamma_bar))
+        return AGStep(eps=eps, gamma=gamma, crossed=crossed, nfes=nfes)
+
     def linear_lane_update(
         self, eps_u_hat, eps_c, scale, crossed, nfes, gamma_bar, active
     ) -> AGStep:

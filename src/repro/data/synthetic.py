@@ -94,7 +94,18 @@ class TokenDataset:
         return jnp.moveaxis(toks, 0, 1).astype(jnp.int32)  # (B, S)
 
 
-def make_noise_image_pairs(key, model, params, solver, steps, scale, dataset_size, batch, cond_classes, latent_shape):
+def make_noise_image_pairs(
+    key,
+    model,
+    params,
+    solver,
+    steps,
+    scale,
+    dataset_size,
+    batch,
+    cond_classes,
+    latent_shape,
+):
     """§4.1: generate (x_T, cond, x0_teacher) pairs with the CFG teacher.
 
     Returns a list of batches usable by core.nas.search.

@@ -39,7 +39,9 @@ class Schedule:
         return 0.5 * (jnp.log(ab) - jnp.log1p(-ab))
 
 
-def linear_schedule(T: int = 1000, beta0: float = 1e-4, beta1: float = 2e-2) -> Schedule:
+def linear_schedule(
+    T: int = 1000, beta0: float = 1e-4, beta1: float = 2e-2
+) -> Schedule:
     return Schedule(betas=np.linspace(beta0, beta1, T, dtype=np.float64))
 
 

@@ -92,7 +92,9 @@ def dpmpp_2m_step(
 
     d = jnp.where(state.has_prev, second_order(), x0)
     x_next = (s_n / s_c) * x - a_n * jnp.expm1(-h) * d
-    new_state = SolverState(prev_x0=x0, prev_lam=lam_c, has_prev=jnp.ones((), jnp.bool_))
+    new_state = SolverState(
+        prev_x0=x0, prev_lam=lam_c, has_prev=jnp.ones((), jnp.bool_)
+    )
     return x_next, new_state
 
 

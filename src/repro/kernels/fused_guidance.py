@@ -35,7 +35,9 @@ def _kernel(scale_ref, u_ref, c_ref, out_ref, dot_ref, nu_ref, nc_ref):
     nc_ref[0, 0] = jnp.sum(c * c)
 
 
-def fused_guidance_2d(eps_u, eps_c, scale, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def fused_guidance_2d(
+    eps_u, eps_c, scale, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+):
     """eps_u/eps_c: (R, N). Returns (eps_cfg (R,N), dot, nu, nc each (R,))."""
     R, N = eps_u.shape
     if N % block != 0:

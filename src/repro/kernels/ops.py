@@ -65,7 +65,14 @@ def decode_attention(
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(
-    q, k, v, *, causal: bool = True, bq: int = 128, bk: int = 128, interpret: bool = True
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
 ):
     """Normalized flash attention output, (B, Hq, S, D) f32."""
     acc, m, l = flash_attention_raw(

@@ -115,6 +115,14 @@ def main():
                          "trajectories if it does not exist")
     ap.add_argument("--linear-window", type=int, default=4,
                     help="history window K when fitting (--fit-coeffs)")
+    ap.add_argument("--horizon", type=int, default=1,
+                    help="fuse this many decode substeps per lane dispatch "
+                         "(horizon-fused decode with the async "
+                         "double-buffered host sync, DESIGN.md §12; "
+                         "implies --continuous).  Tokens and NFE ledgers "
+                         "are identical to --horizon 1; admission/"
+                         "migration/streaming quantize to horizon "
+                         "boundaries")
     ap.add_argument("--mesh", default=None, metavar="DXM",
                     help="serve sharded on a (d, m) data x model mesh "
                          "(e.g. 8x1), or 'host' for the data-majority "
@@ -139,14 +147,16 @@ def main():
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(
-            prompt=rng.integers(1, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
+            prompt=rng.integers(
+                1, cfg.vocab_size, size=args.prompt_len
+            ).astype(np.int32),
             max_new_tokens=args.max_new,
             linear=args.linear,
         )
         for _ in range(args.requests)
     ]
 
-    if args.continuous or args.linear:
+    if args.continuous or args.linear or args.horizon > 1:
         from repro.serving import BatcherConfig, StepBatcher
 
         coeffs = (
@@ -155,7 +165,8 @@ def main():
             else None
         )
         bat = StepBatcher(
-            api, params, ec, BatcherConfig(max_slots=args.requests),
+            api, params, ec,
+            BatcherConfig(max_slots=args.requests, horizon=args.horizon),
             coeffs=coeffs, mesh=mesh,
         )
         for i, r in enumerate(reqs):
@@ -163,7 +174,9 @@ def main():
         done = bat.run()
         t = bat.report()["totals"]
         lanes = "three-lane" if args.linear else "two-lane"
-        print(f"[serve] {cfg.name}: {len(done)} requests via step batcher ({lanes})")
+        hor = f", horizon={args.horizon}" if args.horizon > 1 else ""
+        print(f"[serve] {cfg.name}: {len(done)} requests via step batcher "
+              f"({lanes}{hor})")
         print(f"  NFEs saved vs always-CFG: {t['mean_savings_pct']:.1f}%")
         if args.linear:
             print(f"  0-NFE extrapolated uncond evals: {t['extrapolated_uncond']}")
@@ -171,7 +184,12 @@ def main():
                   f"{t['lane_steps']['linear']}/{t['lane_steps']['cond']}")
         print(f"  tokens/sec: {t['tokens_per_sec']:.1f}  "
               f"step p50/p99: {t['step_latency_ms']['p50']:.1f}/"
-              f"{t['step_latency_ms']['p99']:.1f} ms")
+              f"{t['step_latency_ms']['p99']:.1f} ms "
+              f"(compile {t['compile_s']:.2f}s over {t['warmup_steps']} "
+              f"warmup rounds)")
+        print(f"  device dispatches/token: {t['dispatches_per_token']:.3f} "
+              f"({t['device_dispatches']} launches, "
+              f"{t['decode_substeps']} decode substeps)")
         print(f"  NFE ledger: device {t['nfes_device']:.0f} == "
               f"expected {t['nfes_expected']:.0f}")
         return
@@ -179,7 +197,10 @@ def main():
     eng = GuidedEngine(api, params, ec, mesh=mesh)
     out = eng.generate(reqs)
     full_cfg_nfes = 2.0 * args.max_new
-    print(f"[serve] {cfg.name}: {args.requests} requests, {args.max_new} new tokens each")
+    print(
+        f"[serve] {cfg.name}: {args.requests} requests, "
+        f"{args.max_new} new tokens each"
+    )
     print(f"  guided steps (batch): {out['guided_steps']} / {args.max_new}")
     for i, nfe in enumerate(out["nfes"]):
         print(

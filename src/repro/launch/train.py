@@ -54,7 +54,9 @@ def main():
 
     if cfg.family == "dit":
         sched = cosine_schedule(200)
-        ds = ImageDataset(num_classes=cfg.vocab_size, channels=cfg.latent_ch, hw=cfg.latent_hw)
+        ds = ImageDataset(
+            num_classes=cfg.vocab_size, channels=cfg.latent_ch, hw=cfg.latent_hw
+        )
         step_fn = make_dit_train_step(api, sched, opt)
         t0 = time.time()
         for i in range(args.steps):

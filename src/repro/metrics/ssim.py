@@ -41,5 +41,7 @@ def ssim(a, b, *, win: int = 8, dynamic_range: float = 2.0):
 
 
 def psnr(a, b, *, dynamic_range: float = 2.0):
-    mse = jnp.mean(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)), axis=(1, 2, 3))
+    mse = jnp.mean(
+        jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)), axis=(1, 2, 3)
+    )
     return 10.0 * jnp.log10(dynamic_range**2 / jnp.maximum(mse, 1e-12))

@@ -247,10 +247,16 @@ def attention_full(params, ac: AttnConfig, x, positions, kv_x=None, kv_positions
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
     if ac.causal or ac.sliding_window is not None:
         mask = _attn_mask(positions, kv_positions, ac)  # (B,Sq,Sk) or (Sq,Sk)
-        scores = scores + mask[..., None, None, :, :] if mask.ndim == 2 else scores + mask[:, None, None]
+        scores = (
+            scores + mask[..., None, None, :, :]
+            if mask.ndim == 2
+            else scores + mask[:, None, None]
+        )
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
-    out = out.reshape(x.shape[0], q.shape[1], ac.num_heads * ac.head_dim).astype(x.dtype)
+    out = out.reshape(x.shape[0], q.shape[1], ac.num_heads * ac.head_dim).astype(
+        x.dtype
+    )
     out = lsc(out, "batch", None, "qdim")
     y = out @ params["wo"]
     if ac.use_bias:
@@ -283,7 +289,9 @@ def _chunked_core(qg, k, v, positions, ac: AttnConfig, chunk: int):
         m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
         p = jnp.exp(s - m_safe[..., None])
         p = jnp.where(jnp.isinf(s), 0.0, p)
-        corr = jnp.where(jnp.isinf(m), jnp.where(jnp.isinf(m_new), 1.0, 0.0), jnp.exp(m - m_safe))
+        corr = jnp.where(
+            jnp.isinf(m), jnp.where(jnp.isinf(m_new), 1.0, 0.0), jnp.exp(m - m_safe)
+        )
         l_new = l * corr + p.sum(axis=-1)
         pv = _score_einsum("bhgqk,bkhd->bqhgd", p, v_c)
         acc_new = acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
@@ -378,7 +386,11 @@ def prefill_to_cache(k, v, positions, cache_len: int, window: Optional[int]):
     """Pack prefill K/V (B,S,Hkv,Dh) into a decode cache of length cache_len."""
     B, S = k.shape[:2]
     if window and S > cache_len:
-        k, v, positions = k[:, -cache_len:], v[:, -cache_len:], positions[:, -cache_len:]
+        k, v, positions = (
+            k[:, -cache_len:],
+            v[:, -cache_len:],
+            positions[:, -cache_len:],
+        )
         S = cache_len
     pos = jnp.full((B, cache_len), jnp.iinfo(jnp.int32).max, jnp.int32)
     kc = jnp.zeros((B, cache_len) + k.shape[2:], k.dtype).at[:, :S].set(k)

@@ -228,7 +228,9 @@ def forward(
             all_caches.append(per_caches)
         # stack caches over periods per plan position
         caches = [
-            jax.tree.map(lambda *xs: jnp.stack(xs), *[all_caches[p][i] for p in range(npd)])
+            jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[all_caches[p][i] for p in range(npd)]
+            )
             for i in range(len(plan))
         ]
         extras = {"aux_loss": aux, "caches": caches, "positions": positions}
@@ -296,5 +298,7 @@ def init_caches(cfg, batch: int, seq_len: int):
             one = cm.init_kv_cache(cfg, batch, seq_len)
         else:
             one = mamba2.init_ssm_cache(cfg, batch)
-        caches.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (npd,) + x.shape), one))
+        caches.append(
+            jax.tree.map(lambda x: jnp.broadcast_to(x, (npd,) + x.shape), one)
+        )
     return caches

@@ -127,7 +127,9 @@ def forward(params, cfg, tokens, frames, *, mode="train", return_hidden=False, c
         for li in range(L):
             p = jax.tree.map(lambda a: a[li], params["dec_layers"])
             x, _, kv = _dec_block(p, cfg, x, positions, enc_out, mode="prefill", cache=None)
-            self_cache = cm.prefill_to_cache(kv[0], kv[1], positions, cache_len or S, None)
+            self_cache = cm.prefill_to_cache(
+                kv[0], kv[1], positions, cache_len or S, None
+            )
             ck = enc_out @ p["cross_attn"]["wk"] + p["cross_attn"]["bk"]
             cv = enc_out @ p["cross_attn"]["wv"] + p["cross_attn"]["bv"]
             Se = enc_out.shape[1]

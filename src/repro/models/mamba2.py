@@ -112,7 +112,10 @@ def ssd_chunked(x, dt, a, B, C, chunk: int):
     s_final, prev_states = _cm.scan(
         body,
         s0,
-        (jnp.moveaxis(states, 1, 0).astype(jnp.float32), jnp.moveaxis(chunk_decay, 1, 0)),
+        (
+            jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(chunk_decay, 1, 0),
+        ),
     )
     prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,H,P,N)
 

@@ -1,14 +1,20 @@
 """Serving subsystem: guided decoding, continuous batching, telemetry.
 
-Layering (DESIGN.md §7):
-  guided_decode — the compiled step functions (whole-batch + lane-packed);
+Layering (DESIGN.md §7, §12):
+  guided_decode — the compiled step functions (whole-batch + lane-packed)
+                  and the horizon-fused lane scans (H substeps per
+                  executable, on-device lifecycle, `HorizonTrace`);
   engine        — whole-batch oracle (`GuidedEngine`), prompt packing, the
-                  eager LinearAG oracle (`linear_ag_generate`) and the CFG
-                  trajectory collector for window-coefficient fitting;
+                  per-bucket jitted admission prefill (`PrefillCache`),
+                  the eager LinearAG oracle (`linear_ag_generate`) and the
+                  CFG trajectory collector for window-coefficient fitting;
   scheduler     — round-based baseline (`ContinuousScheduler`);
   batcher       — step-level continuous batching over the three-lane
-                  ladder guided -> linear -> cond (`StepBatcher`);
-  telemetry     — NFE ledgers, latency, realized savings (`ServingTelemetry`).
+                  ladder guided -> linear -> cond (`StepBatcher`), with
+                  horizon-fused dispatch + async double-buffered host
+                  sync at `BatcherConfig(horizon>1)`;
+  telemetry     — NFE ledgers, latency, realized savings, dispatch
+                  economics (`ServingTelemetry`).
 """
 from repro.serving.batcher import BatcherConfig, StepBatcher
 from repro.serving.engine import (

@@ -45,6 +45,18 @@ Telemetry (serving/telemetry.py) receives the full event stream; its
 ledger-conservation check (device NFEs == host-expected NFEs) holds across
 admission, migration, reuse and completion in all three lanes.
 
+Horizon-fused decode (DESIGN.md §12): ``BatcherConfig(horizon=H)`` runs
+H consecutive substeps of each lane inside ONE ``lax.scan`` executable —
+budget/EOS freeze masks, AG crossing latches and the LinearAG warmup
+switch resolve on-device, and the host double-buffers: horizon *t*'s
+``(H, slots)`` trace is copied device->host asynchronously while the
+host postprocesses horizon *t-1*, with boundary mutations (completions,
+migrations, admissions) enqueued onto in-flight outputs.  Per-request
+tokens and NFE ledgers are identical to ``horizon=1`` at any H; device
+dispatches per token shrink ~H-fold; admission/migration/streaming
+quantize to horizon boundaries.  ``horizon=1`` (default) is the
+unchanged per-step path, bit-identical to the golden fixtures.
+
 Sharded serving (DESIGN.md §8): pass ``mesh=`` (a data x model ``Mesh``,
 e.g. ``launch.mesh.make_host_mesh()``) and every lane's traced executable
 compiles under ``NamedSharding`` specs — the batch-slot axis on ("data",),
@@ -68,12 +80,15 @@ import numpy as np
 
 from repro.core.executor import GuidanceExecutor
 from repro.core.linear_ag import WindowCoeffs
-from repro.serving.engine import EngineConfig, Request, pad_prompts
+from repro.serving.engine import EngineConfig, PrefillCache, Request, pad_prompts
 from repro.serving.guided_decode import (
     LaneState,
     LinearLaneState,
+    cond_lane_horizon,
     cond_lane_step,
+    guided_lane_horizon,
     guided_lane_step,
+    linear_lane_horizon,
     linear_lane_step,
 )
 from repro.serving.telemetry import ServingTelemetry
@@ -99,6 +114,17 @@ class BatcherConfig:
     # queued requests (max prompt_len + max_new_tokens + 1).
     cache_len: Optional[int] = None
     eos_token: Optional[int] = None
+    # Horizon-fused decode (DESIGN.md §12): fuse this many consecutive
+    # decode substeps per lane into ONE lax.scan executable.  horizon=1 is
+    # the per-step path, bit-identical to the golden fixtures; horizon>1
+    # keeps per-request tokens and NFE ledgers identical while admission,
+    # migration and streaming quantize to horizon boundaries.
+    horizon: int = 1
+    # Double-buffered host sync (horizon>1 only): dispatch horizon t, start
+    # the async D2H copy of its trace, and postprocess horizon t-1 while
+    # the device computes — the host never idles the device on a blocking
+    # fetch.  None resolves to True when horizon > 1.
+    async_fetch: Optional[bool] = None
 
     def __post_init__(self):
         if self.buckets is None:
@@ -111,6 +137,9 @@ class BatcherConfig:
             "largest lane bucket must fit max_slots so migration can never "
             f"strand a request: {self.buckets} vs max_slots={self.max_slots}"
         )
+        assert self.horizon >= 1, f"horizon must be >= 1, got {self.horizon}"
+        if self.async_fetch is None:
+            self.async_fetch = self.horizon > 1
 
 
 @dataclasses.dataclass
@@ -188,6 +217,7 @@ class StepBatcher:
         self._pending: List[_Pending] = []
         self._next_rid = 0
         self._step_idx = 0
+        self._round_end: Optional[float] = None  # horizon latency bookkeeping
         self._gen: Dict[int, List[int]] = {}  # rid -> emitted tokens
         self._reqs: Dict[int, Request] = {}
         self._host_crossed: Dict[int, bool] = {}
@@ -204,6 +234,11 @@ class StepBatcher:
             "linear": {},
             "cond": {},
         }
+        # Admission prefill: compiled once per prompt-length bucket and
+        # replayed for every later admission with the same shape (the
+        # one-compile-per-bucket invariant lives in
+        # prefill_compile_counts; asserted in tests/test_batcher.py).
+        self._prefill = PrefillCache(api)
 
         def _traced_guided(params, state):
             K = state.tokens.shape[0]
@@ -235,6 +270,53 @@ class StepBatcher:
         self._guided_step = jax.jit(_traced_guided, donate_argnums=(1,))
         self._linear_step = jax.jit(_traced_linear, donate_argnums=(1,))
         self._cond_step = jax.jit(_traced_cond, donate_argnums=(1,))
+
+        # Horizon-fused executables (DESIGN.md §12): one lax.scan over H
+        # substeps per (lane, bucket), same donation/mesh contract as the
+        # per-step executables above, counted in the same compile_counts.
+        H = self.bc.horizon
+        eos = self.bc.eos_token
+        warm_k = coeffs.K if coeffs is not None else 0
+
+        def _traced_guided_hor(params, state, *beta):
+            K = state.tokens.shape[0]
+            counts = self.compile_counts["guided"]
+            counts[K] = counts.get(K, 0) + 1  # runs at trace time only
+            return guided_lane_horizon(
+                api, params, state, beta[0] if beta else None, horizon=H,
+                scale=config.scale, eos_token=eos, warm_k=warm_k,
+                executor=self.executor,
+            )
+
+        def _traced_linear_hor(params, state, beta):
+            K = state.tokens.shape[0]
+            counts = self.compile_counts["linear"]
+            counts[K] = counts.get(K, 0) + 1
+            return linear_lane_horizon(
+                api, params, state, beta, horizon=H, scale=config.scale,
+                eos_token=eos, executor=self.executor,
+            )
+
+        def _traced_cond_hor(params, state):
+            K = state.tokens.shape[0]
+            counts = self.compile_counts["cond"]
+            counts[K] = counts.get(K, 0) + 1
+            return cond_lane_horizon(api, params, state, horizon=H, eos_token=eos)
+
+        self._guided_hor = jax.jit(_traced_guided_hor, donate_argnums=(1,))
+        self._linear_hor = jax.jit(_traced_linear_hor, donate_argnums=(1,))
+        self._cond_hor = jax.jit(_traced_cond_hor, donate_argnums=(1,))
+
+    @property
+    def prefill_compile_counts(self) -> Dict[tuple, int]:
+        """(prompt-shape, cache_len) bucket -> trace count; every value
+        must stay exactly 1 (one compiled prefill per bucket)."""
+        return self._prefill.compile_counts
+
+    def _compiles_total(self) -> int:
+        return sum(
+            n for counts in self.compile_counts.values() for n in counts.values()
+        ) + sum(self._prefill.compile_counts.values())
 
     def _mesh_ctx(self):
         """Active-mesh context for lane-step tracing and buffer placement;
@@ -292,6 +374,10 @@ class StepBatcher:
             nfes=z(capacity, dt=jnp.float32),
             active=z(capacity, dt=bool),
             gamma_bar=jnp.ones((capacity,), jnp.float32),
+            # on-device lifecycle for the horizon scans (frozen rows are
+            # inert padding until an admission overwrites them)
+            remaining=z(capacity),
+            frozen=jnp.ones((capacity,), bool),
         )
         if kind == "linear":
             state = LinearLaneState(
@@ -309,6 +395,8 @@ class StepBatcher:
                 ),
                 hist_c=self._empty_hist(capacity) if hist else None,
                 hist_u=self._empty_hist(capacity) if hist else None,
+                warm=z(capacity),
+                linear_opt=z(capacity, dt=bool),
                 **common,
             )
         # under a mesh, fresh slot rows (KV + history) are born sharded —
@@ -380,7 +468,10 @@ class StepBatcher:
     def _admit_pending(self):
         admitted = []
         for p in self._pending:
-            if p.arrival_step > self._step_idx or self.total_active >= self.bc.max_slots:
+            if (
+                p.arrival_step > self._step_idx
+                or self.total_active >= self.bc.max_slots
+            ):
                 continue
             req = p.request
             assert len(req.prompt) + req.max_new_tokens + 1 <= self.cache_len, (
@@ -398,18 +489,13 @@ class StepBatcher:
         previous tenant).  Prefill runs before the slot is taken so the
         first admission can size the history buffers from the logits."""
         toks_c, S = pad_prompts([req], use_negative=False)
-        logits_c, ext_c = self.api.forward(
-            self.params, {"tokens": toks_c}, mode="prefill", cache_len=self.cache_len
-        )
+        logits_c, ext_c = self._prefill(self.params, toks_c, self.cache_len)
         if self._vocab is None:
             self._vocab = int(logits_c.shape[-1])
         ext_u = None
         if req.guided:
             toks_u, _ = pad_prompts([req], use_negative=True)
-            _, ext_u = self.api.forward(
-                self.params, {"tokens": toks_u}, mode="prefill",
-                cache_len=self.cache_len,
-            )
+            _, ext_u = self._prefill(self.params, toks_u, self.cache_len)
         first = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
         lane = self.guided if req.guided else self.cond
         slot = self._take_slot(lane)
@@ -421,6 +507,14 @@ class StepBatcher:
         if ext_u is not None:
             caches_u = _set_row(st.caches_u, slot, ext_u["caches"])
         gb = self.config.gamma_bar if req.gamma_bar is None else req.gamma_bar
+        budget = req.max_new_tokens - 1  # decode tokens after the prefill one
+        # admission targets the guided or cond lane, both LaneState
+        extra = dict(
+            warm=st.warm.at[slot].set(0),
+            linear_opt=st.linear_opt.at[slot].set(
+                bool(req.linear) and self.coeffs is not None
+            ),
+        )
         lane.state = st._replace(
             tokens=st.tokens.at[slot].set(first[0]),
             position=st.position.at[slot].set(S),
@@ -436,6 +530,9 @@ class StepBatcher:
             hist_u=(
                 st.hist_u.at[slot].set(0.0) if st.hist_u is not None else None
             ),
+            remaining=st.remaining.at[slot].set(budget),
+            frozen=st.frozen.at[slot].set(budget <= 0),
+            **extra,
         )
         lane.rids[slot] = rid
         self._gen[rid] = [int(np.asarray(first)[0, 0])]
@@ -449,7 +546,7 @@ class StepBatcher:
 
     # -- lifecycle -----------------------------------------------------------
 
-    def _maybe_complete(self, rid, lane, slot, nfes) -> bool:
+    def _maybe_complete(self, rid, lane, slot, nfes, step=None) -> bool:
         gen = self._gen[rid]
         req = self._reqs[rid]
         eos = self.bc.eos_token
@@ -465,10 +562,22 @@ class StepBatcher:
             "guided_steps": int(round(nfes - (len(gen) - 1))) if req.guided else 0,
         }
         self.telemetry.on_complete(
-            rid, self._step_idx, nfes, len(gen),
+            rid, self._step_idx if step is None else step, nfes, len(gen),
             reason="eos" if done_eos and not done_budget else "budget",
         )
         return True
+
+    def _complete_now(self, rid, nfes, step) -> bool:
+        """Horizon-mode completion: free the rid's CURRENT slot.  Under the
+        async pipeline a request can cross (and be boundary-migrated) one
+        horizon before the host reads the substep where it completed, so
+        the slot recorded in the launch snapshot may no longer be its home."""
+        for lane in (self.guided, self.linear, self.cond):
+            if rid in lane.rids:
+                return self._maybe_complete(
+                    rid, lane, lane.rids.index(rid), nfes, step=step
+                )
+        return False
 
     def _enter_lane(self, rid: int, lane_name: str):
         prev = self.lane_history[rid][-1]
@@ -498,6 +607,12 @@ class StepBatcher:
             nfes=cs.nfes.at[c_slot].set(ss.nfes[s_slot]),
             active=cs.active.at[c_slot].set(True),
             gamma_bar=cs.gamma_bar.at[c_slot].set(ss.gamma_bar[s_slot]),
+            # horizon lifecycle rides along: under the async pipeline a
+            # request can complete (freeze) on-device in the very horizon
+            # whose output this copy reads, and the frozen/remaining pair
+            # is what keeps its new row inert until the host catches up
+            remaining=cs.remaining.at[c_slot].set(ss.remaining[s_slot]),
+            frozen=cs.frozen.at[c_slot].set(ss.frozen[s_slot]),
         )
         src.state = ss._replace(active=ss.active.at[s_slot].set(False))
         src.rids[s_slot] = None
@@ -528,12 +643,29 @@ class StepBatcher:
             gamma_bar=ls.gamma_bar.at[l_slot].set(gs.gamma_bar[g_slot]),
             hist_c=ls.hist_c.at[l_slot].set(gs.hist_c[g_slot]),
             hist_u=ls.hist_u.at[l_slot].set(gs.hist_u[g_slot]),
+            remaining=ls.remaining.at[l_slot].set(gs.remaining[g_slot]),
+            frozen=ls.frozen.at[l_slot].set(gs.frozen[g_slot]),
         )
         self.guided.state = gs._replace(active=gs.active.at[g_slot].set(False))
         self.guided.rids[g_slot] = None
         self.linear.rids[l_slot] = rid
         self._enter_lane(rid, "linear")
         self.telemetry.on_linear(rid, self._step_idx)
+
+    def _migrate_eligible(self, rid: int, src: _Lane, slot: int):
+        """The ladder's migration policy for one live slot, shared by the
+        per-step postprocess and the horizon boundary pass: crossed
+        requests move to the conditional lane from either source; warmed
+        ``Request.linear`` requests move guided -> linear."""
+        if self._host_crossed[rid]:
+            self._migrate_to_cond(rid, src, slot)
+        elif (
+            src is self.guided
+            and self._reqs[rid].linear
+            and self.coeffs is not None
+            and self._guided_steps_host[rid] >= self.coeffs.K
+        ):
+            self._migrate_to_linear(rid, slot)
 
     # -- the decode step -----------------------------------------------------
 
@@ -544,6 +676,7 @@ class StepBatcher:
             return False
         self._ensure_cache_len()
         t0 = self.clock()
+        compiles0 = self._compiles_total()
         self._admit_pending()
 
         # host-mirror of the device ledger rule, *before* the step runs:
@@ -571,20 +704,24 @@ class StepBatcher:
         # bucket): the lane-state constraints and the model's logical-axis
         # annotations resolve against it and are baked into the executable
         ran = False
+        dispatches = 0
         with self._mesh_ctx():
             if g_active:
                 _, self.guided.state, _ = self._guided_step(
                     self.params, self.guided.state
                 )
                 ran = True
+                dispatches += 1
             if l_active:
                 _, self.linear.state, _ = self._linear_step(
                     self.params, self.linear.state, self._beta
                 )
                 ran = True
+                dispatches += 1
             if c_active:
                 _, self.cond.state = self._cond_step(self.params, self.cond.state)
                 ran = True
+                dispatches += 1
 
         if ran:
             fetched = jax.device_get(
@@ -621,6 +758,8 @@ class StepBatcher:
                 cond_capacity=self.cond.capacity,
                 dt_s=dt,
                 nfes_expected=expected,
+                dispatches=dispatches,
+                warmup=self._compiles_total() > compiles0,
             )
         self._step_idx += 1
         return True
@@ -652,8 +791,7 @@ class StepBatcher:
                     self.telemetry.on_cross(rid, self._step_idx)
                 if self._maybe_complete(rid, self.linear, slot, float(nfes[slot])):
                     continue
-                if self._host_crossed[rid]:
-                    self._migrate_to_cond(rid, self.linear, slot)
+                self._migrate_eligible(rid, self.linear, slot)
         if fetched["g"] is not None:
             toks, crossed, nfes = fetched["g"]
             for slot, rid in enumerate(g_rids):
@@ -666,16 +804,188 @@ class StepBatcher:
                     self.telemetry.on_cross(rid, self._step_idx)
                 if self._maybe_complete(rid, self.guided, slot, float(nfes[slot])):
                     continue
-                if self._host_crossed[rid]:
-                    self._migrate_to_cond(rid, self.guided, slot)
-                elif (
-                    self._reqs[rid].linear
-                    and self._guided_steps_host[rid] >= self.coeffs.K
-                ):
-                    self._migrate_to_linear(rid, slot)
+                self._migrate_eligible(rid, self.guided, slot)
+
+    # -- horizon-fused decode (DESIGN.md §12) --------------------------------
+
+    def _dispatch_horizon(self) -> dict:
+        """Launch every non-empty lane's H-substep scan and start the async
+        D2H copy of its (H, slots) trace; the host does NOT block.  Returns
+        the launch record the matching ``_postprocess_horizon`` consumes:
+        slot maps and occupancy are snapshotted here because under the
+        async pipeline the previous horizon's postprocess (which mutates
+        them) runs after this dispatch."""
+        compiles0 = self._compiles_total()
+        rec = {
+            "step0": self._step_idx,
+            "t0": self.clock(),
+            "g_rids": list(self.guided.rids),
+            "l_rids": list(self.linear.rids),
+            "c_rids": list(self.cond.rids),
+            "g_active": self.guided.active_count,
+            "g_uncrossed": sum(
+                1
+                for r in self.guided.rids
+                if r is not None and not self._host_crossed[r]
+            ),
+            "l_active": self.linear.active_count,
+            "c_active": self.cond.active_count,
+            "g_capacity": self.guided.capacity,
+            "l_capacity": self.linear.capacity,
+            "c_capacity": self.cond.capacity,
+            "traces": {"g": None, "l": None, "c": None},
+            "dispatches": 0,
+        }
+        with self._mesh_ctx():
+            if rec["g_active"]:
+                beta = (self._beta,) if self._beta is not None else ()
+                self.guided.state, tr = self._guided_hor(
+                    self.params, self.guided.state, *beta
+                )
+                rec["traces"]["g"] = tr
+                rec["dispatches"] += 1
+            if rec["l_active"]:
+                self.linear.state, tr = self._linear_hor(
+                    self.params, self.linear.state, self._beta
+                )
+                rec["traces"]["l"] = tr
+                rec["dispatches"] += 1
+            if rec["c_active"]:
+                self.cond.state, tr = self._cond_hor(self.params, self.cond.state)
+                rec["traces"]["c"] = tr
+                rec["dispatches"] += 1
+        # double buffering: enqueue the D2H copy now, so it lands while the
+        # host is postprocessing the previous horizon
+        for leaf in jax.tree.leaves(rec["traces"]):
+            leaf.copy_to_host_async()
+        rec["warmup"] = self._compiles_total() > compiles0
+        self._step_idx += self.bc.horizon
+        return rec
+
+    def _postprocess_horizon(self, rec: dict):
+        """Consume one horizon's traces substep by substep, mirroring the
+        per-step lifecycle exactly (tokens, crossings, completions and the
+        expected-NFE ledger all land on their true substep index); lane
+        migrations and admissions quantize to the horizon boundary."""
+        H = self.bc.horizon
+        fetched = jax.device_get(rec["traces"])
+        K = self.coeffs.K if self.coeffs is not None else None
+        step0 = rec["step0"]
+        expected = 0.0
+        for h in range(H):
+            step = step0 + h
+            tr = fetched["c"]
+            if tr is not None:
+                for slot, rid in enumerate(rec["c_rids"]):
+                    if rid is None or not tr.emitted[h, slot]:
+                        continue
+                    expected += 1.0
+                    self._gen[rid].append(int(tr.tokens[h, slot]))
+                    self._complete_now(rid, float(tr.nfes[h, slot]), step)
+            tr = fetched["l"]
+            if tr is not None:
+                for slot, rid in enumerate(rec["l_rids"]):
+                    if rid is None or not tr.emitted[h, slot]:
+                        continue
+                    expected += 1.0
+                    self._gen[rid].append(int(tr.tokens[h, slot]))
+                    if bool(tr.crossed[h, slot]) and not self._host_crossed[rid]:
+                        self._host_crossed[rid] = True
+                        self.telemetry.on_cross(rid, step)
+                    self._complete_now(rid, float(tr.nfes[h, slot]), step)
+            tr = fetched["g"]
+            if tr is not None:
+                for slot, rid in enumerate(rec["g_rids"]):
+                    if rid is None or not tr.emitted[h, slot]:
+                        continue
+                    # host mirror of the device ledger rule BEFORE this
+                    # substep's crossing/warmup updates: crossed or
+                    # in-place-linear slots pay 1, warming guided slots 2
+                    linear_now = (
+                        K is not None
+                        and self._reqs[rid].linear
+                        and self._guided_steps_host[rid] >= K
+                    )
+                    expected += (
+                        1.0 if (self._host_crossed[rid] or linear_now) else 2.0
+                    )
+                    self._gen[rid].append(int(tr.tokens[h, slot]))
+                    self._guided_steps_host[rid] += 1
+                    if bool(tr.crossed[h, slot]) and not self._host_crossed[rid]:
+                        self._host_crossed[rid] = True
+                        self.telemetry.on_cross(rid, step)
+                    self._complete_now(rid, float(tr.nfes[h, slot]), step)
+        # boundary migrations, walking the CURRENT slot maps (a request the
+        # previous boundary already migrated must not migrate twice); a
+        # saturated destination defers to the next boundary, which stays
+        # token- and ledger-exact because crossed slots take the
+        # conditional logits at 1 NFE and warmed linear_opt slots run the
+        # in-place extrapolation inside the guided scan
+        for slot, rid in enumerate(list(self.linear.rids)):
+            if rid is not None:
+                self._migrate_eligible(rid, self.linear, slot)
+        for slot, rid in enumerate(list(self.guided.rids)):
+            if rid is not None:
+                self._migrate_eligible(rid, self.guided, slot)
+        # Round latency: under the async pipeline this postprocess runs one
+        # iteration after the dispatch it belongs to, so clocking from
+        # rec["t0"] alone would overlap consecutive rounds and double-count
+        # wall time; clip to the previous round's end so per-round
+        # latencies tile the wall clock (each dt is the pipeline period).
+        now = self.clock()
+        t0 = rec["t0"] if self._round_end is None else max(rec["t0"], self._round_end)
+        self._round_end = now
+        self.telemetry.on_step(
+            step0,
+            guided_active=rec["g_active"],
+            guided_uncrossed=rec["g_uncrossed"],
+            guided_capacity=rec["g_capacity"],
+            linear_active=rec["l_active"],
+            linear_capacity=rec["l_capacity"],
+            cond_active=rec["c_active"],
+            cond_capacity=rec["c_capacity"],
+            dt_s=now - t0,
+            nfes_expected=expected,
+            steps=H,
+            dispatches=rec["dispatches"],
+            warmup=rec["warmup"],
+        )
+
+    def _run_horizons(self, max_horizons: int) -> Dict[int, dict]:
+        """The horizon-fused drive loop.  Synchronous mode fetches and
+        postprocesses each horizon before dispatching the next; async mode
+        (the default for horizon > 1) keeps one horizon in flight — while
+        the device computes horizon t, the host postprocesses t-1's
+        already-copied traces, and boundary mutations (completions,
+        migrations, admissions) enqueue onto horizon t's output buffers so
+        they take effect at t+1 without ever blocking dispatch."""
+        inflight = None
+        it = 0
+        while it < max_horizons:
+            it += 1
+            if not self._pending and self.total_active == 0 and inflight is None:
+                break
+            self._ensure_cache_len()
+            self._admit_pending()
+            rec = None
+            if self.total_active:
+                rec = self._dispatch_horizon()
+            elif inflight is None:
+                self._step_idx += self.bc.horizon  # idle tick toward arrivals
+            if self.bc.async_fetch:
+                if inflight is not None:
+                    self._postprocess_horizon(inflight)
+                inflight = rec
+            elif rec is not None:
+                self._postprocess_horizon(rec)
+        if inflight is not None:
+            self._postprocess_horizon(inflight)
+        return self.completed
 
     def run(self, max_steps: int = 100_000) -> Dict[int, dict]:
         """Drive steps until every submitted request has completed."""
+        if self.bc.horizon > 1:
+            return self._run_horizons(max_steps)
         steps = 0
         while self.step() and steps < max_steps:
             steps += 1

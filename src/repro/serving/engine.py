@@ -106,6 +106,46 @@ def pad_prompts(
     return jnp.asarray(toks), S
 
 
+class PrefillCache:
+    """Compiled prefill, one executable per prompt-length bucket.
+
+    The step batcher prefills at admission time — a per-request hot path:
+    eager ``api.forward`` re-traverses the whole model op-by-op for every
+    admission.  This cache jits the prefill ONCE per (batch, prompt-length,
+    cache_len) bucket and replays the executable for every later admission
+    with the same shape.  Buckets are *exact* prompt lengths (no padding to
+    a coarser grid), so the compiled prefill is numerically identical to
+    the eager call it replaces — tokens and golden fixtures are unchanged.
+
+    Prefill stays meshless (DESIGN.md §8): admissions run outside the lane
+    mesh context, where B=1 rows rarely divide a device axis.
+
+    ``compile_counts`` maps bucket -> trace count; the one-compile-per-
+    bucket invariant (every value stays exactly 1) is asserted in
+    tests/test_batcher.py.
+    """
+
+    def __init__(self, api):
+        self.api = api
+        self._fns: dict = {}
+        self.compile_counts: dict = {}
+
+    def __call__(self, params, tokens, cache_len):
+        key = (tuple(tokens.shape), cache_len)
+        fn = self._fns.get(key)
+        if fn is None:
+
+            def traced(p, t, _key=key, _cl=cache_len):
+                # runs at trace time only (once per bucket)
+                self.compile_counts[_key] = self.compile_counts.get(_key, 0) + 1
+                return self.api.forward(
+                    p, {"tokens": t}, mode="prefill", cache_len=_cl
+                )
+
+            fn = self._fns[key] = jax.jit(traced)
+        return fn(params, tokens)
+
+
 class GuidedEngine:
     """Synchronous batched engine (one batch of requests per call).
 

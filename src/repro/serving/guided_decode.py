@@ -142,6 +142,15 @@ class LaneState(NamedTuple):
     gamma_bar: jnp.ndarray  # (K,) float32
     hist_c: object = None  # (B, K, 1, V) f32 or None
     hist_u: object = None
+    # On-device lifecycle for horizon-fused decode (DESIGN.md §12).  The
+    # single-step path never reads these — the host owns lifecycle there —
+    # but the horizon scans freeze a slot mid-horizon the moment it spends
+    # its budget or emits EOS, so a finished tenant stops mutating its
+    # caches/tokens/ledger without a host round-trip.
+    remaining: object = None  # (K,) int32 decode tokens left in the budget
+    frozen: object = None  # (K,) bool, latched on budget/EOS
+    warm: object = None  # (K,) int32 guided steps taken (LinearAG warmup)
+    linear_opt: object = None  # (K,) bool, Request.linear opted in
 
 
 class LinearLaneState(NamedTuple):
@@ -161,6 +170,9 @@ class LinearLaneState(NamedTuple):
     gamma_bar: jnp.ndarray  # (B,) float32
     hist_c: jnp.ndarray  # (B, K, 1, V) f32, newest first
     hist_u: jnp.ndarray  # (B, K, 1, V) f32, newest first
+    # on-device lifecycle for horizon-fused decode (see LaneState)
+    remaining: object = None  # (B,) int32
+    frozen: object = None  # (B,) bool
 
 
 def push_history(hist, x):
@@ -259,6 +271,235 @@ def _select(logits, greedy, key):
     if greedy:
         return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
     return jax.random.categorical(key, logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# horizon-fused lane scans (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# One executable runs H consecutive decode substeps of a lane via lax.scan,
+# so dispatch count scales with tokens/H instead of tokens.  Per-step
+# lifecycle that the host used to arbitrate every step moves on-device:
+#
+# * freeze masks — a slot that spends its budget (``remaining`` hits 0) or
+#   emits EOS mid-horizon latches ``frozen`` and stops mutating its tokens,
+#   position, caches, history and NFE ledger for the rest of the scan;
+# * AG crossing latches — already device-resident (``crossed``); a slot
+#   that crosses mid-horizon keeps taking the conditional logits at 1 NFE,
+#   so deferring its migration to the horizon boundary changes neither
+#   tokens nor ledgers (the same argument that makes saturation-deferred
+#   migration safe in the per-step path);
+# * guided-warmup counters — ``warm`` counts emitted guided substeps; once
+#   a ``linear_opt`` slot's window is full (warm >= K) the guided scan
+#   switches that slot's unconditional branch to the 0-NFE LinearAG
+#   extrapolation *in place* (same numerics and +1 ledger as the linear
+#   lane), so boundary-deferred guided->linear migration is token- and
+#   NFE-identical to the per-step ladder.
+#
+# Each scan emits an (H, slots) HorizonTrace the host postprocesses after
+# an async double-buffered fetch; ``emitted`` marks which substeps a slot
+# actually decoded (False once frozen / while inactive).
+
+
+class HorizonTrace(NamedTuple):
+    """(H, slots) per-substep outputs of one horizon-fused lane scan."""
+
+    tokens: jnp.ndarray  # (H, B) int32 token emitted at each substep
+    crossed: jnp.ndarray  # (H, B) bool post-update AG latch
+    nfes: jnp.ndarray  # (H, B) float32 post-update ledger
+    emitted: jnp.ndarray  # (H, B) bool — slot decoded this substep
+
+
+def _freeze_rows(live, new, old):
+    """Per-slot select with the slot axis at 0 (plain lane-state leaves)."""
+    return jnp.where(live.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+
+
+def _freeze_caches(live, new, old):
+    """Per-slot select for cache trees (slot axis at 1; axis 0 is the
+    scan-period stack)."""
+    if new is None:
+        return None
+
+    def sel(n, o):
+        return jnp.where(live.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+def _advance(state, live, nxt, caches_c, caches_u, crossed, nfes, eos_token):
+    """Shared freeze epilogue: fold one substep's results into the lane
+    state, latching ``frozen`` for slots that just spent their budget or
+    emitted EOS.  Returns (new_state_kwargs, tokens)."""
+    tokens = _freeze_rows(live, nxt, state.tokens)
+    remaining = state.remaining - live.astype(state.remaining.dtype)
+    done = remaining <= 0
+    if eos_token is not None:
+        done = done | (tokens[:, 0] == eos_token)
+    kw = dict(
+        tokens=tokens,
+        position=jnp.where(live, state.position + 1, state.position),
+        caches_c=_freeze_caches(live, caches_c, state.caches_c),
+        crossed=crossed,
+        nfes=nfes,
+        remaining=remaining,
+        frozen=state.frozen | (live & done),
+    )
+    if caches_u is not None:
+        kw["caches_u"] = _freeze_caches(live, caches_u, state.caches_u)
+    return kw, tokens
+
+
+def _guided_horizon_substep(
+    api, params, state: LaneState, beta, *, scale, eos_token, warm_k, executor
+):
+    """One guided-lane substep under the horizon freeze mask.
+
+    Identical numerics to ``guided_lane_step`` for live, un-warm slots;
+    ``linear_opt`` slots whose window is full take the LinearAG
+    extrapolated unconditional branch instead (1 NFE), exactly what the
+    linear lane would have computed had the host migrated them already.
+    """
+    live = state.active & ~state.frozen
+    logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
+        api, params, state.tokens, state.position, state.caches_c, state.caches_u
+    )
+    hist_c, hist_u = state.hist_c, state.hist_u
+    if hist_c is not None and beta is not None:
+        from repro.core.linear_ag import apply_window
+
+        u_hat = apply_window(beta, logits_c, hist_c, hist_u)
+        linear_now = state.linear_opt & (state.warm >= warm_k)
+        lane_mask = linear_now.reshape((-1,) + (1,) * (logits_u.ndim - 1))
+        eps_u_eff = jnp.where(lane_mask, u_hat, logits_u)
+    else:
+        linear_now = jnp.zeros_like(state.active)
+        eps_u_eff = logits_u
+    res = executor.frozen_lane_update(
+        eps_u_eff, logits_c, scale, state.crossed, state.nfes,
+        state.gamma_bar, live, linear_now,
+    )
+    nxt = _select(res.eps, True, None)
+    if hist_c is not None:
+        # the window sees what the per-step ladder's would have: realized
+        # cond scores, and (for in-place linear slots) its own estimates
+        hist_c = _freeze_rows(live, push_history(hist_c, logits_c), hist_c)
+        hist_u = _freeze_rows(live, push_history(hist_u, eps_u_eff), hist_u)
+    kw, _ = _advance(
+        state, live, nxt, new_c, new_u, res.crossed, res.nfes, eos_token
+    )
+    new_state = constrain_lane_state(state._replace(
+        warm=state.warm + live.astype(state.warm.dtype),
+        hist_c=hist_c, hist_u=hist_u, **kw,
+    ))
+    trace = HorizonTrace(
+        tokens=kw["tokens"][:, 0], crossed=res.crossed, nfes=res.nfes,
+        emitted=live,
+    )
+    return new_state, trace
+
+
+def _linear_horizon_substep(
+    api, params, state: LinearLaneState, beta, *, scale, eos_token, executor
+):
+    """One LinearAG-lane substep under the horizon freeze mask (the
+    ``linear_lane_step`` numerics, live-masked)."""
+    live = state.active & ~state.frozen
+    from repro.core.linear_ag import apply_window
+
+    logits_c, new_c = api.decode_step(
+        params, state.tokens, state.caches_c, state.position
+    )
+    u_hat = apply_window(beta, logits_c, state.hist_c, state.hist_u)
+    res = executor.linear_lane_update(
+        u_hat, logits_c, scale, state.crossed, state.nfes,
+        state.gamma_bar, live,
+    )
+    nxt = _select(res.eps, True, None)
+    hist_c = _freeze_rows(live, push_history(state.hist_c, logits_c), state.hist_c)
+    hist_u = _freeze_rows(live, push_history(state.hist_u, u_hat), state.hist_u)
+    kw, _ = _advance(
+        state, live, nxt, new_c, None, res.crossed, res.nfes, eos_token
+    )
+    new_state = constrain_lane_state(state._replace(
+        hist_c=hist_c, hist_u=hist_u, **kw
+    ))
+    trace = HorizonTrace(
+        tokens=kw["tokens"][:, 0], crossed=res.crossed, nfes=res.nfes,
+        emitted=live,
+    )
+    return new_state, trace
+
+
+def _cond_horizon_substep(api, params, state: LaneState, *, eos_token):
+    """One conditional-lane substep under the horizon freeze mask."""
+    live = state.active & ~state.frozen
+    logits, new_c = api.decode_step(
+        params, state.tokens, state.caches_c, state.position
+    )
+    nxt = _select(logits, True, None)
+    nfes = GuidanceExecutor.lane_ledger_cond(state.nfes, live)
+    kw, _ = _advance(
+        state, live, nxt, new_c, None, state.crossed, nfes, eos_token
+    )
+    new_state = constrain_lane_state(state._replace(**kw))
+    trace = HorizonTrace(
+        tokens=kw["tokens"][:, 0], crossed=state.crossed, nfes=nfes,
+        emitted=live,
+    )
+    return new_state, trace
+
+
+def guided_lane_horizon(
+    api, params, state: LaneState, beta=None, *, horizon: int, scale: float,
+    eos_token=None, warm_k: int = 0,
+    executor: Optional[GuidanceExecutor] = None,
+):
+    """H guided-lane substeps in ONE executable (lax.scan).  Returns
+    (final_state, HorizonTrace with (H, slots) leaves).  ``beta`` enables
+    the in-place LinearAG switch for warmed ``linear_opt`` slots."""
+    executor = get_executor(executor)
+    state = constrain_lane_state(state)
+
+    def body(st, _):
+        return _guided_horizon_substep(
+            api, params, st, beta, scale=scale, eos_token=eos_token,
+            warm_k=warm_k, executor=executor,
+        )
+
+    final, trace = jax.lax.scan(body, state, None, length=horizon)
+    return final, trace
+
+
+def linear_lane_horizon(
+    api, params, state: LinearLaneState, beta, *, horizon: int, scale: float,
+    eos_token=None, executor: Optional[GuidanceExecutor] = None,
+):
+    """H LinearAG-lane substeps in one executable."""
+    executor = get_executor(executor)
+    state = constrain_lane_state(state)
+
+    def body(st, _):
+        return _linear_horizon_substep(
+            api, params, st, beta, scale=scale, eos_token=eos_token,
+            executor=executor,
+        )
+
+    final, trace = jax.lax.scan(body, state, None, length=horizon)
+    return final, trace
+
+
+def cond_lane_horizon(
+    api, params, state: LaneState, *, horizon: int, eos_token=None
+):
+    """H conditional-lane substeps in one executable."""
+    state = constrain_lane_state(state)
+
+    def body(st, _):
+        return _cond_horizon_substep(api, params, st, eos_token=eos_token)
+
+    final, trace = jax.lax.scan(body, state, None, length=horizon)
+    return final, trace
 
 
 # ---------------------------------------------------------------------------

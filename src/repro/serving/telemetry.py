@@ -18,7 +18,16 @@ turns that stream into the serving-side Table-1 accounting:
 * per-lane slot-step totals (``lane_steps``) and the count of 0-NFE
   extrapolated unconditional evaluations (``extrapolated_uncond`` — each
   one is an NFE the linear lane saved while keeping guidance applied);
-* tokens/sec and step-latency percentiles (p50/p90/p99) over the run.
+* tokens/sec and step-latency percentiles (p50/p90/p99) over the run's
+  *steady-state* rounds: rounds that included a first-call-per-bucket
+  compile (lane executables or admission prefill) are tagged ``warmup``
+  and totalled separately (``compile_s``, ``warmup_steps``) so the
+  percentiles describe serving latency, not trace time;
+* dispatch economics for horizon-fused decode (DESIGN.md §12): each
+  round records how many decode substeps it covered (``steps``) and how
+  many executables it launched (``dispatches``); totals report
+  ``device_dispatches``, ``decode_substeps`` and the headline
+  ``dispatches_per_token`` that the horizon scan drives toward ~3/H.
 
 ``to_json`` writes the report for ``benchmarks/bench_serving.py``; the
 clock is injectable so tests can assert on timing fields deterministically.
@@ -69,8 +78,15 @@ class ServingTelemetry:
         self.clock = clock
         self.requests: Dict[int, RequestRecord] = {}
         self.step_latency_s: List[float] = []
+        # warmup[i] marks step i as having included executable compilation
+        # (first call per lane bucket / prefill bucket): latency
+        # percentiles are reported over steady-state steps only, with the
+        # compile time totalled separately (``compile_s``).
+        self.step_warmup: List[bool] = []
         self.step_occupancy: List[dict] = []
         self.nfes_expected: float = 0.0
+        self.device_dispatches: int = 0  # decode executable launches
+        self.decode_substeps: int = 0  # decode steps covered (sum of H)
         self._t_start: Optional[float] = None
         self._t_end: Optional[float] = None
 
@@ -110,20 +126,33 @@ class ServingTelemetry:
     def on_step(
         self, step, *, guided_active, guided_uncrossed, guided_capacity,
         cond_active, cond_capacity, dt_s, nfes_expected,
-        linear_active=0, linear_capacity=0,
+        linear_active=0, linear_capacity=0, steps=1, dispatches=0,
+        warmup=False,
     ):
-        """One decode step.  ``nfes_expected`` is the host-mirror increment:
-        2*guided_uncrossed + 1*(guided_active - guided_uncrossed)
+        """One batcher round.  ``nfes_expected`` is the host-mirror
+        increment: 2*guided_uncrossed + 1*(guided_active - guided_uncrossed)
         + 1*linear_active + 1*cond_active (the linear lane's extrapolated
-        unconditional branch costs 0 NFEs)."""
+        unconditional branch costs 0 NFEs).
+
+        Horizon-fused rounds (DESIGN.md §12) cover ``steps`` decode
+        substeps with ``dispatches`` executable launches — the
+        dispatches-per-token economics the horizon scan exists to fix.
+        ``warmup`` tags rounds that included a first-call-per-bucket
+        compile, which are excluded from the steady-state latency
+        percentiles and totalled under ``compile_s`` instead."""
         if self._t_start is None:
             self._t_start = self.clock() - dt_s
         self._t_end = self.clock()
         self.step_latency_s.append(float(dt_s))
+        self.step_warmup.append(bool(warmup))
         self.nfes_expected += float(nfes_expected)
+        self.device_dispatches += int(dispatches)
+        self.decode_substeps += int(steps)
         self.step_occupancy.append(
             {
                 "step": int(step),
+                "steps": int(steps),
+                "warmup": bool(warmup),
                 "guided_active": int(guided_active),
                 "guided_capacity": int(guided_capacity),
                 "linear_active": int(linear_active),
@@ -139,7 +168,13 @@ class ServingTelemetry:
         recs = list(self.requests.values())
         done = [r for r in recs if r.complete_step is not None]
         guided_done = [r for r in done if r.guided]
-        lat = np.asarray(self.step_latency_s, np.float64)
+        lat_all = np.asarray(self.step_latency_s, np.float64)
+        warm = np.asarray(self.step_warmup, bool)
+        # steady-state latencies: warmup (compiling) rounds excluded so the
+        # percentiles describe serving latency, not trace-time; a run too
+        # short to have any steady-state rounds falls back to all of them
+        lat = lat_all[~warm] if (~warm).any() else lat_all
+        compile_s = float(lat_all[warm].sum()) if warm.any() else 0.0
         wall = (
             (self._t_end - self._t_start)
             if (self._t_start is not None and self._t_end is not None)
@@ -187,6 +222,13 @@ class ServingTelemetry:
                 "num_requests": len(recs),
                 "num_completed": len(done),
                 "decode_steps": len(self.step_latency_s),
+                "decode_substeps": self.decode_substeps,
+                "device_dispatches": self.device_dispatches,
+                "dispatches_per_token": (
+                    self.device_dispatches / tokens_total if tokens_total else 0.0
+                ),
+                "warmup_steps": int(warm.sum()),
+                "compile_s": compile_s,
                 "tokens_out": tokens_total,
                 "nfes_device": nfes_total,
                 "nfes_expected": self.nfes_expected,

@@ -302,6 +302,11 @@ LANE_FIELD_AXES: dict = {
     "gamma_bar": ("slots",),
     "hist_c": ("slots", None, None, "vocab"),
     "hist_u": ("slots", None, None, "vocab"),
+    # horizon-fused on-device lifecycle (DESIGN.md §12)
+    "remaining": ("slots",),
+    "frozen": ("slots",),
+    "warm": ("slots",),
+    "linear_opt": ("slots",),
 }
 
 CACHE_KEY_AXES: dict = {

@@ -18,7 +18,9 @@ class Optimizer:
     update: Callable[[Any, Any, Any], tuple]  # (params, grads, state) -> (params, state)
 
 
-def lion(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.99, wd: float = 0.0) -> Optimizer:
+def lion(
+    lr: float = 1e-4, b1: float = 0.9, b2: float = 0.99, wd: float = 0.0
+) -> Optimizer:
     def init(params):
         return {"m": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
 
@@ -34,7 +36,9 @@ def lion(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.99, wd: float = 0.0) -
             return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
 
         def upd_m(g, m):
-            return (b2 * m.astype(jnp.float32) + (1 - b2) * g.astype(jnp.float32)).astype(m.dtype)
+            return (
+                b2 * m.astype(jnp.float32) + (1 - b2) * g.astype(jnp.float32)
+            ).astype(m.dtype)
 
         new_params = jax.tree.map(upd, params, grads, m)
         new_m = jax.tree.map(upd_m, grads, m)
@@ -75,9 +79,15 @@ def adamw(
             return (p.astype(jnp.float32) - lr_t * step).astype(p.dtype), m_new, v_new
 
         out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_m = jax.tree.map(
+            lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_v = jax.tree.map(
+            lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
         return new_params, {"m": new_m, "v": new_v, "t": t}
 
     return Optimizer(init=init, update=update)
@@ -91,4 +101,7 @@ def global_norm(tree) -> jnp.ndarray:
 def clip_by_global_norm(grads, max_norm: float):
     n = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), n
+    return (
+        jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads),
+        n,
+    )

@@ -53,7 +53,9 @@ def make_dit_train_step(
     return train_step
 
 
-def make_lm_train_step(api, opt: Optimizer, *, grad_clip: float = 1.0, remat: bool = False):
+def make_lm_train_step(
+    api, opt: Optimizer, *, grad_clip: float = 1.0, remat: bool = False
+):
     cfg = api.cfg
 
     def loss_fn(params, batch):

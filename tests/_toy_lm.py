@@ -97,7 +97,7 @@ def toy_coeffs(K: int = 2):
 
 
 def run_ladder_case(reqs, arrivals, *, max_slots, gamma_bar=0.5, scale=1.5,
-                    mesh=None):
+                    mesh=None, horizon=1, async_fetch=None):
     """Run a workload through the three-lane batcher and assert the ladder
     invariants that must hold for ANY admission order / budgets / crossing
     pattern:
@@ -125,8 +125,11 @@ def run_ladder_case(reqs, arrivals, *, max_slots, gamma_bar=0.5, scale=1.5,
     coeffs = toy_coeffs()
     ec = EngineConfig(scale=scale, gamma_bar=gamma_bar, max_batch=max_slots)
     bat = StepBatcher(
-        api, params, ec, BatcherConfig(max_slots=max_slots), coeffs=coeffs,
-        mesh=mesh,
+        api, params, ec,
+        BatcherConfig(
+            max_slots=max_slots, horizon=horizon, async_fetch=async_fetch
+        ),
+        coeffs=coeffs, mesh=mesh,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, arrivals)]
     done = bat.run()

@@ -80,11 +80,13 @@ def _batcher_record(bat, done, rids):
     }
 
 
-def run_batcher_case(mesh=None):
+def run_batcher_case(mesh=None, horizon=1):
     """Two-lane churn under a fixed seed: late arrival, slot reuse, a
     never-crossing neighbour, plain traffic.  ``mesh`` runs the identical
     workload sharded (tests/test_sharded_serving.py asserts bit-equality
-    against the fixture generated without one)."""
+    against the fixture generated without one); ``horizon`` fuses H decode
+    substeps per dispatch (tokens/NFE ledgers must still match the fixture
+    bit-exactly — lifecycle steps quantize to horizon boundaries)."""
     from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
 
     cfg, api, params = golden_model()
@@ -97,7 +99,8 @@ def run_batcher_case(mesh=None):
     ]
     ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=2)
     bat = StepBatcher(
-        api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)), mesh=mesh
+        api, params, ec,
+        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon), mesh=mesh,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 0, 2, 4])]
     done = bat.run()
@@ -123,10 +126,11 @@ def fit_golden_coeffs():
     return coeffs
 
 
-def run_three_lane_case(coeffs, mesh=None):
+def run_three_lane_case(coeffs, mesh=None, horizon=1):
     """Three-lane churn: full ladder, never-crossing linear request, slot
     reuse — driven by the FIXTURE's coefficient vector.  ``mesh`` runs the
-    identical workload sharded (see ``run_batcher_case``)."""
+    identical workload sharded, ``horizon`` fuses H substeps per dispatch
+    (see ``run_batcher_case``)."""
     from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
 
     cfg, api, params = golden_model()
@@ -138,7 +142,8 @@ def run_three_lane_case(coeffs, mesh=None):
     ]
     ec = EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
     bat = StepBatcher(
-        api, params, ec, BatcherConfig(max_slots=2, buckets=(1, 2)),
+        api, params, ec,
+        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon),
         coeffs=coeffs, mesh=mesh,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]

@@ -25,7 +25,9 @@ def setup():
 
 def test_ag_never_truncating_equals_cfg(setup):
     model, solver, x_T, cond = setup
-    x_cfg, _ = sample_with_policy(model, None, solver, pol.cfg_policy(STEPS, SCALE), x_T, cond)
+    x_cfg, _ = sample_with_policy(
+        model, None, solver, pol.cfg_policy(STEPS, SCALE), x_T, cond
+    )
     x_ag, info = ag_sample(model, None, solver, STEPS, SCALE, 1.1, x_T, cond)
     np.testing.assert_allclose(x_ag, x_cfg, rtol=1e-5)
     assert np.all(np.asarray(info["nfes"]) == 2 * STEPS)

@@ -1,6 +1,11 @@
 """Roofline analysis helpers: HLO collective parsing + term math."""
 
-from repro.launch.analysis import Roofline, _shape_bytes, collective_bytes, model_flops_estimate
+from repro.launch.analysis import (
+    Roofline,
+    _shape_bytes,
+    collective_bytes,
+    model_flops_estimate,
+)
 from repro.configs import get_config, get_shape
 
 

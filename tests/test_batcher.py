@@ -118,6 +118,21 @@ def test_two_executables_per_bucket_shape(churn_run):
         assert set(counts) <= set(bat.bc.buckets)
 
 
+def test_prefill_compiled_once_per_bucket(churn_run):
+    """Admission prefill is jitted per prompt-length bucket: every bucket
+    traces exactly once, and repeated prompt lengths replay the cached
+    executable instead of re-tracing (the per-admission eager re-traversal
+    this cache replaced)."""
+    ec, reqs, rids, bat, done = churn_run
+    counts = bat.prefill_compile_counts
+    assert counts, "no prefill compiles recorded"
+    for key, n in counts.items():
+        assert n == 1, f"prefill retraced for bucket {key}: {n} traces"
+    # buckets are (prompt shape, cache_len): five admissions (nine prefill
+    # forwards incl. uncond branches) collapse onto the distinct lengths
+    assert len(counts) == len({len(r.prompt) for r in reqs})
+
+
 def test_nfe_ledger_conservation(churn_run):
     """Device per-slot ledger must equal the host-mirror expectation
     (2 per uncrossed guided slot, 1 per crossed/cond slot, 0 for inactive)

@@ -1,0 +1,248 @@
+"""Horizon-fused decode (DESIGN.md §12): multi-step lane scans with
+on-device lifecycle and the async double-buffered host sync.
+
+The contract under test: for ANY horizon H, per-request token streams and
+NFE ledgers are identical to the per-step (H=1) batcher — on-device freeze
+masks stop a finished slot mid-horizon, crossing latches and the in-place
+LinearAG switch make boundary-deferred migrations token-exact — while
+device dispatches per generated token shrink ~H-fold.  Lifecycle *steps*
+(admission, migration, streaming) legitimately quantize to horizon
+boundaries and are NOT pinned here; the H=1 path never touches the scan
+executables and stays locked by tests/test_golden.py.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
+from repro.serving.batcher import LANE_ORDER
+from tests._toy_lm import VOCAB, toy_coeffs, toy_serving
+
+
+def _churn_reqs():
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(
+            prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+            max_new_tokens=9, linear=True,
+        ),
+        Request(
+            prompt=rng.integers(1, VOCAB, size=5).astype(np.int32),
+            max_new_tokens=6,
+        ),
+        Request(
+            prompt=rng.integers(1, VOCAB, size=3).astype(np.int32),
+            max_new_tokens=11, linear=True, gamma_bar=2.0,
+        ),
+        Request(
+            prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+            max_new_tokens=5, guided=False,
+        ),
+    ]
+    return reqs, [0, 0, 2, 3]
+
+
+def _run(horizon, *, async_fetch=None, eos_token=None, gamma_bar=0.95,
+         max_slots=2, reqs_arrivals=None):
+    api, params = toy_serving()
+    reqs, arrivals = reqs_arrivals or _churn_reqs()
+    ec = EngineConfig(scale=1.5, gamma_bar=gamma_bar, max_batch=max_slots)
+    bat = StepBatcher(
+        api, params, ec,
+        BatcherConfig(
+            max_slots=max_slots, horizon=horizon, async_fetch=async_fetch,
+            eos_token=eos_token,
+        ),
+        coeffs=toy_coeffs(),
+    )
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, arrivals)]
+    done = bat.run()
+    return bat, rids, done
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """The per-step (H=1) reference run for the shared churn workload."""
+    return _run(1)
+
+
+@pytest.mark.parametrize("horizon", [2, 4, 8])
+def test_horizon_token_and_ledger_parity(baseline, horizon):
+    """Acceptance: per-request tokens AND NFE ledgers identical to H=1 for
+    every horizon, across the full ladder (linear opt-in, never-crossing,
+    plain traffic, staggered arrivals)."""
+    _, rids, d1 = baseline
+    bat, rids_h, dh = _run(horizon)
+    assert rids_h == rids and set(dh) == set(d1)
+    for rid in rids:
+        np.testing.assert_array_equal(dh[rid]["tokens"], d1[rid]["tokens"])
+        assert dh[rid]["nfes"] == d1[rid]["nfes"]
+
+
+@pytest.mark.parametrize("horizon", [2, 4, 8])
+def test_horizon_conservation_and_ladder(horizon):
+    """Ledger conservation (device == host mirror == per-request sum) and
+    the monotone lane ladder hold at every horizon."""
+    bat, rids, done = _run(horizon)
+    t = bat.report()["totals"]
+    assert t["nfes_device"] == pytest.approx(t["nfes_expected"])
+    assert t["nfes_device"] == pytest.approx(sum(d["nfes"] for d in done.values()))
+    for rid in rids:
+        ranks = [LANE_ORDER.index(l) for l in bat.lane_history[rid]]
+        assert ranks == sorted(set(ranks)), bat.lane_history[rid]
+
+
+def test_async_and_sync_fetch_identical(baseline):
+    """The double-buffered pipeline (postprocess horizon t-1 while the
+    device computes horizon t) must not change tokens or ledgers vs the
+    blocking per-horizon fetch."""
+    _, rids, d1 = baseline
+    _, _, d_async = _run(4, async_fetch=True)
+    _, _, d_sync = _run(4, async_fetch=False)
+    for rid in rids:
+        np.testing.assert_array_equal(d_async[rid]["tokens"], d_sync[rid]["tokens"])
+        np.testing.assert_array_equal(d_async[rid]["tokens"], d1[rid]["tokens"])
+        assert d_async[rid]["nfes"] == d_sync[rid]["nfes"] == d1[rid]["nfes"]
+
+
+def test_one_executable_per_lane_bucket_horizon():
+    """One horizon executable per (lane, bucket): admissions, growth, both
+    migration kinds, mid-horizon completions and the boundary-quantized
+    churn trigger no retraces."""
+    bat, _, _ = _run(4)
+    for lane in ("guided", "linear", "cond"):
+        assert bat.compile_counts[lane], f"{lane} lane never ran"
+        for cap, n in bat.compile_counts[lane].items():
+            assert n == 1, f"{lane} retraced at capacity {cap}: {n}"
+
+
+def test_dispatch_rate_decoupled_from_token_rate():
+    """Acceptance: H=8 cuts device dispatches per generated token >= 4x vs
+    the per-step batcher on the same workload (the tentpole's perf claim,
+    measured by the telemetry dispatch counters).  Budgets span several
+    horizons so boundary padding cannot dominate the ratio."""
+    rng = np.random.default_rng(19)
+    reqs = [
+        Request(
+            prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+            max_new_tokens=m, linear=(i % 2 == 0),
+        )
+        for i, m in enumerate((33, 25, 29, 21))
+    ]
+    kw = dict(reqs_arrivals=(reqs, [0, 0, 2, 3]), gamma_bar=0.95)
+    b1, rids, d1 = _run(1, **kw)
+    b8, _, d8 = _run(8, **kw)
+    for rid in rids:
+        np.testing.assert_array_equal(d8[rid]["tokens"], d1[rid]["tokens"])
+    t1, t8 = b1.report()["totals"], b8.report()["totals"]
+    assert t1["tokens_out"] == t8["tokens_out"]
+    assert t8["device_dispatches"] > 0
+    ratio = t1["dispatches_per_token"] / t8["dispatches_per_token"]
+    assert ratio >= 4.0, (ratio, t1["dispatches_per_token"], t8["dispatches_per_token"])
+    # substep accounting: every dispatched round covers H decode substeps
+    assert t8["decode_substeps"] == t8["decode_steps"] * 8
+
+
+def test_eos_freezes_slot_mid_horizon():
+    """A slot that emits EOS mid-horizon freezes on-device: the request
+    completes with the same truncated stream and ledger as at H=1, and the
+    frozen tail pays no NFEs (conservation would break otherwise)."""
+    api, params = toy_serving()
+    rng = np.random.default_rng(11)
+    req = Request(
+        prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+        max_new_tokens=12,
+    )
+    full = _run(1, reqs_arrivals=([req], [0]), gamma_bar=0.0, max_slots=1)[2][0][
+        "tokens"
+    ]
+    eos = int(full[4])  # force an early EOS mid-stream
+    cut = int(np.argmax(full == eos)) + 1
+    kw = dict(reqs_arrivals=([req], [0]), gamma_bar=0.0, max_slots=1,
+              eos_token=eos)
+    b1, _, d1 = _run(1, **kw)
+    b8, _, d8 = _run(8, **kw)
+    np.testing.assert_array_equal(d1[0]["tokens"], full[:cut])
+    np.testing.assert_array_equal(d8[0]["tokens"], d1[0]["tokens"])
+    assert d8[0]["nfes"] == d1[0]["nfes"]
+    for b in (b1, b8):
+        t = b.report()["totals"]
+        assert t["nfes_device"] == pytest.approx(t["nfes_expected"])
+        if cut < len(full):
+            assert b.report()["requests"]["0"]["reason"] == "eos"
+
+
+def test_degenerate_single_token_budget_horizon():
+    """max_new_tokens=1 completes at admission (the prefill token alone);
+    the horizon scan must never emit for it."""
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+                max_new_tokens=1),
+        Request(prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+                max_new_tokens=6),
+    ]
+    bat, rids, done = _run(4, reqs_arrivals=(reqs, [0, 0]), gamma_bar=0.0)
+    assert len(done[rids[0]]["tokens"]) == 1
+    assert done[rids[0]]["nfes"] == 0.0
+    assert len(done[rids[1]]["tokens"]) == 6
+    t = bat.report()["totals"]
+    assert t["nfes_device"] == pytest.approx(t["nfes_expected"])
+
+
+def test_horizon_property_random_churn():
+    """Hypothesis: random budgets/arrivals/thresholds keep H>1 token- and
+    ledger-identical to H=1 (the horizon twin of the ladder property)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(st.data())
+    def prop(data):
+        n = data.draw(st.integers(1, 4), label="n_requests")
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16), label="seed"))
+        reqs, arrivals = [], []
+        for i in range(n):
+            linear = data.draw(st.booleans(), label=f"linear{i}")
+            guided = linear or data.draw(st.booleans(), label=f"guided{i}")
+            reqs.append(
+                Request(
+                    prompt=rng.integers(1, VOCAB, size=int(rng.integers(3, 7))).astype(
+                        np.int32
+                    ),
+                    max_new_tokens=data.draw(st.integers(2, 10), label=f"budget{i}"),
+                    guided=guided,
+                    linear=linear,
+                    gamma_bar=data.draw(
+                        st.sampled_from([None, -1.0, 2.0]), label=f"gb{i}"
+                    ),
+                )
+            )
+            arrivals.append(data.draw(st.integers(0, 6), label=f"arrival{i}"))
+        H = data.draw(st.sampled_from([2, 3, 8]), label="H")
+        kw = dict(reqs_arrivals=(reqs, arrivals), gamma_bar=0.9)
+        b1, rids, d1 = _run(1, **kw)
+        bh, _, dh = _run(H, **kw)
+        for rid in rids:
+            np.testing.assert_array_equal(dh[rid]["tokens"], d1[rid]["tokens"])
+            assert dh[rid]["nfes"] == d1[rid]["nfes"]
+        th = bh.report()["totals"]
+        assert th["nfes_device"] == pytest.approx(th["nfes_expected"])
+
+    prop()
+
+
+def test_horizon_under_mesh_matches_horizonless():
+    """The horizon scan compiles under an active mesh (lane-leaf specs +
+    donation, DESIGN.md §8) with identical tokens and ledgers."""
+    from repro.launch.mesh import make_host_mesh
+    from tests._toy_lm import run_ladder_case
+
+    reqs, arrivals = _churn_reqs()
+    bat, done = run_ladder_case(
+        reqs, arrivals, max_slots=2, gamma_bar=0.95,
+        mesh=make_host_mesh(), horizon=4,
+    )
+    bat1, done1 = run_ladder_case(reqs, arrivals, max_slots=2, gamma_bar=0.95)
+    for rid in done:
+        np.testing.assert_array_equal(done[rid]["tokens"], done1[rid]["tokens"])
+        assert done[rid]["nfes"] == done1[rid]["nfes"]

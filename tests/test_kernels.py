@@ -159,4 +159,6 @@ def test_decode_attention_matches_model_attention(key):
     out = decode_attention(q, kf2, vf2, pos, position, bk=32)
     out = jnp.swapaxes(out, 1, 2).reshape(B, 1, 64)
     y_kernel = out.astype(x.dtype) @ params["wo"]
-    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(y_model), np.asarray(y_kernel), atol=2e-5, rtol=1e-4
+    )

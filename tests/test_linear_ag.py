@@ -150,7 +150,9 @@ def test_linear_ag_on_toy_close_to_cfg():
     k1, k2, key = jax.random.split(key, 3)
     xT = jax.random.normal(k1, (4, DIM))
     cond = jax.random.randint(k2, (4,), 0, NUM_CLASSES)
-    x_cfg, _ = sample_with_policy(model, None, solver, pol.cfg_policy(steps, scale), xT, cond)
+    x_cfg, _ = sample_with_policy(
+        model, None, solver, pol.cfg_policy(steps, scale), xT, cond
+    )
     x_lag, info = linear_ag_sample(model, None, solver, steps, scale, coeffs, xT, cond)
     assert info["nfe"] == pol.linear_ag_policy(steps, scale).nfes()
     # LinearAG should land near the CFG endpoint on this smooth toy problem

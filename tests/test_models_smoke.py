@@ -37,7 +37,9 @@ def test_forward_and_train_step(name, key):
     params = api.init(key)
 
     if cfg.family == "dit":
-        ds = ImageDataset(num_classes=cfg.vocab_size, channels=cfg.latent_ch, hw=cfg.latent_hw)
+        ds = ImageDataset(
+            num_classes=cfg.vocab_size, channels=cfg.latent_ch, hw=cfg.latent_hw
+        )
         x0, cond = ds.sample(key, B)
         eps, _ = api.forward(params, {"x_t": x0, "t": jnp.array([1] * B), "cond": cond})
         assert eps.shape == (B, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw)

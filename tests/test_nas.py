@@ -19,7 +19,9 @@ def test_search_reduces_loss_and_respects_cost():
         key, k1, k2 = jax.random.split(key, 3)
         x_T = jax.random.normal(k1, (4, DIM))
         cond = jax.random.randint(k2, (4,), 0, NUM_CLASSES)
-        x0, _ = sample_with_policy(model, None, solver, pol.cfg_policy(steps, scale), x_T, cond)
+        x0, _ = sample_with_policy(
+            model, None, solver, pol.cfg_policy(steps, scale), x_T, cond
+        )
         dataset.append({"x_T": x_T, "cond": cond, "x0": x0})
     space = nas.SearchSpace(steps=steps, scales=(1.0, 2.0, 4.0))
     alpha, hist = nas.search(model, None, solver, space, dataset,

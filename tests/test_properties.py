@@ -68,7 +68,9 @@ def test_linear_ag_policy_nfe_formula(steps):
 def test_ssim_identity_and_symmetry(seed):
     key = jax.random.PRNGKey(seed)
     a = jax.random.uniform(key, (1, 2, 16, 16), minval=-1, maxval=1)
-    b = jax.random.uniform(jax.random.fold_in(key, 3), (1, 2, 16, 16), minval=-1, maxval=1)
+    b = jax.random.uniform(
+        jax.random.fold_in(key, 3), (1, 2, 16, 16), minval=-1, maxval=1
+    )
     assert abs(float(ssim(a, a)[0]) - 1.0) < 1e-5
     assert abs(float(ssim(a, b)[0]) - float(ssim(b, a)[0])) < 1e-5
     assert float(ssim(a, b)[0]) <= 1.0 + 1e-6

@@ -22,13 +22,17 @@ def test_engine_ag_truncation_saves_nfes(llama):
     cfg, api, params = llama
     max_new = 12
     # gamma_bar = -1: crossing at the first decode step -> near-1 NFE/step
-    eng = GuidedEngine(api, params, EngineConfig(scale=2.0, gamma_bar=-1.0, max_batch=2))
+    eng = GuidedEngine(
+        api, params, EngineConfig(scale=2.0, gamma_bar=-1.0, max_batch=2)
+    )
     reqs = [Request(prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=max_new)]
     out = eng.generate(reqs)
     assert out["guided_steps"] == 1
     assert out["nfes"][0] == 2 + (max_new - 2)  # 1 guided + rest conditional
     # gamma_bar > 1: never truncates -> 2 NFEs per decode step
-    eng2 = GuidedEngine(api, params, EngineConfig(scale=2.0, gamma_bar=1.1, max_batch=2))
+    eng2 = GuidedEngine(
+        api, params, EngineConfig(scale=2.0, gamma_bar=1.1, max_batch=2)
+    )
     out2 = eng2.generate(reqs)
     assert out2["guided_steps"] == max_new - 1
     assert out2["nfes"][0] == 2 * (max_new - 1)
@@ -37,8 +41,12 @@ def test_engine_ag_truncation_saves_nfes(llama):
 def test_cfg_scale_one_equals_cond(llama):
     """Logit-space CFG with s=1 == conditional decoding (sanity of Eq. 3)."""
     cfg, api, params = llama
-    eng_cfg = GuidedEngine(api, params, EngineConfig(scale=1.0, gamma_bar=1.1, max_batch=2))
-    eng_cond = GuidedEngine(api, params, EngineConfig(scale=1.0, gamma_bar=-1.0, max_batch=2))
+    eng_cfg = GuidedEngine(
+        api, params, EngineConfig(scale=1.0, gamma_bar=1.1, max_batch=2)
+    )
+    eng_cond = GuidedEngine(
+        api, params, EngineConfig(scale=1.0, gamma_bar=-1.0, max_batch=2)
+    )
     reqs = [Request(prompt=np.arange(2, 9, dtype=np.int32), max_new_tokens=8)]
     t1 = eng_cfg.generate(reqs)["tokens"]
     t2 = eng_cond.generate(reqs)["tokens"]
@@ -177,7 +185,8 @@ def test_continuous_scheduler_drains_queue_and_saves_nfes(llama):
     )
     rng = np.random.default_rng(0)
     rids = [
-        sched.submit(Request(prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
+        sched.submit(
+            Request(prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
                              max_new_tokens=8))
         for _ in range(5)
     ]

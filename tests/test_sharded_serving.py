@@ -111,6 +111,19 @@ def check_golden_parity(shape):
     assert got["nfes_device"] == golden["three_lane"]["nfes_device"]
     got2 = run_batcher_case(mesh=mesh)
     assert_bit_identical(got2, golden["batcher"])
+    # horizon-fused decode under the mesh (DESIGN.md §12): the H=8 scan
+    # compiles with the same lane-leaf specs/donation and must reproduce
+    # the per-step fixture's tokens and NFE ledgers exactly (lifecycle
+    # steps quantize to horizon boundaries, so only tokens/nfes are pinned)
+    goth = run_three_lane_case(_golden_coeffs(golden), mesh=mesh, horizon=8)
+    for rid, w in golden["three_lane"]["requests"].items():
+        g = goth["requests"][rid]
+        np.testing.assert_array_equal(
+            np.asarray(g["tokens"]), np.asarray(w["tokens"]),
+            err_msg=f"request {rid} horizon token drift under mesh",
+        )
+        assert g["nfes"] == w["nfes"], f"request {rid} horizon ledger drift"
+    assert goth["nfes_device"] == golden["three_lane"]["nfes_device"]
     # the whole-batch engine's mesh path holds the same contract: tokens
     # and NFE ledgers bit-identical, gammas to float tolerance
     eng = run_engine_case(mesh=mesh)

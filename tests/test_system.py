@@ -29,7 +29,9 @@ def trained():
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
     sched = cosine_schedule(100)
-    ds = ImageDataset(num_classes=cfg.vocab_size, channels=cfg.latent_ch, hw=cfg.latent_hw)
+    ds = ImageDataset(
+        num_classes=cfg.vocab_size, channels=cfg.latent_ch, hw=cfg.latent_hw
+    )
     opt = adamw(lr=2e-3)
     st = opt.init(params)
     step = make_dit_train_step(api, sched, opt)
@@ -49,7 +51,9 @@ def test_ag_close_to_cfg_with_fewer_nfes(trained):
     key = jax.random.PRNGKey(2)
     x_T = jax.random.normal(key, (4, cfg.latent_ch, cfg.latent_hw, cfg.latent_hw))
     cond = jnp.arange(4, dtype=jnp.int32)
-    x_cfg, _ = sample_with_policy(model, params, solver, pol.cfg_policy(steps, scale), x_T, cond)
+    x_cfg, _ = sample_with_policy(
+        model, params, solver, pol.cfg_policy(steps, scale), x_T, cond
+    )
     x_ag, info = ag_sample(model, params, solver, steps, scale, 0.95, x_T, cond)
     nfes = float(np.mean(np.asarray(info["nfes"])))
     assert nfes < 2 * steps  # actually saved something

@@ -125,6 +125,66 @@ def test_lifecycle_steps_recorded_once():
     assert r["reason"] == "budget"
 
 
+def test_warmup_steps_excluded_from_percentiles():
+    """A first-call-per-bucket compile lands in its step's wall time; the
+    percentiles must describe steady-state latency, with compile time
+    totalled separately."""
+    tel = ServingTelemetry(clock=FakeClock())
+    lats = [(0.500, True), (0.010, False), (0.020, False), (0.030, False),
+            (0.040, False)]
+    for i, (dt, w) in enumerate(lats):
+        tel.on_step(
+            i, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+            cond_active=0, cond_capacity=1, dt_s=dt, nfes_expected=2.0,
+            warmup=w,
+        )
+    t = tel.report()["totals"]
+    # [10, 20, 30, 40] ms steady-state: the 500 ms compile step is excluded
+    assert t["step_latency_ms"]["mean"] == pytest.approx(25.0)
+    assert t["step_latency_ms"]["p50"] == pytest.approx(25.0)
+    assert t["step_latency_ms"]["p90"] == pytest.approx(37.0)
+    assert t["step_latency_ms"]["p99"] == pytest.approx(39.7)
+    assert t["warmup_steps"] == 1
+    assert t["compile_s"] == pytest.approx(0.5)
+    assert t["decode_steps"] == 5
+
+
+def test_all_warmup_run_falls_back_to_all_steps():
+    """A run too short to reach steady state still reports percentiles
+    (over the warmup steps) instead of zeros."""
+    tel = ServingTelemetry(clock=FakeClock())
+    for i, dt in enumerate((0.010, 0.030)):
+        tel.on_step(
+            i, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+            cond_active=0, cond_capacity=1, dt_s=dt, nfes_expected=2.0,
+            warmup=True,
+        )
+    t = tel.report()["totals"]
+    assert t["step_latency_ms"]["p50"] == pytest.approx(20.0)
+    assert t["warmup_steps"] == 2
+    assert t["compile_s"] == pytest.approx(0.04)
+
+
+def test_horizon_dispatch_accounting():
+    """Horizon-fused rounds record substeps and executable launches; the
+    dispatches-per-token headline divides by emitted tokens."""
+    tel = ServingTelemetry(clock=FakeClock())
+    tel.on_submit(0, 4, 17, True)
+    tel.on_admit(0, 0)
+    for i in range(2):
+        tel.on_step(
+            8 * i, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+            cond_active=0, cond_capacity=1, dt_s=0.01, nfes_expected=16.0,
+            steps=8, dispatches=2,
+        )
+    tel.on_complete(0, 15, nfes=32.0, tokens_out=16)
+    t = tel.report()["totals"]
+    assert t["decode_steps"] == 2  # two dispatched rounds...
+    assert t["decode_substeps"] == 16  # ...covering 16 decode substeps
+    assert t["device_dispatches"] == 4
+    assert t["dispatches_per_token"] == pytest.approx(4 / 16)
+
+
 def test_two_lane_on_step_backward_compatible():
     """Callers that never pass linear kwargs (two-lane batcher, older
     benchmarks) still account correctly with linear_* defaulted to 0."""
