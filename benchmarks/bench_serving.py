@@ -15,6 +15,15 @@ place), so the serving perf trajectory accumulates across commits
 savings regress more than ``REGRESSION_PTS`` vs the previous comparable
 entry — the serving-smoke CI job's gate.
 
+Each run also records per-policy points (``--policy``, DESIGN.md §13):
+the guided subset of the same workload served under each registered
+guidance policy (``default`` / ``compress`` / ``online_ag``), with its
+realized savings stored under ``policy_points`` in the history entry.
+With ``--smoke``, ``compress`` savings must be >= the three-lane ladder's
+on the same workload (the deferred-uncond refresh prices the
+never-crossing request like the ladder while shaving the crossers' first
+2-NFE step), and every policy point must conserve its NFE ledger.
+
 Modes:
   --smoke    untrained reduced model, gamma_bar=-1 (crossing forced at the
              first decode step, so the AG *mechanics* — lane migration,
@@ -129,6 +138,14 @@ def main(argv=None):
                     help="add a sharded three-lane point on a (d, m) host "
                          "mesh, e.g. 8x1 (needs that many jax devices; see "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--policy", default="all",
+                    choices=["all", "default", "compress", "online_ag"],
+                    help="which guidance-policy points to record "
+                         "(core/policies.py): the guided subset of the "
+                         "workload served under that registered policy; "
+                         "'all' sweeps the whole registry.  Honors "
+                         "--horizon (the fused run must stay token- and "
+                         "ledger-identical to H=1)")
     ap.add_argument("--out", default="BENCH_serving.json")
     # tolerate a host harness's own flags (benchmarks/run.py --in-process
     # imports this module and calls main() under its own sys.argv)
@@ -281,6 +298,70 @@ def main(argv=None):
             "sharded savings drifted from the unsharded three-lane point"
         )
 
+    # Policy points (DESIGN.md §13): the guided subset of the same
+    # workload served under each registered guidance policy.  Non-default
+    # policies run guided->cond (no linear lane), so the comparable
+    # population is the guided requests with linear=False; savings are
+    # against the same always-CFG baseline as every other point.
+    from repro.core.policies import policy_names
+
+    policy_ids = (
+        list(policy_names()) if args.policy == "all" else [args.policy]
+    )
+    greqs = [(r, a) for r, a in zip(reqs, arrivals) if r.guided]
+    policy_points = {}
+    for pid in policy_ids:
+        preqs = [
+            dataclasses.replace(r, linear=False, policy=pid)
+            for r, _ in greqs
+        ]
+        parr = [a for _, a in greqs]
+
+        def run_policy(horizon):
+            b = StepBatcher(
+                api, params, ec,
+                BatcherConfig(max_slots=args.max_slots, horizon=horizon),
+                coeffs=coeffs,
+            )
+            for r, a in zip(preqs, parr):
+                b.submit(r, arrival_step=a)
+            return b.run(), b.report()
+
+        donep, repp = run_policy(1)
+        tp = repp["totals"]
+        assert tp["nfes_device"] == tp["nfes_expected"], (
+            f"policy {pid}: NFE ledger not conserved"
+        )
+        point = {
+            "mean_savings_pct": tp["mean_savings_pct"],
+            "nfes_device": tp["nfes_device"],
+            "baseline_nfes": tp["baseline_nfes"],
+            "policy_savings": tp["policy_savings"],
+            "tokens_per_s": tp["tokens_per_sec"],
+        }
+        if args.horizon > 1:
+            doneph, repph = run_policy(args.horizon)
+            tph = repph["totals"]
+            assert tph["nfes_device"] == tph["nfes_expected"], (
+                f"policy {pid}: horizon NFE ledger not conserved"
+            )
+            for rid in donep:
+                np.testing.assert_array_equal(
+                    doneph[rid]["tokens"], donep[rid]["tokens"],
+                    err_msg=f"policy {pid}: horizon tokens drifted "
+                            f"for request {rid}",
+                )
+            assert tph["nfes_device"] == tp["nfes_device"], (
+                f"policy {pid}: horizon ledger drifted from the "
+                f"per-step run"
+            )
+            point["horizon"] = {
+                "H": args.horizon,
+                "dispatches_per_token": tph["dispatches_per_token"],
+                "tokens_per_s": tph["tokens_per_sec"],
+            }
+        policy_points[pid] = point
+
     print(f"# serving bench: {cfg.name}, {len(reqs)} requests "
           f"({len(guided_reqs)} guided), max_slots={args.max_slots}, "
           f"gamma_bar={gamma_bar}, K={args.linear_window} (fit MSE {fit_mse:.4g})"
@@ -302,6 +383,8 @@ def main(argv=None):
               f"{t3h['dispatches_per_token']:.3f}")
         print(f"horizon{args.horizon}_dispatch_cut,"
               f"{t3h1['dispatches_per_token'] / t3h['dispatches_per_token']:.2f}x")
+    for pid, point in policy_points.items():
+        print(f"policy_{pid}_mean_savings_pct,{point['mean_savings_pct']:.2f}")
     print(f"nfe_ledger,{t['nfes_device']:.0f},expected,{t['nfes_expected']:.0f}")
     print(f"nfe_ledger_three_lane,{t3['nfes_device']:.0f},"
           f"expected,{t3['nfes_expected']:.0f}")
@@ -332,6 +415,7 @@ def main(argv=None):
         "round_scheduler": round_stats,
         "step_batcher": rep,
         "three_lane_batcher": rep3,
+        "policy_points": policy_points,
     }
     if rep3h is not None:
         t3h, t3h1 = rep3h["totals"], rep3h1["totals"]
@@ -385,6 +469,24 @@ def main(argv=None):
             f"{t3['mean_savings_pct']:.2f} vs {t['mean_savings_pct']:.2f}"
         )
         assert t3["extrapolated_uncond"] > 0, "linear lane never engaged"
+        # policy points: every registered policy must realize non-negative
+        # savings on the smoke workload, and compress's deferred-uncond
+        # refresh must match-or-beat the three-lane ladder (it prices the
+        # never-crossing request like the ladder's linear lane while
+        # shaving the instant-crossers' first 2-NFE step).
+        for pid, point in policy_points.items():
+            assert point["mean_savings_pct"] >= 0, (
+                f"policy {pid} regressed below always-CFG: {point}"
+            )
+        if "compress" in policy_points:
+            assert (
+                policy_points["compress"]["mean_savings_pct"]
+                >= t3["mean_savings_pct"]
+            ), (
+                "compress did not match the three-lane ladder: "
+                f"{policy_points['compress']['mean_savings_pct']:.2f} vs "
+                f"{t3['mean_savings_pct']:.2f}"
+            )
         if rep3h is not None and args.horizon >= 8:
             # the perf-smoke gate (CI): horizon fusing must decouple the
             # dispatch rate from the token rate — >=4x fewer device

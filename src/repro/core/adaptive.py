@@ -17,6 +17,12 @@ Two execution strategies (DESIGN.md §3 — TPU adaptation):
   select inside the phase), phase-2 loop doing conditional steps.  This is
   the whole-batch compute-saving TPU path; it is bit-identical to
   ``ag_sample`` in trajectory semantics.
+
+``calibrate_gamma_bar`` below picks the threshold offline from held-out
+trajectories.  The serving stack also offers an *on-line* per-request
+alternative: the ``online_ag`` guidance policy (``core/policies.py``,
+DESIGN.md §13) replaces the static threshold with each request's own
+observed cond/uncond gap contraction, so no calibration pass is needed.
 """
 from __future__ import annotations
 

@@ -187,6 +187,32 @@ class GuidanceExecutor:
         crossed = crossed | (live & (gamma > gamma_bar))
         return AGStep(eps=eps, gamma=gamma, crossed=crossed, nfes=nfes)
 
+    def policy_lane_update(
+        self, eps_u_eff, eps_c, scale, crossed, nfes, live, one_nfe, cross_now_fn
+    ) -> AGStep:
+        """Generic guidance-policy lane epilogue (DESIGN.md §13).
+
+        The policy-agnostic half of a guided-lane step: combine + gamma on
+        the *effective* unconditional branch (real evaluation, cached
+        compress delta, or LinearAG extrapolation — the caller has already
+        mask-combined it per slot), eps select per the ``crossed`` latch,
+        live-masked ledger, live-masked crossing.  ``one_nfe`` marks slots
+        whose unconditional branch was not a real NFE this step (they pay
+        1 even uncrossed); ``cross_now_fn(gamma) -> (B,) bool`` is the
+        per-slot crossing decision (the static rule is
+        ``gamma > gamma_bar``; policies may substitute their own for their
+        slots).  With ``one_nfe`` all-False and the static rule this is
+        exactly ``lane_update``; with ``one_nfe = linear_mode`` it is
+        exactly ``frozen_lane_update`` — the registry's default policy
+        rides through here bit-identically to both.
+        """
+        eps_cfg, gamma = self.combine(eps_u_eff, eps_c, scale)
+        eps = jnp.where(_bcast(crossed, eps_cfg), eps_c, eps_cfg)
+        one = crossed | one_nfe
+        nfes = nfes + jnp.where(live, jnp.where(one, 1.0, 2.0), 0.0)
+        crossed = crossed | (live & cross_now_fn(gamma))
+        return AGStep(eps=eps, gamma=gamma, crossed=crossed, nfes=nfes)
+
     def linear_lane_update(
         self, eps_u_hat, eps_c, scale, crossed, nfes, gamma_bar, active
     ) -> AGStep:

@@ -1,0 +1,354 @@
+"""Pluggable guidance-policy registry (DESIGN.md §13).
+
+The paper's core finding — CFG's second NFE is redundant in convergent
+regions of the trajectory — admits a whole family of *guidance policies*
+beyond the hardwired guided -> linear -> cond ladder.  A
+``GuidancePolicy`` describes one member of that family:
+
+* a **lane graph** — which serving lanes of the ladder the policy visits
+  (every policy shares the batcher's three physical lanes; the graph is
+  the subset its requests can migrate through);
+* a **per-lane NFE price** — what one decode step costs in each lane
+  (``lane_nfe`` is the worst-case per-step price; ``guided_price`` is the
+  exact host-mirror rule, per crossing state and per guided-step index);
+* a **crossing predicate** — when a slot permanently drops its
+  unconditional branch (the AG truncation of §5, or a policy-specific
+  rule);
+* **per-slot policy state** — extra device leaves (``PSTATE_SPECS``)
+  carried by the guided lane, with partition axis rules mirrored in
+  ``sharding/partition.py`` so sharded serving stays correct.
+
+Registered policies:
+
+``default``   — the three-lane AG ladder exactly as before this registry
+                existed: 2-NFE guided steps until gamma_t > gamma_bar,
+                optional LinearAG lane for ``Request.linear`` opt-ins,
+                1-NFE conditional tail.  Bit-identical to the pre-registry
+                golden fixtures (the policy epilogue reduces to
+                ``lane_update`` when every slot is default).
+``compress``  — periodic guidance reuse ("Compress Guidance", Dinh et
+                al.): the real unconditional NFE fires every ``every``-th
+                guided step; between refreshes the cached guidance delta
+                (cond - uncond, seeded from the prefill logits) stands in
+                at 0 NFE, so an uncrossed step costs 1 except on refresh
+                steps.  The ledger counts only the NFEs the policy
+                semantically requires — the packed [2B] evaluation still
+                runs every step to keep the uncond KV cache coherent,
+                exactly the convention set by the in-place LinearAG
+                switch (its extrapolated branch also discards a computed
+                pack half at +1).
+``online_ag`` — an online crossing rule ("How Much To Guide", Zhang et
+                al.): instead of a static gamma_bar threshold, each slot
+                records the cond/uncond gap ``1 - gamma`` observed at its
+                first guided step and crosses once the running gap has
+                contracted to ``rho`` of that initial value.
+
+Batched lanes may mix policies slot-by-slot: the epilogue evaluates each
+registered policy's update under a per-slot ``policy_id`` mask and
+combines them with ``jnp.where`` — for slots of policy P the selected
+values are bit-identical to a pure-P batch, which is what makes the
+default policy's golden lock survive the refactor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.executor import GuidanceExecutor, _bcast
+
+# Per-slot policy-state leaves carried by the guided lane (the "pstate"
+# dict of LaneState): key -> (trailing shape after the slot axis, dtype,
+# fill value for empty rows).  ``sharding/partition.py`` holds the
+# matching PSTATE_KEY_AXES partition rules (duplicated there to keep this
+# module import-light; consistency is pinned in tests).
+PSTATE_SPECS = {
+    # cached guidance delta (cond - uncond logits), seeded at admission
+    # from the prefill logits pair — what compress reuses between
+    # refreshes.  Trailing shape (1, V) matches the (B, 1, V) logits.
+    "delta": (("__one__", "__vocab__"), jnp.float32, 0.0),
+    # first observed cond/uncond gap 1 - gamma_0; -1.0 = not yet observed
+    "gap0": ((), jnp.float32, -1.0),
+}
+
+
+class PolicyCtx(NamedTuple):
+    """Inputs every policy hook sees for one guided-lane step.
+
+    All leaves are lane-batched: logits (B, 1, V); masks/counters (B,).
+    ``steps`` is the number of guided steps the slot has already taken
+    (the lane's ``warm`` counter, pre-increment), so per-slot cadences
+    are admission-relative and batched == eager-B=1 by construction.
+    """
+
+    eps_c: jnp.ndarray  # (B, 1, V) conditional logits (real)
+    eps_u: jnp.ndarray  # (B, 1, V) unconditional logits (real)
+    delta: jnp.ndarray  # (B, 1, V) cached guidance delta
+    gap0: jnp.ndarray  # (B,) first observed gap, -1 = unset
+    steps: jnp.ndarray  # (B,) int32 guided steps taken so far
+    crossed: jnp.ndarray  # (B,) bool pre-step crossing latch
+    live: jnp.ndarray  # (B,) bool slots that decode this step
+    gamma_bar: jnp.ndarray  # (B,) static per-request threshold
+
+
+class GuidancePolicy:
+    """Base policy = plain AG semantics; hooks return None for "use the
+    generic rule", so the default ladder overrides nothing."""
+
+    name: str = "base"
+    # lanes this policy's requests can migrate through, in ladder order
+    lane_graph: Tuple[str, ...] = ("guided", "linear", "cond")
+    # worst-case per-step NFE price per lane (the exact guided-lane rule
+    # is ``guided_price``)
+    lane_nfe = {"guided": 2.0, "linear": 1.0, "cond": 1.0}
+    # per-slot pstate keys this policy reads/writes (subset of PSTATE_SPECS)
+    state_keys: Tuple[str, ...] = ()
+
+    # -- device hooks (traced inside the lane step) -------------------------
+
+    def uncond_estimate(self, ctx: PolicyCtx):
+        """Return (u_eff (B,1,V), reuse (B,) bool) — the effective
+        unconditional logits and which slots' uncond branch was *not* a
+        real NFE this step (they pay 1 while uncrossed) — or None to use
+        the real evaluation at the standard 2-NFE price."""
+        return None
+
+    def crossing(self, gamma, ctx: PolicyCtx):
+        """(B,) bool crossing decision, or None for gamma > gamma_bar."""
+        return None
+
+    def pstate_update(self, ctx: PolicyCtx, gamma) -> dict:
+        """New values for this policy's pstate keys (written only where
+        the slot is live AND owned by this policy)."""
+        return {}
+
+    # -- host hooks ---------------------------------------------------------
+
+    def guided_price(self, crossed: bool, steps: int) -> float:
+        """Host mirror of one guided-lane step's NFE price for a slot of
+        this policy (``steps`` = guided steps already taken)."""
+        return 1.0 if crossed else 2.0
+
+
+class DefaultLadder(GuidancePolicy):
+    """The pre-registry three-lane AG ladder, unchanged (DESIGN.md §7)."""
+
+    name = "default"
+    lane_graph = ("guided", "linear", "cond")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressGuidance(GuidancePolicy):
+    """Periodic guidance reuse ("Compress Guidance", Dinh et al.).
+
+    The real unconditional evaluation fires on every ``every``-th guided
+    step of a slot (refresh steps: ``steps % every == every - 1``, so a
+    fresh slot reuses its prefill-seeded delta for ``every - 1`` steps
+    first); between refreshes ``u_hat = eps_c - delta`` stands in at 0
+    NFE.  Uncrossed slots therefore pay 2 only on refresh steps and 1
+    otherwise; crossed slots pay 1 as usual.  Crossing tests gamma
+    against the *effective* unconditional branch, mirroring how the
+    LinearAG lane crosses against its extrapolation.
+    """
+
+    every: int = 4
+
+    name = "compress"
+    lane_graph = ("guided", "cond")
+    lane_nfe = {"guided": 2.0, "cond": 1.0}
+    state_keys = ("delta",)
+
+    def __post_init__(self):
+        assert self.every >= 1, f"compress cadence must be >= 1: {self.every}"
+
+    def _refresh(self, ctx: PolicyCtx):
+        return (ctx.steps % self.every) == (self.every - 1)
+
+    def uncond_estimate(self, ctx: PolicyCtx):
+        refresh = self._refresh(ctx)
+        u_hat = ctx.eps_c - ctx.delta
+        u_eff = jnp.where(_bcast(refresh, u_hat), ctx.eps_u, u_hat)
+        return u_eff, ~refresh
+
+    def pstate_update(self, ctx: PolicyCtx, gamma) -> dict:
+        refresh = self._refresh(ctx)
+        new_delta = jnp.where(
+            _bcast(refresh, ctx.delta), ctx.eps_c - ctx.eps_u, ctx.delta
+        )
+        return {"delta": new_delta}
+
+    def guided_price(self, crossed: bool, steps: int) -> float:
+        if crossed:
+            return 1.0
+        return 2.0 if steps % self.every == self.every - 1 else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineAG(GuidancePolicy):
+    """Online gap-contraction crossing ("How Much To Guide", Zhang et al.).
+
+    The first live guided step records ``gap0 = 1 - gamma_0`` — the
+    slot's own initial cond/uncond disagreement — and later steps cross
+    once the running gap ``1 - gamma_t`` has contracted to ``rho *
+    gap0``.  The static per-request gamma_bar is ignored: the threshold
+    adapts to how strongly each request conditions, which is exactly the
+    calibration problem ``calibrate_gamma_bar`` solves offline
+    (core/adaptive.py) moved on-line and per-slot.  Step prices are the
+    standard 2 uncrossed / 1 crossed.
+    """
+
+    rho: float = 0.5
+    min_obs: int = 1
+
+    name = "online_ag"
+    lane_graph = ("guided", "cond")
+    lane_nfe = {"guided": 2.0, "cond": 1.0}
+    state_keys = ("gap0",)
+
+    def __post_init__(self):
+        assert 0.0 < self.rho < 1.0, f"rho must be in (0, 1): {self.rho}"
+        assert self.min_obs >= 1, "crossing needs at least one observed gap"
+
+    def crossing(self, gamma, ctx: PolicyCtx):
+        gap = 1.0 - gamma
+        armed = (ctx.gap0 >= 0.0) & (ctx.steps >= self.min_obs)
+        return armed & (gap <= self.rho * ctx.gap0)
+
+    def pstate_update(self, ctx: PolicyCtx, gamma) -> dict:
+        return {"gap0": jnp.where(ctx.gap0 < 0.0, 1.0 - gamma, ctx.gap0)}
+
+
+# ---------------------------------------------------------------------------
+# the registry: name -> policy instance; ids are registration order
+# ---------------------------------------------------------------------------
+
+_REGISTRY: "dict[str, GuidancePolicy]" = {}
+
+
+def register_policy(policy: GuidancePolicy) -> GuidancePolicy:
+    """Register a policy; id = insertion order (``default`` must be 0)."""
+    assert policy.name not in _REGISTRY, f"duplicate policy {policy.name!r}"
+    assert set(policy.state_keys) <= set(PSTATE_SPECS), (
+        f"{policy.name}: unknown pstate keys "
+        f"{set(policy.state_keys) - set(PSTATE_SPECS)} (add to PSTATE_SPECS "
+        "and the partition axis rules first)"
+    )
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get_policy(name: str) -> GuidancePolicy:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown guidance policy {name!r}; registered: {policy_names()}"
+        )
+    return _REGISTRY[name]
+
+
+def policy_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def registered_policies() -> Tuple[GuidancePolicy, ...]:
+    """Snapshot of all registered policies in id order — what the batcher
+    bakes into its traced lane steps (per-slot ``policy_id`` indexes it)."""
+    return tuple(_REGISTRY.values())
+
+
+register_policy(DefaultLadder())
+register_policy(CompressGuidance())
+register_policy(OnlineAG())
+
+
+def empty_pstate(capacity: int, vocab: int) -> dict:
+    """Freshly-allocated per-slot policy state for a guided lane (rows are
+    inert until an admission overwrites them)."""
+    out = {}
+    for key, (trailing, dtype, fill) in PSTATE_SPECS.items():
+        shape = (capacity,) + tuple(
+            1 if t == "__one__" else vocab for t in trailing
+        )
+        out[key] = jnp.full(shape, fill, dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the mask-combined guided-lane epilogue (shared by the batched lane steps
+# and the eager B=1 oracles, so parity holds by construction)
+# ---------------------------------------------------------------------------
+
+
+def guided_policy_update(
+    policies: Tuple[GuidancePolicy, ...],
+    executor: GuidanceExecutor,
+    *,
+    eps_u,
+    eps_c,
+    scale,
+    crossed,
+    nfes,
+    gamma_bar,
+    live,
+    policy_id,
+    pstate: dict,
+    steps,
+    linear_now=None,
+):
+    """One guided-lane step under per-slot policies.
+
+    Two mask-combined stages around ONE ``executor.combine``:
+
+    1. each policy proposes an effective unconditional branch and a
+       ``reuse`` mask (slots whose uncond was not a real NFE this step);
+    2. the generic epilogue (combine / eps select / ledger / latch) runs
+       once on the combined ``u_eff``, with each policy able to override
+       the crossing decision for its slots.
+
+    For slots of the default policy every ``jnp.where`` selects the
+    unmodified operand, so a pure-default batch is value-identical to the
+    pre-registry ``lane_update`` epilogue — the golden fixtures pin this.
+
+    Returns (AGStep, new_pstate, u_eff); pstate writes and the ledger are
+    masked by ``live`` so frozen/inactive slots stay inert.
+    """
+    if linear_now is None:
+        linear_now = jnp.zeros_like(crossed)
+    ctx = PolicyCtx(
+        eps_c=eps_c, eps_u=eps_u, delta=pstate["delta"], gap0=pstate["gap0"],
+        steps=steps, crossed=crossed, live=live, gamma_bar=gamma_bar,
+    )
+    masks = [policy_id == i for i in range(len(policies))]
+
+    u_eff = eps_u
+    reuse = jnp.zeros_like(crossed)
+    for m, p in zip(masks, policies):
+        est = p.uncond_estimate(ctx)
+        if est is None:
+            continue
+        p_u, p_reuse = est
+        u_eff = jnp.where(_bcast(m, u_eff), p_u, u_eff)
+        reuse = jnp.where(m, p_reuse, reuse)
+
+    def cross_now(gamma):
+        out = gamma > gamma_bar
+        for m, p in zip(masks, policies):
+            c = p.crossing(gamma, ctx)
+            if c is None:
+                continue
+            out = jnp.where(m, c, out)
+        return out
+
+    res = executor.policy_lane_update(
+        u_eff, eps_c, scale, crossed, nfes, live, reuse | linear_now, cross_now
+    )
+
+    new_pstate = dict(pstate)
+    for m, p in zip(masks, policies):
+        upd = p.pstate_update(ctx, res.gamma)
+        for key, val in upd.items():
+            write = m & live
+            cur = new_pstate[key]
+            sel = _bcast(write, cur) if cur.ndim > 1 else write
+            new_pstate[key] = jnp.where(sel, val, cur)
+    return res, new_pstate, u_eff

@@ -19,6 +19,17 @@ OLS, save) when it does not exist yet:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --linear --fit-coeffs --coeffs artifacts/linear_ag_coeffs.npz
 
+``--policy compress|online_ag`` serves the workload under an alternative
+guidance policy from the registry (DESIGN.md §13; implies
+``--continuous``): ``compress`` refreshes the unconditional branch every
+k-th step and reuses the cached guidance delta in between ("Compress
+Guidance"), ``online_ag`` adapts the AG crossing from each request's
+observed cond/uncond gap instead of the static gamma_bar ("How Much To
+Guide").  The telemetry report breaks realized savings out per policy:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+      --policy compress --requests 4 --max-new 16
+
 ``--mesh dxm`` serves sharded (DESIGN.md §8): params and lane state are
 partitioned on a (d, m) data x model mesh — e.g. ``--mesh 8x1`` on
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, or a pod slice's
@@ -127,7 +138,20 @@ def main():
                     help="serve sharded on a (d, m) data x model mesh "
                          "(e.g. 8x1), or 'host' for the data-majority "
                          "default over all devices")
+    ap.add_argument("--policy", default="default",
+                    choices=["default", "compress", "online_ag"],
+                    help="guidance policy for the workload "
+                         "(core/policies.py): 'compress' refreshes the "
+                         "unconditional branch every k-th step and reuses "
+                         "the cached guidance delta in between; "
+                         "'online_ag' replaces the static gamma_bar with "
+                         "a per-request online gap estimate.  Non-default "
+                         "policies imply --continuous and disable "
+                         "--linear")
     args = ap.parse_args()
+    if args.policy != "default" and args.linear:
+        raise SystemExit("--policy compress/online_ag runs guided->cond; "
+                         "drop --linear")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -152,11 +176,13 @@ def main():
             ).astype(np.int32),
             max_new_tokens=args.max_new,
             linear=args.linear,
+            policy=args.policy,
         )
         for _ in range(args.requests)
     ]
 
-    if args.continuous or args.linear or args.horizon > 1:
+    if (args.continuous or args.linear or args.horizon > 1
+            or args.policy != "default"):
         from repro.serving import BatcherConfig, StepBatcher
 
         coeffs = (
@@ -174,10 +200,16 @@ def main():
         done = bat.run()
         t = bat.report()["totals"]
         lanes = "three-lane" if args.linear else "two-lane"
+        if args.policy != "default":
+            lanes = f"policy={args.policy}"
         hor = f", horizon={args.horizon}" if args.horizon > 1 else ""
         print(f"[serve] {cfg.name}: {len(done)} requests via step batcher "
               f"({lanes}{hor})")
         print(f"  NFEs saved vs always-CFG: {t['mean_savings_pct']:.1f}%")
+        for pid, s in sorted(t["policy_savings"].items()):
+            print(f"  policy {pid}: {s['requests']} requests, "
+                  f"{s['nfes']:.0f} NFEs vs {s['baseline_nfes']:.0f} "
+                  f"baseline (saved {s['mean_savings_pct']:.1f}%)")
         if args.linear:
             print(f"  0-NFE extrapolated uncond evals: {t['extrapolated_uncond']}")
             print(f"  lane slot-steps g/l/c: {t['lane_steps']['guided']}/"

@@ -24,6 +24,7 @@ from repro.serving.engine import (
     collect_cfg_logit_histories,
     linear_ag_generate,
     pad_prompts,
+    policy_generate,
 )
 from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.telemetry import ServingTelemetry
@@ -39,4 +40,5 @@ __all__ = [
     "collect_cfg_logit_histories",
     "linear_ag_generate",
     "pad_prompts",
+    "policy_generate",
 ]

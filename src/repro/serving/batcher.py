@@ -80,6 +80,7 @@ import numpy as np
 
 from repro.core.executor import GuidanceExecutor
 from repro.core.linear_ag import WindowCoeffs
+from repro.core.policies import empty_pstate, registered_policies
 from repro.serving.engine import EngineConfig, PrefillCache, Request, pad_prompts
 from repro.serving.guided_decode import (
     LaneState,
@@ -209,6 +210,13 @@ class StepBatcher:
         self._beta = (
             jnp.asarray(coeffs.beta, jnp.float32) if coeffs is not None else None
         )
+        # Guidance-policy registry snapshot (DESIGN.md §13): the traced
+        # guided-lane steps close over this tuple, and per-slot policy_id
+        # values index it — so the id <-> policy mapping is frozen for the
+        # batcher's lifetime even if the registry grows later.
+        self._policies = registered_policies()
+        self._policy_index = {p.name: i for i, p in enumerate(self._policies)}
+        self._policy_of: Dict[int, object] = {}  # rid -> GuidancePolicy
         self.guided = _Lane("guided")
         self.linear = _Lane("linear")
         self.cond = _Lane("cond")
@@ -245,7 +253,8 @@ class StepBatcher:
             counts = self.compile_counts["guided"]
             counts[K] = counts.get(K, 0) + 1  # runs at trace time only
             return guided_lane_step(
-                api, params, state, scale=config.scale, executor=self.executor
+                api, params, state, scale=config.scale, executor=self.executor,
+                policies=self._policies,
             )
 
         def _traced_linear(params, state, beta):
@@ -285,7 +294,7 @@ class StepBatcher:
             return guided_lane_horizon(
                 api, params, state, beta[0] if beta else None, horizon=H,
                 scale=config.scale, eos_token=eos, warm_k=warm_k,
-                executor=self.executor,
+                executor=self.executor, policies=self._policies,
             )
 
         def _traced_linear_hor(params, state, beta):
@@ -337,13 +346,27 @@ class StepBatcher:
                 "StepBatcher; fit via core.linear_ag.fit_ols_window or load "
                 "the serve-time artifact)"
             )
+        assert request.policy in self._policy_index, (
+            f"unknown guidance policy {request.policy!r}; registered: "
+            f"{tuple(self._policy_index)}"
+        )
+        if request.policy != "default":
+            assert request.guided, (
+                f"policy {request.policy!r} requires guided=True (unguided "
+                "traffic is policy-free conditional decoding)"
+            )
+            assert not request.linear, (
+                "Request.linear belongs to the default ladder; policy "
+                f"{request.policy!r} never enters the LinearAG lane"
+            )
         rid = self._next_rid
         self._next_rid += 1
         self._pending.append(_Pending(rid, request, arrival_step))
         self._reqs[rid] = request
+        self._policy_of[rid] = self._policies[self._policy_index[request.policy]]
         self.telemetry.on_submit(
             rid, len(request.prompt), request.max_new_tokens, request.guided,
-            step=self._step_idx, linear=request.linear,
+            step=self._step_idx, linear=request.linear, policy=request.policy,
         )
         return rid
 
@@ -387,6 +410,10 @@ class StepBatcher:
             )
         else:
             hist = kind == "guided" and self._with_history()
+            if kind == "guided":
+                assert self._vocab is not None, (
+                    "policy state allocated before first prefill"
+                )
             state = LaneState(
                 caches_u=(
                     self.api.init_caches(capacity, self.cache_len)
@@ -397,6 +424,15 @@ class StepBatcher:
                 hist_u=self._empty_hist(capacity) if hist else None,
                 warm=z(capacity),
                 linear_opt=z(capacity, dt=bool),
+                # per-slot guidance-policy leaves (DESIGN.md §13); only the
+                # guided lane runs policy epilogues — crossed slots in the
+                # cond lane are policy-free 1-NFE decoding
+                policy_id=z(capacity) if kind == "guided" else None,
+                pstate=(
+                    empty_pstate(capacity, self._vocab)
+                    if kind == "guided"
+                    else None
+                ),
                 **common,
             )
         # under a mesh, fresh slot rows (KV + history) are born sharded —
@@ -419,6 +455,14 @@ class StepBatcher:
                     else jax.tree.map(
                         lambda x, y: jnp.concatenate([x, y], axis=1), a, b
                     )
+                )
+            elif name == "pstate":
+                kw[name] = (
+                    None
+                    if a is None
+                    else {
+                        k: jnp.concatenate([a[k], b[k]], axis=0) for k in a
+                    }
                 )
             elif a is None:
                 kw[name] = None
@@ -492,10 +536,10 @@ class StepBatcher:
         logits_c, ext_c = self._prefill(self.params, toks_c, self.cache_len)
         if self._vocab is None:
             self._vocab = int(logits_c.shape[-1])
-        ext_u = None
+        ext_u = logits_u = None
         if req.guided:
             toks_u, _ = pad_prompts([req], use_negative=True)
-            _, ext_u = self._prefill(self.params, toks_u, self.cache_len)
+            logits_u, ext_u = self._prefill(self.params, toks_u, self.cache_len)
         first = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
         lane = self.guided if req.guided else self.cond
         slot = self._take_slot(lane)
@@ -515,6 +559,18 @@ class StepBatcher:
                 bool(req.linear) and self.coeffs is not None
             ),
         )
+        if st.pstate is not None:  # guided lane: per-slot policy rows
+            # prefill-seeded guidance delta (compress's first reuse window)
+            delta0 = (logits_c[0, -1] - logits_u[0, -1]).astype(jnp.float32)
+            extra.update(
+                policy_id=st.policy_id.at[slot].set(
+                    self._policy_index[req.policy]
+                ),
+                pstate={
+                    "delta": st.pstate["delta"].at[slot].set(delta0[None]),
+                    "gap0": st.pstate["gap0"].at[slot].set(-1.0),
+                },
+            )
         lane.state = st._replace(
             tokens=st.tokens.at[slot].set(first[0]),
             position=st.position.at[slot].set(S),
@@ -545,6 +601,28 @@ class StepBatcher:
         return True
 
     # -- lifecycle -----------------------------------------------------------
+
+    def _guided_price(self, rid: int, *, allow_inplace_linear: bool = False):
+        """Host mirror of one guided-lane step's NFE price for ``rid``,
+        BEFORE the step's own crossing/counter updates (matching the
+        device ledger's pre-update semantics).  The rid's policy owns the
+        rule — 2/1 for default and online_ag, refresh-cadenced for
+        compress; ``allow_inplace_linear`` adds the horizon scans'
+        in-place LinearAG switch (a warmed default ``Request.linear``
+        slot pays 1 inside the guided lane)."""
+        if self._host_crossed[rid]:
+            return 1.0
+        if allow_inplace_linear:
+            K = self.coeffs.K if self.coeffs is not None else None
+            if (
+                K is not None
+                and self._reqs[rid].linear
+                and self._guided_steps_host[rid] >= K
+            ):
+                return 1.0
+        return self._policy_of[rid].guided_price(
+            False, self._guided_steps_host[rid]
+        )
 
     def _maybe_complete(self, rid, lane, slot, nfes, step=None) -> bool:
         gen = self._gen[rid]
@@ -680,11 +758,12 @@ class StepBatcher:
         self._admit_pending()
 
         # host-mirror of the device ledger rule, *before* the step runs:
-        # 2 per uncrossed guided slot, 1 per crossed guided slot, 1 per
-        # linear slot (extrapolated uncond is 0-NFE), 1 per cond slot.
+        # each guided slot pays its policy's price (2/1 for the default
+        # ladder, refresh-cadenced for compress), 1 per linear slot
+        # (extrapolated uncond is 0-NFE), 1 per cond slot.
         expected = (
             sum(
-                1.0 if self._host_crossed[r] else 2.0
+                self._guided_price(r)
                 for r in self.guided.rids
                 if r is not None
             )
@@ -869,7 +948,6 @@ class StepBatcher:
         migrations and admissions quantize to the horizon boundary."""
         H = self.bc.horizon
         fetched = jax.device_get(rec["traces"])
-        K = self.coeffs.K if self.coeffs is not None else None
         step0 = rec["step0"]
         expected = 0.0
         for h in range(H):
@@ -900,14 +978,10 @@ class StepBatcher:
                         continue
                     # host mirror of the device ledger rule BEFORE this
                     # substep's crossing/warmup updates: crossed or
-                    # in-place-linear slots pay 1, warming guided slots 2
-                    linear_now = (
-                        K is not None
-                        and self._reqs[rid].linear
-                        and self._guided_steps_host[rid] >= K
-                    )
-                    expected += (
-                        1.0 if (self._host_crossed[rid] or linear_now) else 2.0
+                    # in-place-linear slots pay 1, everyone else the
+                    # policy's guided price at this step index
+                    expected += self._guided_price(
+                        rid, allow_inplace_linear=True
                     )
                     self._gen[rid].append(int(tr.tokens[h, slot]))
                     self._guided_steps_host[rid] += 1

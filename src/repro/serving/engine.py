@@ -54,6 +54,14 @@ class Request:
     # of its stored history (Eq. 8/10).  Requires the batcher to hold
     # fitted WindowCoeffs; ignored by the whole-batch engine.
     linear: bool = False
+    # Guidance policy id (core/policies.py registry, DESIGN.md §13):
+    # "default" is the three-lane AG ladder above; "compress" refreshes
+    # the real unconditional NFE every k-th step and reuses the cached
+    # guidance delta in between; "online_ag" replaces the static
+    # gamma_bar crossing with a per-request online gap estimate.
+    # Non-default policies require guided=True and linear=False (the
+    # LinearAG lane belongs to the default ladder).
+    policy: str = "default"
 
 
 @dataclasses.dataclass
@@ -188,6 +196,11 @@ class GuidedEngine:
         B = len(requests)
         assert B <= cfgc.max_batch
         max_new = max(r.max_new_tokens for r in requests)
+        if any(r.policy != "default" for r in requests):
+            # Non-default guidance policies decode per request through
+            # their eager oracle (policy_generate) — the whole-batch
+            # two-phase loop below is the default ladder's semantics.
+            return self._generate_by_policy(requests, max_new)
         toks_c, S = pad_prompts(requests, use_negative=False)
         toks_u, _ = pad_prompts(requests, use_negative=True)
         gamma_bar = jnp.asarray(
@@ -247,6 +260,28 @@ class GuidedEngine:
             "gammas": (
                 np.asarray(jnp.stack(gammas)) if gammas else np.zeros((0, B))
             ),
+        }
+
+    def _generate_by_policy(self, requests: Sequence[Request], max_new: int):
+        """Per-request decode through each request's policy oracle; budgets
+        are padded to the batch max like the whole-batch path."""
+        outs = [
+            policy_generate(
+                self.api, self.params,
+                dataclasses.replace(r, max_new_tokens=max_new),
+                self.config,
+            )
+            for r in requests
+        ]
+        tokens = np.stack([o["tokens"] for o in outs])
+        nfes = np.asarray([o["nfes"] for o in outs], np.float32)
+        per_req_guided = np.maximum(nfes - (max_new - 1), 0.0).astype(np.int64)
+        return {
+            "tokens": tokens,
+            "nfes": nfes,
+            "guided_steps": int(per_req_guided.max(initial=0)),
+            "guided_steps_per_request": per_req_guided,
+            "gammas": np.zeros((0, len(requests))),
         }
 
 
@@ -404,4 +439,127 @@ def linear_ag_generate(api, params, request: Request, config: EngineConfig, coef
         "lanes": lanes,
         "gammas": np.asarray(gammas, np.float64),
         "linear_steps": sum(1 for l in lanes if l == "linear"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# guidance-policy oracles (DESIGN.md §13): the eager B=1 reference for
+# every registered policy — the step batcher must match these
+# token-for-token and ledger-for-ledger under arbitrary churn
+# ---------------------------------------------------------------------------
+
+
+def policy_generate(api, params, request: Request, config: EngineConfig,
+                    coeffs=None):
+    """Eager B=1 oracle dispatched on ``request.policy``.
+
+    ``default`` routes to the existing oracles (the eager LinearAG ladder
+    for ``Request.linear``, the whole-batch engine at B=1 otherwise);
+    non-default policies run the shared guided/cond loop below, whose
+    guided epilogue is the SAME ``guided_policy_update`` the batched lane
+    steps trace — parity is by construction, not by reimplementation.
+    Returns {tokens, nfes, lanes, gammas}.
+    """
+    from repro.core.policies import get_policy
+
+    pol = get_policy(request.policy)
+    if pol.name == "default":
+        if request.linear:
+            assert coeffs is not None, "default-policy linear oracle needs coeffs"
+            return linear_ag_generate(api, params, request, config, coeffs)
+        out = GuidedEngine(api, params, config).generate([request])
+        n_guided = int(out["guided_steps_per_request"][0])
+        n_cond = request.max_new_tokens - 1 - n_guided
+        return {
+            "tokens": out["tokens"][0],
+            "nfes": float(out["nfes"][0]),
+            "lanes": ["guided"] * n_guided + ["cond"] * n_cond,
+            "gammas": np.asarray(out["gammas"][:, 0], np.float64),
+        }
+    return _policy_lane_generate(api, params, request, config, pol)
+
+
+def _policy_lane_generate(api, params, request: Request, config: EngineConfig,
+                          pol):
+    """The shared eager loop for single-lane-graph policies (guided ->
+    cond): packed CFG evaluations with the policy's epilogue until the
+    crossing latch fires, conditional steps after.  The packed pair keeps
+    the uncond KV coherent on reuse steps exactly like the batched lane
+    (the ledger counts only the NFEs the policy semantically requires)."""
+    from repro.core.policies import guided_policy_update
+
+    executor = GuidanceExecutor(backend=config.guidance_backend)
+    req = request
+    gb = jnp.asarray(
+        [config.gamma_bar if req.gamma_bar is None else req.gamma_bar],
+        jnp.float32,
+    )
+    live = jnp.ones((1,), bool)
+    pid = jnp.zeros((1,), jnp.int32)  # single-policy pack: id 0 == pol
+
+    toks_c, S = pad_prompts([req], use_negative=False)
+    toks_u, _ = pad_prompts([req], use_negative=True)
+    cache_len = S + req.max_new_tokens + 1
+    logits_c, ext_c = api.forward(
+        params, {"tokens": toks_c}, mode="prefill", cache_len=cache_len
+    )
+    logits_u, ext_u = api.forward(
+        params, {"tokens": toks_u}, mode="prefill", cache_len=cache_len
+    )
+    token = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    position = jnp.full((1,), S, jnp.int32)
+    caches_c, caches_u = ext_c["caches"], ext_u["caches"]
+    # prefill-seeded guidance delta — the compress policy's first reuse
+    # window extrapolates from the prompt's own cond/uncond disagreement
+    delta = (logits_c[:, -1:] - logits_u[:, -1:]).astype(jnp.float32)
+    gap0 = -jnp.ones((1,), jnp.float32)
+    crossed = jnp.zeros((1,), bool)
+    nfes = jnp.zeros((1,), jnp.float32)
+
+    def guided_step(p, tok, pos, cc, cu, crossed, nfes, delta, gap0, steps):
+        lc, lu, cc, cu = _packed_cfg_eval(api, p, tok, pos, cc, cu)
+        res, pstate, _ = guided_policy_update(
+            (pol,), executor, eps_u=lu, eps_c=lc, scale=config.scale,
+            crossed=crossed, nfes=nfes, gamma_bar=gb, live=live,
+            policy_id=pid, pstate={"delta": delta, "gap0": gap0}, steps=steps,
+        )
+        nxt = jnp.argmax(res.eps[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, cc, cu, res.crossed, res.nfes, pstate["delta"],
+                pstate["gap0"], res.gamma)
+
+    def cond_step(p, tok, pos, cc, nfes):
+        lc, cc = api.decode_step(p, tok, cc, pos)
+        nxt = jnp.argmax(lc[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cc, nfes + 1.0
+
+    guided_step = jax.jit(guided_step)
+    cond_step = jax.jit(cond_step)
+
+    tokens = [int(np.asarray(token)[0, 0])]
+    lanes, gammas = [], []
+    lane = "guided"
+    steps = jnp.zeros((1,), jnp.int32)
+    for _ in range(req.max_new_tokens - 1):
+        lanes.append(lane)
+        if lane == "guided":
+            (token, caches_c, caches_u, crossed, nfes, delta, gap0,
+             gamma) = guided_step(
+                params, token, position, caches_c, caches_u, crossed, nfes,
+                delta, gap0, steps,
+            )
+            steps = steps + 1
+            gammas.append(float(gamma[0]))
+            if bool(crossed[0]):
+                lane = "cond"
+        else:
+            token, caches_c, nfes = cond_step(
+                params, token, position, caches_c, nfes
+            )
+        position = position + 1
+        tokens.append(int(np.asarray(token)[0, 0]))
+    return {
+        "tokens": np.asarray(tokens, np.int32),
+        "nfes": float(np.asarray(nfes)[0]),
+        "lanes": lanes,
+        "gammas": np.asarray(gammas, np.float64),
     }

@@ -151,6 +151,13 @@ class LaneState(NamedTuple):
     frozen: object = None  # (K,) bool, latched on budget/EOS
     warm: object = None  # (K,) int32 guided steps taken (LinearAG warmup)
     linear_opt: object = None  # (K,) bool, Request.linear opted in
+    # Guidance-policy registry (DESIGN.md §13): per-slot policy id into
+    # the batcher's registry snapshot, and the per-slot policy-state dict
+    # (core/policies.PSTATE_SPECS leaves: cached guidance delta, online
+    # gap estimate).  Present only in a policy-aware guided lane; rows
+    # are overwritten wholesale at admission like every other leaf.
+    policy_id: object = None  # (K,) int32
+    pstate: object = None  # dict of (K, ...) leaves or None
 
 
 class LinearLaneState(NamedTuple):
@@ -184,7 +191,7 @@ def push_history(hist, x):
 
 def guided_lane_step(
     api, params, state: LaneState, *, scale: float,
-    executor: Optional[GuidanceExecutor] = None,
+    executor: Optional[GuidanceExecutor] = None, policies=None,
 ):
     """One guided-lane step: 2 NFEs per active slot, per-slot AG crossing.
 
@@ -195,6 +202,12 @@ def guided_lane_step(
     LinearAG window warms up during the guided phase.  Returns
     (next, new_state, gamma).
 
+    ``policies`` (a ``core.policies`` registry snapshot) activates the
+    per-slot policy epilogue when the state carries ``pstate`` leaves:
+    each slot's effective unconditional branch, price and crossing rule
+    follow its ``policy_id`` (DESIGN.md §13).  Slots of the default
+    policy are value-identical to the plain ``lane_update`` path.
+
     Under an active mesh the state is constrained on entry and exit
     (slot axis on "data", DESIGN.md §8) so the compiled step keeps lane
     buffers device-sharded across steps; without a mesh this is identity.
@@ -204,18 +217,34 @@ def guided_lane_step(
     logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
         api, params, state.tokens, state.position, state.caches_c, state.caches_u
     )
-    res = executor.lane_update(
-        logits_u, logits_c, scale, state.crossed, state.nfes,
-        state.gamma_bar, state.active,
-    )
+    pstate, warm = state.pstate, state.warm
+    if policies is not None and state.pstate is not None:
+        from repro.core.policies import guided_policy_update
+
+        res, pstate, u_pushed = guided_policy_update(
+            policies, executor, eps_u=logits_u, eps_c=logits_c, scale=scale,
+            crossed=state.crossed, nfes=state.nfes, gamma_bar=state.gamma_bar,
+            live=state.active, policy_id=state.policy_id, pstate=state.pstate,
+            steps=state.warm,
+        )
+        # the per-slot guided-step counter drives policy cadences (e.g.
+        # compress refreshes); host lifecycle mirrors it per emitted token
+        warm = state.warm + state.active.astype(state.warm.dtype)
+    else:
+        res = executor.lane_update(
+            logits_u, logits_c, scale, state.crossed, state.nfes,
+            state.gamma_bar, state.active,
+        )
+        u_pushed = logits_u
     nxt = _select(res.eps, True, None)
     hist_c, hist_u = state.hist_c, state.hist_u
     if hist_c is not None:
         hist_c = push_history(hist_c, logits_c)
-        hist_u = push_history(hist_u, logits_u)
+        hist_u = push_history(hist_u, u_pushed)
     new_state = constrain_lane_state(state._replace(
         tokens=nxt, position=state.position + 1, caches_c=new_c, caches_u=new_u,
         crossed=res.crossed, nfes=res.nfes, hist_c=hist_c, hist_u=hist_u,
+        warm=warm, pstate=pstate,
     ))
     return nxt, new_state, res.gamma
 
@@ -351,7 +380,8 @@ def _advance(state, live, nxt, caches_c, caches_u, crossed, nfes, eos_token):
 
 
 def _guided_horizon_substep(
-    api, params, state: LaneState, beta, *, scale, eos_token, warm_k, executor
+    api, params, state: LaneState, beta, *, scale, eos_token, warm_k, executor,
+    policies=None,
 ):
     """One guided-lane substep under the horizon freeze mask.
 
@@ -359,6 +389,10 @@ def _guided_horizon_substep(
     ``linear_opt`` slots whose window is full take the LinearAG
     extrapolated unconditional branch instead (1 NFE), exactly what the
     linear lane would have computed had the host migrated them already.
+    With ``policies`` + ``pstate`` the per-slot policy epilogue runs
+    instead (DESIGN.md §13); the in-place LinearAG switch composes with
+    it (``linear_now`` slots keep their extrapolated branch and +1 price
+    — the default policy overrides nothing on top).
     """
     live = state.active & ~state.frozen
     logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
@@ -375,10 +409,21 @@ def _guided_horizon_substep(
     else:
         linear_now = jnp.zeros_like(state.active)
         eps_u_eff = logits_u
-    res = executor.frozen_lane_update(
-        eps_u_eff, logits_c, scale, state.crossed, state.nfes,
-        state.gamma_bar, live, linear_now,
-    )
+    pstate = state.pstate
+    if policies is not None and state.pstate is not None:
+        from repro.core.policies import guided_policy_update
+
+        res, pstate, eps_u_eff = guided_policy_update(
+            policies, executor, eps_u=eps_u_eff, eps_c=logits_c, scale=scale,
+            crossed=state.crossed, nfes=state.nfes, gamma_bar=state.gamma_bar,
+            live=live, policy_id=state.policy_id, pstate=state.pstate,
+            steps=state.warm, linear_now=linear_now,
+        )
+    else:
+        res = executor.frozen_lane_update(
+            eps_u_eff, logits_c, scale, state.crossed, state.nfes,
+            state.gamma_bar, live, linear_now,
+        )
     nxt = _select(res.eps, True, None)
     if hist_c is not None:
         # the window sees what the per-step ladder's would have: realized
@@ -390,7 +435,7 @@ def _guided_horizon_substep(
     )
     new_state = constrain_lane_state(state._replace(
         warm=state.warm + live.astype(state.warm.dtype),
-        hist_c=hist_c, hist_u=hist_u, **kw,
+        hist_c=hist_c, hist_u=hist_u, pstate=pstate, **kw,
     ))
     trace = HorizonTrace(
         tokens=kw["tokens"][:, 0], crossed=res.crossed, nfes=res.nfes,
@@ -453,18 +498,19 @@ def _cond_horizon_substep(api, params, state: LaneState, *, eos_token):
 def guided_lane_horizon(
     api, params, state: LaneState, beta=None, *, horizon: int, scale: float,
     eos_token=None, warm_k: int = 0,
-    executor: Optional[GuidanceExecutor] = None,
+    executor: Optional[GuidanceExecutor] = None, policies=None,
 ):
     """H guided-lane substeps in ONE executable (lax.scan).  Returns
     (final_state, HorizonTrace with (H, slots) leaves).  ``beta`` enables
-    the in-place LinearAG switch for warmed ``linear_opt`` slots."""
+    the in-place LinearAG switch for warmed ``linear_opt`` slots;
+    ``policies`` the per-slot policy epilogue (DESIGN.md §13)."""
     executor = get_executor(executor)
     state = constrain_lane_state(state)
 
     def body(st, _):
         return _guided_horizon_substep(
             api, params, st, beta, scale=scale, eos_token=eos_token,
-            warm_k=warm_k, executor=executor,
+            warm_k=warm_k, executor=executor, policies=policies,
         )
 
     final, trace = jax.lax.scan(body, state, None, length=horizon)

@@ -49,6 +49,7 @@ class RequestRecord:
     max_new_tokens: int
     guided: bool
     linear: bool = False  # opted into the LinearAG extrapolation lane
+    policy: str = "default"  # guidance policy id (core/policies.py)
     submit_step: int = 0
     admit_step: Optional[int] = None
     crossed_step: Optional[int] = None  # batcher step at which AG truncated
@@ -92,11 +93,12 @@ class ServingTelemetry:
 
     # -- request lifecycle ---------------------------------------------------
 
-    def on_submit(self, rid, prompt_len, max_new_tokens, guided, step=0, linear=False):
+    def on_submit(self, rid, prompt_len, max_new_tokens, guided, step=0,
+                  linear=False, policy="default"):
         self.requests[rid] = RequestRecord(
             rid=rid, prompt_len=int(prompt_len),
             max_new_tokens=int(max_new_tokens), guided=bool(guided),
-            linear=bool(linear), submit_step=int(step),
+            linear=bool(linear), policy=str(policy), submit_step=int(step),
         )
 
     def on_admit(self, rid, step):
@@ -197,6 +199,22 @@ class ServingTelemetry:
             "linear": sum(o.get("linear_active", 0) for o in occ),
             "cond": sum(o["cond_active"] for o in occ),
         }
+        # realized savings per guidance policy (core/policies.py): each
+        # policy prices its own guided steps, so the headline savings must
+        # be attributable per policy id for the bench's policy points
+        policy_savings: Dict[str, dict] = {}
+        for r in guided_done:
+            agg = policy_savings.setdefault(
+                r.policy, {"requests": 0, "nfes": 0.0, "baseline_nfes": 0.0}
+            )
+            agg["requests"] += 1
+            agg["nfes"] += r.nfes
+            agg["baseline_nfes"] += r.baseline_nfes
+        for agg in policy_savings.values():
+            base = agg["baseline_nfes"]
+            agg["mean_savings_pct"] = (
+                100.0 * (1.0 - agg["nfes"] / base) if base > 0 else 0.0
+            )
         return {
             "requests": {
                 str(r.rid): {
@@ -204,6 +222,7 @@ class ServingTelemetry:
                     "max_new_tokens": r.max_new_tokens,
                     "guided": r.guided,
                     "linear": r.linear,
+                    "policy": r.policy,
                     "submit_step": r.submit_step,
                     "admit_step": r.admit_step,
                     "crossed_step": r.crossed_step,
@@ -238,6 +257,7 @@ class ServingTelemetry:
                 # evaluation with a 0-NFE affine extrapolation while keeping
                 # guidance applied — the lane's realized NFE saving.
                 "extrapolated_uncond": lane_steps["linear"],
+                "policy_savings": policy_savings,
                 "mean_savings_pct": (
                     100.0 * (1.0 - nfes_total_guided(guided_done) / base_total)
                     if base_total > 0

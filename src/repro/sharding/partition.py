@@ -307,6 +307,19 @@ LANE_FIELD_AXES: dict = {
     "frozen": ("slots",),
     "warm": ("slots",),
     "linear_opt": ("slots",),
+    # guidance-policy registry (DESIGN.md §13)
+    "policy_id": ("slots",),
+}
+
+# Per-slot policy-state leaves (the guided lane's ``pstate`` dict; keys
+# declared in core/policies.PSTATE_SPECS — kept literal here so the
+# sharding layer stays import-light; consistency is pinned in
+# tests/test_policy_registry.py).  The cached guidance delta is a logits-
+# shaped tensor, so its vocab axis shards on "model" like every other
+# score buffer.
+PSTATE_KEY_AXES: dict = {
+    "delta": ("slots", None, "vocab"),
+    "gap0": ("slots",),
 }
 
 CACHE_KEY_AXES: dict = {
@@ -394,6 +407,11 @@ def _map_lane_leaves(fn, state):
             kw[name] = jax.tree_util.tree_map_with_path(
                 lambda p, x: fn(_cache_leaf_axes(p, x.ndim), x), v
             )
+        elif name == "pstate":
+            kw[name] = {
+                k: fn(PSTATE_KEY_AXES.get(k, ("slots",)), x)
+                for k, x in v.items()
+            }
         else:
             kw[name] = fn(LANE_FIELD_AXES.get(name, ("slots",)), v)
     return type(state)(**kw)

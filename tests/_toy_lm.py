@@ -160,3 +160,67 @@ def run_ladder_case(reqs, arrivals, *, max_slots, gamma_bar=0.5, scale=1.5,
             oracle = GuidedEngine(api, params, ec).generate([r])["tokens"][0]
         np.testing.assert_array_equal(done[rid]["tokens"], oracle)
     return bat, done
+
+
+def run_policy_case(reqs, arrivals, *, max_slots, gamma_bar=0.5, scale=1.5,
+                    mesh=None, horizon=1, async_fetch=None):
+    """Run a (possibly policy-mixed) workload through the batcher and assert
+    the registry invariants that must hold for ANY registered policy:
+
+      * every request completes with exactly its own budget;
+      * NFE ledger conservation: device == host-expected == sum per-request
+        (each policy prices its own guided steps — compress's deferred
+        unconditional refresh must stay mirrored on the host);
+      * lane transitions are monotone on the policy's own ``lane_graph``;
+      * one step executable per (lane, bucket) — no per-policy retraces;
+      * B=1 eager oracle parity (``policy_generate``): tokens AND the
+        per-request NFE ledger must match the batched run bit-for-bit.
+
+    Returns (batcher, done) for extra case-specific asserts.
+    """
+    from repro.core.policies import get_policy
+    from repro.serving import (
+        BatcherConfig,
+        EngineConfig,
+        StepBatcher,
+        policy_generate,
+    )
+
+    api, params = toy_serving()
+    ec = EngineConfig(scale=scale, gamma_bar=gamma_bar, max_batch=max_slots)
+    bat = StepBatcher(
+        api, params, ec,
+        BatcherConfig(
+            max_slots=max_slots, horizon=horizon, async_fetch=async_fetch
+        ),
+        coeffs=toy_coeffs(), mesh=mesh,
+    )
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, arrivals)]
+    done = bat.run()
+    assert set(done) == set(rids)
+
+    t = bat.report()["totals"]
+    assert t["nfes_device"] == t["nfes_expected"], (
+        t["nfes_device"], t["nfes_expected"])
+    assert t["nfes_device"] == sum(d["nfes"] for d in done.values())
+
+    for r, rid in zip(reqs, rids):
+        assert len(done[rid]["tokens"]) == r.max_new_tokens
+        graph = list(get_policy(r.policy).lane_graph)
+        hist = bat.lane_history[rid]
+        ranks = [graph.index(l) for l in hist]
+        assert ranks == sorted(set(ranks)), (
+            f"non-monotone {r.policy} ladder: {hist}")
+
+    for lane, counts in bat.compile_counts.items():
+        for cap, n in counts.items():
+            assert n == 1, f"{lane} lane retraced at capacity {cap}: {n}"
+
+    for r, rid in zip(reqs, rids):
+        if not r.guided or r.linear:
+            continue
+        oracle = policy_generate(api, params, r, ec)
+        np.testing.assert_array_equal(done[rid]["tokens"], oracle["tokens"])
+        assert done[rid]["nfes"] == oracle["nfes"], (
+            r.policy, done[rid]["nfes"], oracle["nfes"])
+    return bat, done

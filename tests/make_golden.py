@@ -157,18 +157,73 @@ def run_three_lane_case(coeffs, mesh=None, horizon=1):
     }
 
 
-def main():
-    coeffs = fit_golden_coeffs()
-    fixture = {
-        "engine": run_engine_case(),
-        "batcher": run_batcher_case(),
-        "coeffs": {"K": coeffs.K, "beta": coeffs.beta.tolist()},
-        "three_lane": run_three_lane_case(coeffs),
+def run_policy_case(policy, mesh=None, horizon=1):
+    """Per-policy churn under a fixed seed: one instant-crosser, one
+    never-crossing request (``gamma_bar=2.0``, exercising compress's
+    refresh cadence / online_ag's gap watermark to the end of its budget)
+    and a short late arrival forcing slot reuse.  Stored per policy id
+    under ``fixture["policies"]`` and locked by test_golden.py."""
+    from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
+
+    cfg, api, params = golden_model()
+    p = _prompts(24, [6, 5, 4])
+    reqs = [
+        Request(prompt=p[0], max_new_tokens=12, policy=policy),
+        Request(prompt=p[1], max_new_tokens=8, gamma_bar=2.0, policy=policy),
+        Request(prompt=p[2], max_new_tokens=6, policy=policy),
+    ]
+    ec = EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
+    bat = StepBatcher(
+        api, params, ec,
+        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon), mesh=mesh,
+    )
+    rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]
+    done = bat.run()
+    t = bat.report()["totals"]
+    return {
+        "requests": _batcher_record(bat, done, rids),
+        "lane_steps": t["lane_steps"],
+        "nfes_device": t["nfes_device"],
     }
+
+
+def main(argv=None):
+    import argparse
+
+    from repro.core.policies import policy_names
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--policy", choices=list(policy_names()), default=None,
+        help="regenerate only this policy's fixture section "
+             "(default: regenerate everything)",
+    )
+    args = ap.parse_args(argv)
+
+    fixture = {}
+    if os.path.exists(FIXTURE):
+        with open(FIXTURE) as f:
+            fixture = json.load(f)
+
+    if args.policy is None:
+        coeffs = fit_golden_coeffs()
+        fixture.update(
+            engine=run_engine_case(),
+            batcher=run_batcher_case(),
+            coeffs={"K": coeffs.K, "beta": coeffs.beta.tolist()},
+            three_lane=run_three_lane_case(coeffs),
+        )
+        policies = list(policy_names())
+    else:
+        policies = [args.policy]
+    fixture.setdefault("policies", {})
+    for pid in policies:
+        fixture["policies"][pid] = run_policy_case(pid)
+
     os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
     with open(FIXTURE, "w") as f:
         json.dump(fixture, f, indent=2, sort_keys=True)
-    print(f"wrote {FIXTURE}")
+    print(f"wrote {FIXTURE} (policies: {', '.join(policies)})")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from tests.make_golden import (
     fit_golden_coeffs,
     run_batcher_case,
     run_engine_case,
+    run_policy_case,
     run_three_lane_case,
 )
 
@@ -28,20 +29,41 @@ def golden():
         return json.load(f)
 
 
-def _check_requests(got, want):
-    assert set(got) == set(want)
-    for rid, g in got.items():
-        w = want[rid]
-        np.testing.assert_array_equal(
-            np.asarray(g["tokens"]), np.asarray(w["tokens"]),
-            err_msg=f"request {rid} token drift",
-        )
-        assert g["nfes"] == w["nfes"], f"request {rid} NFE ledger drift"
+def _diff_requests(got, want):
+    """Structured divergence report: instead of a bare array mismatch,
+    name the first divergent decode step and token, and every drifted
+    ledger/lifecycle field, per request — so a golden failure reads as
+    \"where the decode path forked\", not a numpy dump."""
+    lines = []
+    for rid in sorted(set(got) | set(want), key=str):
+        if rid not in got or rid not in want:
+            lines.append(f"request {rid}: missing from "
+                         f"{'run' if rid not in got else 'fixture'}")
+            continue
+        g, w = got[rid], want[rid]
+        gt, wt = np.asarray(g["tokens"]), np.asarray(w["tokens"])
+        if gt.shape != wt.shape:
+            lines.append(
+                f"request {rid}: token count {gt.shape} != {wt.shape}")
+        elif not np.array_equal(gt, wt):
+            step = int(np.argmax(gt != wt))
+            lines.append(
+                f"request {rid}: first divergent token at step {step}: "
+                f"got {gt[step]} != want {wt[step]}")
         for field in (
-            "lane_history", "admit_step", "crossed_step", "linear_step",
-            "migrated_step", "complete_step",
+            "nfes", "lane_history", "admit_step", "crossed_step",
+            "linear_step", "migrated_step", "complete_step",
         ):
-            assert g[field] == w[field], (rid, field, g[field], w[field])
+            if g[field] != w[field]:
+                lines.append(
+                    f"request {rid}: ledger field {field!r}: "
+                    f"got {g[field]} != want {w[field]}")
+    return lines
+
+
+def _check_requests(got, want):
+    diff = _diff_requests(got, want)
+    assert not diff, "golden drift:\n  " + "\n  ".join(diff)
 
 
 def test_engine_tokens_and_gammas_locked(golden):
@@ -83,6 +105,20 @@ def test_batcher_three_lane_locked(golden):
     histories = [r["lane_history"] for r in got["requests"].values()]
     assert ["guided", "linear", "cond"] in histories, histories
     assert ["guided", "linear"] in histories, histories
+
+
+@pytest.mark.parametrize("policy", ["default", "compress", "online_ag"])
+def test_policy_fixture_locked(golden, policy):
+    """Per-policy regression lock (tests/make_golden.py --policy <id>):
+    seeded batcher churn under each registered guidance policy must
+    reproduce its checked-in tokens, NFE ledgers and lifecycle steps
+    bit-exactly — compress's refresh cadence and online_ag's adaptive
+    crossing are pinned alongside the default ladder."""
+    got = run_policy_case(policy)
+    want = golden["policies"][policy]
+    _check_requests(got["requests"], want["requests"])
+    assert got["lane_steps"] == want["lane_steps"]
+    assert got["nfes_device"] == want["nfes_device"]
 
 
 def test_golden_coeffs_refit_is_close(golden):
