@@ -11,9 +11,14 @@ step-latency percentiles.
 Each run APPENDS a timestamped entry to the ``history`` list in
 ``BENCH_serving.json`` (a legacy single-snapshot file is migrated in
 place), so the serving perf trajectory accumulates across commits
-(EXPERIMENTS.md).  ``--smoke`` additionally fails if realized three-lane
-savings regress more than ``REGRESSION_PTS`` vs the previous comparable
-entry — the serving-smoke CI job's gate.
+(EXPERIMENTS.md).  Entries carry the steady-state step-latency
+percentiles and the TTFT / time-per-output-token percentiles of the
+headline three-lane point under ``perf`` (DESIGN.md §14).  ``--smoke``
+additionally fails if realized three-lane savings regress more than
+``REGRESSION_PTS`` vs the previous comparable entry — the serving-smoke
+CI job's gate — and measures the observability layer's overhead
+(obs-on vs obs-off steady-state throughput, best-of-2 each, gated at
+5%; recorded as ``perf.obs_overhead_pct``).
 
 Each run also records per-policy points (``--policy``, DESIGN.md §13):
 the guided subset of the same workload served under each registered
@@ -362,6 +367,55 @@ def main(argv=None):
             }
         policy_points[pid] = point
 
+    # Obs-overhead point (DESIGN.md §14): the observability layer is
+    # always-on in production serving, so its cost must stay in the noise.
+    # Run the two-lane workload with obs fully on (strict monitors, live
+    # registry + periodic flusher, bounded trace retention) and with
+    # monitors/flushers off, best-of-2 each, and compare STEADY-STATE
+    # decode substeps per second — warmup (compiling) rounds excluded, so
+    # the ratio measures per-round obs work rather than jit compile noise.
+    # (Substeps/sec is proportional to tokens/sec here: obs never changes
+    # scheduling, so both modes decode the identical rounds.)
+    obs_point = None
+    if args.smoke:
+        import tempfile
+
+        from repro.obs import MetricsFlusher, ObsConfig, write_jsonl
+
+        def run_obs_mode(obs_on: bool) -> float:
+            b = StepBatcher(
+                api, params, ec, BatcherConfig(max_slots=args.max_slots),
+                obs=ObsConfig(monitors=obs_on, strict=obs_on),
+            )
+            tdir = tempfile.mkdtemp() if obs_on else None
+            if obs_on:
+                b.bus.subscribe(MetricsFlusher(
+                    b.telemetry.registry,
+                    os.path.join(tdir, "metrics.json"), every=4,
+                ))
+            for r, a in zip(reqs, arrivals):
+                b.submit(r, arrival_step=a)
+            b.run()
+            if obs_on:  # export after the run (not part of round cost)
+                write_jsonl(b.bus.events(), os.path.join(tdir, "trace.jsonl"))
+            tel = b.telemetry
+            substeps = secs = 0.0
+            for o, dt in zip(tel.step_occupancy, tel.step_latency_s):
+                if not o["warmup"]:
+                    substeps += o["steps"]
+                    secs += dt
+            return substeps / secs if secs > 0 else 0.0
+
+        sps_on = max(run_obs_mode(True) for _ in range(2))
+        sps_off = max(run_obs_mode(False) for _ in range(2))
+        obs_point = {
+            "steady_steps_per_s_obs_on": sps_on,
+            "steady_steps_per_s_obs_off": sps_off,
+            "overhead_pct": (
+                100.0 * (1.0 - sps_on / sps_off) if sps_off > 0 else 0.0
+            ),
+        }
+
     print(f"# serving bench: {cfg.name}, {len(reqs)} requests "
           f"({len(guided_reqs)} guided), max_slots={args.max_slots}, "
           f"gamma_bar={gamma_bar}, K={args.linear_window} (fit MSE {fit_mse:.4g})"
@@ -385,6 +439,10 @@ def main(argv=None):
               f"{t3h1['dispatches_per_token'] / t3h['dispatches_per_token']:.2f}x")
     for pid, point in policy_points.items():
         print(f"policy_{pid}_mean_savings_pct,{point['mean_savings_pct']:.2f}")
+    print(f"three_lane_ttft_ms_p50,{t3['ttft_ms']['p50']:.2f}")
+    print(f"three_lane_tpot_ms_p50,{t3['tpot_ms']['p50']:.2f}")
+    if obs_point is not None:
+        print(f"obs_overhead_pct,{obs_point['overhead_pct']:.2f}")
     print(f"nfe_ledger,{t['nfes_device']:.0f},expected,{t['nfes_expected']:.0f}")
     print(f"nfe_ledger_three_lane,{t3['nfes_device']:.0f},"
           f"expected,{t3['nfes_expected']:.0f}")
@@ -411,6 +469,11 @@ def main(argv=None):
         "perf": {
             "tokens_per_s": t3["tokens_per_sec"],
             "dispatches_per_token": t3["dispatches_per_token"],
+            # steady-state latency + streaming-SLO percentiles of the
+            # headline three-lane point (DESIGN.md §14)
+            "step_latency_ms": t3["step_latency_ms"],
+            "ttft_ms": t3["ttft_ms"],
+            "tpot_ms": t3["tpot_ms"],
         },
         "round_scheduler": round_stats,
         "step_batcher": rep,
@@ -430,6 +493,9 @@ def main(argv=None):
                 else 0.0
             ),
         }
+    if obs_point is not None:
+        entry["perf"]["obs"] = obs_point
+        entry["perf"]["obs_overhead_pct"] = obs_point["overhead_pct"]
     if rep3s is not None:
         entry["three_lane_sharded"] = rep3s
     history = load_history(args.out)
@@ -487,6 +553,19 @@ def main(argv=None):
                 f"{policy_points['compress']['mean_savings_pct']:.2f} vs "
                 f"{t3['mean_savings_pct']:.2f}"
             )
+        # obs-overhead gate (DESIGN.md §14): always-on observability must
+        # cost <= 5% of steady-state throughput (best-of-2 per mode)
+        assert obs_point is not None
+        assert (
+            obs_point["steady_steps_per_s_obs_on"]
+            >= 0.95 * obs_point["steady_steps_per_s_obs_off"]
+        ), (
+            f"obs-enabled throughput regressed "
+            f"{obs_point['overhead_pct']:.2f}% vs obs-off "
+            f"({obs_point['steady_steps_per_s_obs_on']:.1f} vs "
+            f"{obs_point['steady_steps_per_s_obs_off']:.1f} steady "
+            f"substeps/s; budget is 5%)"
+        )
         if rep3h is not None and args.horizon >= 8:
             # the perf-smoke gate (CI): horizon fusing must decouple the
             # dispatch rate from the token rate — >=4x fewer device

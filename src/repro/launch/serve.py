@@ -148,6 +148,36 @@ def main():
                          "a per-request online gap estimate.  Non-default "
                          "policies imply --continuous and disable "
                          "--linear")
+    obs = ap.add_argument_group(
+        "observability (DESIGN.md §14; all imply --continuous)")
+    obs.add_argument("--trace", default=None, metavar="PATH.jsonl",
+                     help="export the run's structured event stream "
+                          "(lifecycle, rounds, compiles, monitor verdicts) "
+                          "as JSON-lines")
+    obs.add_argument("--trace-chrome", default=None, metavar="PATH.json",
+                     help="export the event stream in Chrome trace_event "
+                          "format — load it at https://ui.perfetto.dev")
+    obs.add_argument("--metrics-json", default=None, metavar="PATH.json",
+                     help="live metrics snapshot file (counters, gauges, "
+                          "p50/p90/p99 step latency, TTFT/TPOT), rewritten "
+                          "every --metrics-interval rounds and once at exit")
+    obs.add_argument("--metrics-interval", type=int, default=16,
+                     help="rounds between --metrics-json flushes")
+    obs.add_argument("--strict-monitors", action="store_true",
+                     help="raise at the FIRST round that violates a serving "
+                          "invariant (NFE-ledger conservation, lane-ladder "
+                          "monotonicity, capacity sanity) instead of "
+                          "recording and continuing")
+    obs.add_argument("--no-monitors", action="store_true",
+                     help="disable the per-round invariant monitors "
+                          "entirely (obs-off A/B baseline)")
+    obs.add_argument("--profile", default=None, metavar="DIR",
+                     help="capture a jax.profiler trace of a steady-state "
+                          "round window under DIR (TensorBoard/Perfetto)")
+    obs.add_argument("--profile-start", type=int, default=4,
+                     help="first round of the --profile capture window")
+    obs.add_argument("--profile-rounds", type=int, default=8,
+                     help="rounds the --profile capture window covers")
     args = ap.parse_args()
     if args.policy != "default" and args.linear:
         raise SystemExit("--policy compress/online_ag runs guided->cond; "
@@ -181,8 +211,11 @@ def main():
         for _ in range(args.requests)
     ]
 
+    obs_on = bool(args.trace or args.trace_chrome or args.metrics_json
+                  or args.strict_monitors or args.profile)
     if (args.continuous or args.linear or args.horizon > 1
-            or args.policy != "default"):
+            or args.policy != "default" or obs_on):
+        from repro.obs import MetricsFlusher, ObsConfig, write_chrome, write_jsonl
         from repro.serving import BatcherConfig, StepBatcher
 
         coeffs = (
@@ -194,11 +227,36 @@ def main():
             api, params, ec,
             BatcherConfig(max_slots=args.requests, horizon=args.horizon),
             coeffs=coeffs, mesh=mesh,
+            obs=ObsConfig(
+                monitors=not args.no_monitors,
+                strict=args.strict_monitors,
+                profile_dir=args.profile,
+                profile_start_round=args.profile_start,
+                profile_rounds=args.profile_rounds,
+            ),
         )
+        flusher = None
+        if args.metrics_json:
+            flusher = MetricsFlusher(
+                bat.telemetry.registry, args.metrics_json,
+                every=args.metrics_interval,
+            )
+            bat.bus.subscribe(flusher)
         for i, r in enumerate(reqs):
             bat.submit(r, arrival_step=args.arrival_stride * i)
         done = bat.run()
-        t = bat.report()["totals"]
+        if args.trace:
+            write_jsonl(bat.bus.events(), args.trace)
+            print(f"[serve] trace (JSONL, {len(bat.bus)} events) -> {args.trace}")
+        if args.trace_chrome:
+            write_chrome(bat.bus.events(), args.trace_chrome)
+            print(f"[serve] trace (Chrome/Perfetto) -> {args.trace_chrome}")
+        if flusher is not None:
+            flusher.flush()
+            print(f"[serve] metrics snapshot -> {args.metrics_json} "
+                  f"({flusher.flushes} flushes)")
+        rep = bat.report()
+        t = rep["totals"]
         lanes = "three-lane" if args.linear else "two-lane"
         if args.policy != "default":
             lanes = f"policy={args.policy}"
@@ -224,6 +282,12 @@ def main():
               f"{t['decode_substeps']} decode substeps)")
         print(f"  NFE ledger: device {t['nfes_device']:.0f} == "
               f"expected {t['nfes_expected']:.0f}")
+        mon = rep.get("monitors")
+        if mon is not None:
+            print(f"  invariant monitors: {mon['rounds_checked']} rounds "
+                  f"checked, {len(mon['violations'])} violations")
+        if args.profile and bat.profiler.captured and not bat.profiler.error:
+            print(f"  profiler capture -> {args.profile}")
         return
 
     eng = GuidedEngine(api, params, ec, mesh=mesh)

@@ -1,0 +1,170 @@
+"""Structured trace events and the bounded in-process event bus.
+
+Every observable transition in the serving stack — request lifecycle
+(submit -> admit -> cross -> linear -> migrate -> complete), batcher
+rounds, executable compiles, monitor verdicts, profiler windows — is one
+typed :class:`Event` published on an :class:`EventBus`.  The bus is the
+single spine of the observability layer (DESIGN.md §14):
+
+* ``ServingTelemetry`` subscribes and folds events into its request
+  records and the live metrics registry, so the end-of-run ``report()``
+  is a *view* over the same stream everything else sees;
+* exporters (obs/trace.py) drain the bounded ring into JSON-lines or
+  Chrome ``trace_event`` format for Perfetto;
+* monitors and profiler hooks publish their own events back onto the
+  bus, so a trace shows *when* an invariant was checked or a capture
+  window opened, interleaved with the rounds it covered.
+
+The bus is deliberately synchronous and single-threaded (the batcher's
+host loop is), bounded (a ring of ``capacity`` events with an eviction
+counter — a week-long serve cannot OOM the host through its own
+telemetry), and deterministic: sequence numbers are assigned in publish
+order and subscribers run synchronously in subscription order, so two
+runs with the same injectable clock produce byte-identical streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+# Event categories (``Event.cat``) — the Chrome-trace exporter maps each
+# onto its own named track so Perfetto renders lifecycle, rounds,
+# compiles, monitors and profiler windows as separate lanes.
+CAT_REQUEST = "request"
+CAT_ROUND = "round"
+CAT_COMPILE = "compile"
+CAT_MONITOR = "monitor"
+CAT_PROFILE = "profile"
+CATEGORIES = (CAT_REQUEST, CAT_ROUND, CAT_COMPILE, CAT_MONITOR, CAT_PROFILE)
+
+# Event kinds: a ``span`` covers a duration (``dur`` seconds, ending at
+# ``ts``), an ``instant`` is a point, a ``counter`` samples a value series.
+KIND_SPAN = "span"
+KIND_INSTANT = "instant"
+KIND_COUNTER = "counter"
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One structured trace event.
+
+    ``ts`` is the bus clock at publish time (seconds); for spans that is
+    the END of the covered interval and ``dur`` its length — the batcher
+    publishes a round's event when the round finishes, which is also the
+    only moment all of its attributes are known.  ``args`` must stay
+    JSON-serializable (ints/floats/strs/bools and containers thereof):
+    the JSONL exporter round-trips events through ``json`` verbatim.
+    """
+
+    seq: int
+    ts: float
+    name: str
+    cat: str = CAT_ROUND
+    kind: str = KIND_INSTANT
+    dur: float = 0.0
+    args: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {
+            "seq": self.seq,
+            "ts": self.ts,
+            "name": self.name,
+            "cat": self.cat,
+            "kind": self.kind,
+            "dur": self.dur,
+            "args": self.args,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "Event":
+        return Event(
+            seq=int(d["seq"]),
+            ts=float(d["ts"]),
+            name=str(d["name"]),
+            cat=str(d.get("cat", CAT_ROUND)),
+            kind=str(d.get("kind", KIND_INSTANT)),
+            dur=float(d.get("dur", 0.0)),
+            args=dict(d.get("args", {})),
+        )
+
+
+class EventBus:
+    """Bounded, ordered, synchronous in-process event bus.
+
+    ``capacity`` bounds the retained ring (oldest events are evicted and
+    counted in ``dropped``); subscribers see EVERY published event —
+    boundedness applies to retention, not delivery, so the telemetry
+    consumer never misses a lifecycle transition even when the ring has
+    wrapped many times over a long serve.
+    """
+
+    def __init__(
+        self,
+        capacity: int = 65536,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        assert capacity >= 1, f"bus capacity must be >= 1, got {capacity}"
+        self.capacity = capacity
+        self.clock = clock
+        self._ring: deque = deque(maxlen=capacity)
+        self._subs: List[Callable[[Event], None]] = []
+        self._seq = 0
+        self.dropped = 0  # events evicted from the ring (ever)
+
+    # -- publishing ----------------------------------------------------------
+
+    def publish(
+        self,
+        name: str,
+        *,
+        cat: str = CAT_ROUND,
+        kind: str = KIND_INSTANT,
+        dur: float = 0.0,
+        ts: Optional[float] = None,
+        **args,
+    ) -> Event:
+        """Append one event (sampling the bus clock unless ``ts`` is
+        given) and deliver it synchronously to every subscriber."""
+        ev = Event(
+            seq=self._seq,
+            ts=self.clock() if ts is None else float(ts),
+            name=name,
+            cat=cat,
+            kind=kind,
+            dur=float(dur),
+            args=args,
+        )
+        self._seq += 1
+        if len(self._ring) == self.capacity:
+            self.dropped += 1
+        self._ring.append(ev)
+        for fn in self._subs:
+            fn(ev)
+        return ev
+
+    # -- consumption ---------------------------------------------------------
+
+    def subscribe(self, fn: Callable[[Event], None]) -> None:
+        """Register a synchronous consumer; called for every later
+        publish, in subscription order."""
+        self._subs.append(fn)
+
+    def events(self) -> Tuple[Event, ...]:
+        """The retained ring, oldest first (seq strictly increasing)."""
+        return tuple(self._ring)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    @property
+    def published(self) -> int:
+        """Total events ever published (retained + dropped)."""
+        return self._seq
+
+    def counts_by_name(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for ev in self._ring:
+            out[ev.name] = out.get(ev.name, 0) + 1
+        return out

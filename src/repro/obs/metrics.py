@@ -1,0 +1,205 @@
+"""Live metrics registry: counters, gauges, streaming-histogram percentiles.
+
+The registry is the mid-run complement to ``ServingTelemetry.report()``:
+the batcher's event stream updates it incrementally every round, so
+``launch/serve.py --metrics-json`` can snapshot p50/p90/p99 step latency,
+per-request TTFT / time-per-output-token, per-lane occupancy and
+per-policy realized savings while the run is still going — instead of
+learning about a latency pathology only from the post-mortem report.
+
+Three instrument types:
+
+* :class:`Counter` — monotone float accumulator (tokens out, NFEs,
+  device dispatches, compile seconds, monitor violations);
+* :class:`Gauge` — last-written value (per-lane active/capacity,
+  occupancy);
+* :class:`Histogram` — streaming distribution with percentile queries.
+  Samples are kept exactly up to ``max_samples``; past that the sample
+  set is deterministically decimated (sorted, every other sample kept,
+  per-sample weight doubled), which preserves quantiles to ~1/n accuracy
+  while bounding memory — a week of rounds cannot OOM the host.  Short
+  runs (every test and golden workload) stay in the exact regime, which
+  is what makes the registry-vs-``report()`` equivalence check exact.
+
+``MetricsRegistry.snapshot()`` returns one JSON-able dict;
+:class:`MetricsFlusher` subscribes to the event bus and rewrites a
+snapshot file every N rounds (the ``--metrics-json`` periodic flush).
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class Counter:
+    """Monotone accumulator (floats allowed: NFEs, seconds)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        assert v >= 0, f"counters are monotone; got increment {v}"
+        self.value += v
+
+
+class Gauge:
+    """Last-written value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Streaming distribution with deterministic bounded memory.
+
+    Exact while the observation count stays within ``max_samples``; on
+    overflow the sorted sample set is halved (every other element) and
+    the per-sample weight doubles, so ``percentile`` stays a plain
+    ``np.percentile`` over equally-weighted samples at ~1/n quantile
+    error.  count/sum/min/max are always exact.
+    """
+
+    def __init__(self, max_samples: int = 16384):
+        assert max_samples >= 2
+        self.max_samples = max_samples
+        self._samples: List[float] = []
+        self.weight = 1  # observations represented per retained sample
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        self._samples.append(v)
+        if len(self._samples) > self.max_samples:
+            self._samples = sorted(self._samples)[::2]
+            self.weight *= 2
+
+    @property
+    def exact(self) -> bool:
+        return self.weight == 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self._samples, np.float64), q))
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "min": self.min if self.count else 0.0,
+            "max": self.max if self.count else 0.0,
+            "mean": self.mean,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+            "exact": self.exact,
+        }
+
+
+class MetricsRegistry:
+    """Name -> instrument, get-or-create; one flat namespace.
+
+    Naming convention (DESIGN.md §14): dotted paths, lane/policy/bucket
+    qualifiers as path segments — ``rounds``, ``tokens.out``,
+    ``lane.guided.active``, ``compile.guided.b2.s``,
+    ``policy.compress.guided_slot_steps``, ``request.ttft_ms``.
+    """
+
+    def __init__(self, hist_max_samples: int = 16384):
+        self.hist_max_samples = hist_max_samples
+        self.counters: Dict[str, Counter] = {}
+        self.gauges: Dict[str, Gauge] = {}
+        self.histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self.counters.get(name)
+        if c is None:
+            c = self.counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self.gauges.get(name)
+        if g is None:
+            g = self.gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(self.hist_max_samples)
+        return h
+
+    def snapshot(self) -> dict:
+        """One JSON-able view of every instrument, sorted by name."""
+        return {
+            "counters": {k: self.counters[k].value for k in sorted(self.counters)},
+            "gauges": {k: self.gauges[k].value for k in sorted(self.gauges)},
+            "histograms": {
+                k: self.histograms[k].snapshot() for k in sorted(self.histograms)
+            },
+        }
+
+    def to_json(self, path: str) -> dict:
+        snap = self.snapshot()
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+        return snap
+
+
+class MetricsFlusher:
+    """Periodic mid-run snapshot writer (``--metrics-json``).
+
+    Subscribe it to the bus; every ``every`` round events it rewrites
+    ``path`` with the current registry snapshot (atomic enough for a
+    tail -f / dashboard poller: one ``open(..., "w")`` per flush).  Call
+    :meth:`flush` once after the run for the final state.
+    """
+
+    def __init__(
+        self,
+        registry: MetricsRegistry,
+        path: str,
+        every: int = 16,
+        on_flush: Optional[Callable[[dict], None]] = None,
+    ):
+        assert every >= 1
+        self.registry = registry
+        self.path = path
+        self.every = every
+        self.on_flush = on_flush
+        self.rounds_seen = 0
+        self.flushes = 0
+
+    def __call__(self, event) -> None:  # EventBus subscriber
+        if event.name != "round":
+            return
+        self.rounds_seen += 1
+        if self.rounds_seen % self.every == 0:
+            self.flush()
+
+    def flush(self) -> dict:
+        snap = self.registry.to_json(self.path)
+        self.flushes += 1
+        if self.on_flush is not None:
+            self.on_flush(snap)
+        return snap

@@ -1,0 +1,286 @@
+"""Online invariant monitors: the post-hoc serving checks, run per round.
+
+Before this module the serving stack's core invariants — NFE-ledger
+conservation, lane-ladder monotonicity, capacity sanity — were asserted
+once at the end of a run (``report()["totals"]["nfes_device"] ==
+["nfes_expected"]`` in benches and tests).  A drift therefore surfaced
+only after the workload finished, with no pointer to the offending
+request, and never surfaced at all if the run crashed first.  Monitors
+run the same checks incrementally on every batcher round over host-side
+mirrors (no extra device sync: the batcher already fetches each round's
+tokens/ledgers), and in ``strict`` mode raise :class:`MonitorViolation`
+at the FIRST violating round with the offending rid/slot/lane attached.
+
+Checked invariants (DESIGN.md §14):
+
+* **ledger conservation** — per request, the device NFE ledger read back
+  this round equals the host-expected price accumulated from the
+  request's policy (`nfes_device[rid] == nfes_expected[rid]`); the sum
+  over requests is exactly the end-of-run totals check, now per round
+  and attributable;
+* **NFE monotonicity** — a request's device ledger never decreases
+  round-over-round (a decrease means a slot was recycled without its
+  tenant completing, or a migration dropped ledger state);
+* **lane-ladder monotonicity** — every request's lane history is a
+  strictly rank-increasing walk of guided -> linear -> cond, and a
+  request currently resident in a lane must have that lane as the last
+  entry of its history;
+* **capacity sanity** — per-lane active <= capacity, capacity is 0 or a
+  configured bucket, the slot map length matches capacity, no rid
+  occupies two lanes, and total active <= max_slots.
+
+Monitors see a :class:`RoundView` — a plain-data summary the batcher
+assembles from state it already tracks — so a monitor can never perturb
+the run it watches (the golden fixtures stay bit-identical with
+monitoring enabled, strict or not).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.obs.events import CAT_MONITOR, EventBus
+from repro.obs.metrics import MetricsRegistry
+
+# ladder rank shared with serving/batcher.py (kept here too so the obs
+# layer has no import edge into serving — serving imports obs, not back)
+LANE_ORDER = ("guided", "linear", "cond")
+
+# float tolerance for ledger comparisons: ledgers are small integers
+# stored in float32, so any real drift is >= 1.0
+LEDGER_ATOL = 1e-3
+
+
+class MonitorViolation(AssertionError):
+    """Strict-mode failure: carries the structured violation details."""
+
+    def __init__(self, violations: Sequence[dict]):
+        self.violations = list(violations)
+        lines = [
+            f"[{v['monitor']}] step {v.get('step')}: {v['message']}"
+            for v in self.violations
+        ]
+        super().__init__(
+            "serving invariant violated:\n  " + "\n  ".join(lines)
+        )
+
+
+@dataclasses.dataclass
+class LaneView:
+    """One lane's host bookkeeping at a round boundary."""
+
+    active: int
+    capacity: int
+    rids: Tuple[Optional[int], ...]
+
+
+@dataclasses.dataclass
+class RoundView:
+    """Everything the monitors need about one round, as plain data."""
+
+    step: int
+    lanes: Dict[str, LaneView]
+    buckets: Tuple[int, ...]
+    max_slots: int
+    # per-request host mirrors: device ledger as last read back, and the
+    # policy-priced expectation accumulated by the batcher
+    nfes_device: Mapping[int, float]
+    nfes_expected: Mapping[int, float]
+    lane_history: Mapping[int, Sequence[str]]
+
+    def locate(self, rid: int) -> Tuple[Optional[str], Optional[int]]:
+        """(lane, slot) currently holding ``rid``, or (None, None)."""
+        for name, lane in self.lanes.items():
+            if rid in lane.rids:
+                return name, lane.rids.index(rid)
+        return None, None
+
+
+class LedgerConservationMonitor:
+    """Per-request device-vs-expected NFE equality + ledger monotonicity."""
+
+    name = "ledger"
+
+    def __init__(self):
+        self._prev: Dict[int, float] = {}
+
+    def check(self, view: RoundView) -> List[dict]:
+        out = []
+        for rid, expected in view.nfes_expected.items():
+            device = view.nfes_device.get(rid)
+            if device is None:
+                continue  # not read back yet this round (e.g. idle lane)
+            lane, slot = view.locate(rid)
+            if abs(device - expected) > LEDGER_ATOL:
+                out.append(
+                    {
+                        "monitor": self.name,
+                        "step": view.step,
+                        "rid": rid,
+                        "lane": lane,
+                        "slot": slot,
+                        "message": (
+                            f"request {rid} (lane={lane}, slot={slot}): "
+                            f"device ledger {device} != expected {expected}"
+                        ),
+                    }
+                )
+            prev = self._prev.get(rid)
+            if prev is not None and device < prev - LEDGER_ATOL:
+                out.append(
+                    {
+                        "monitor": self.name,
+                        "step": view.step,
+                        "rid": rid,
+                        "lane": lane,
+                        "slot": slot,
+                        "message": (
+                            f"request {rid} (lane={lane}, slot={slot}): "
+                            f"NFE ledger decreased {prev} -> {device}"
+                        ),
+                    }
+                )
+            self._prev[rid] = device
+        return out
+
+
+class LaneLadderMonitor:
+    """Lane histories are strictly rank-increasing walks of the ladder,
+    and residency agrees with the last history entry."""
+
+    name = "ladder"
+
+    def check(self, view: RoundView) -> List[dict]:
+        out = []
+        for rid, hist in view.lane_history.items():
+            ranks = [LANE_ORDER.index(h) for h in hist]
+            if any(b <= a for a, b in zip(ranks, ranks[1:])):
+                out.append(
+                    {
+                        "monitor": self.name,
+                        "step": view.step,
+                        "rid": rid,
+                        "lane": hist[-1] if hist else None,
+                        "slot": None,
+                        "message": (
+                            f"request {rid}: non-monotone lane walk {list(hist)}"
+                        ),
+                    }
+                )
+            lane, slot = view.locate(rid)
+            if lane is not None and hist and hist[-1] != lane:
+                out.append(
+                    {
+                        "monitor": self.name,
+                        "step": view.step,
+                        "rid": rid,
+                        "lane": lane,
+                        "slot": slot,
+                        "message": (
+                            f"request {rid} resident in lane {lane!r} (slot "
+                            f"{slot}) but its history ends at {hist[-1]!r}"
+                        ),
+                    }
+                )
+        return out
+
+
+class CapacityMonitor:
+    """Occupancy/capacity sanity across the lane pool."""
+
+    name = "capacity"
+
+    def check(self, view: RoundView) -> List[dict]:
+        out = []
+        seen: Dict[int, str] = {}
+        total_active = 0
+        for name, lane in view.lanes.items():
+            active = sum(r is not None for r in lane.rids)
+            total_active += active
+            if len(lane.rids) != lane.capacity:
+                out.append(self._v(view, name, None,
+                                   f"lane {name}: slot map length "
+                                   f"{len(lane.rids)} != capacity "
+                                   f"{lane.capacity}"))
+            if active != lane.active:
+                out.append(self._v(view, name, None,
+                                   f"lane {name}: reported active "
+                                   f"{lane.active} != occupied slots "
+                                   f"{active}"))
+            if lane.active > lane.capacity:
+                out.append(self._v(view, name, None,
+                                   f"lane {name}: active {lane.active} > "
+                                   f"capacity {lane.capacity}"))
+            if lane.capacity and lane.capacity not in view.buckets:
+                out.append(self._v(view, name, None,
+                                   f"lane {name}: capacity {lane.capacity} "
+                                   f"is not a bucket {view.buckets}"))
+            for slot, rid in enumerate(lane.rids):
+                if rid is None:
+                    continue
+                if rid in seen:
+                    out.append(self._v(view, name, slot,
+                                       f"request {rid} occupies two lanes: "
+                                       f"{seen[rid]} and {name}"))
+                seen[rid] = name
+        if total_active > view.max_slots:
+            out.append(self._v(view, None, None,
+                               f"total active {total_active} > max_slots "
+                               f"{view.max_slots}"))
+        return out
+
+    def _v(self, view, lane, slot, message):
+        return {
+            "monitor": self.name,
+            "step": view.step,
+            "rid": None,
+            "lane": lane,
+            "slot": slot,
+            "message": message,
+        }
+
+
+DEFAULT_MONITORS = (LedgerConservationMonitor, LaneLadderMonitor, CapacityMonitor)
+
+
+class MonitorSuite:
+    """Runs every monitor each round; records violations on the bus and
+    registry, and in ``strict`` mode raises at the first violating round
+    (the run stops exactly where the invariant broke, not at EOF)."""
+
+    def __init__(
+        self,
+        strict: bool = False,
+        bus: Optional[EventBus] = None,
+        registry: Optional[MetricsRegistry] = None,
+        monitors: Optional[Sequence] = None,
+    ):
+        self.strict = strict
+        self.bus = bus
+        self.registry = registry
+        self.monitors = [
+            m() if isinstance(m, type) else m
+            for m in (DEFAULT_MONITORS if monitors is None else monitors)
+        ]
+        self.rounds_checked = 0
+        self.violations: List[dict] = []
+
+    def on_round(self, view: RoundView) -> List[dict]:
+        self.rounds_checked += 1
+        found: List[dict] = []
+        for m in self.monitors:
+            found.extend(m.check(view))
+        if self.registry is not None:
+            self.registry.counter("monitor.rounds_checked").inc()
+            if found:
+                self.registry.counter("monitor.violations").inc(len(found))
+        if self.bus is not None:
+            for v in found:
+                self.bus.publish(
+                    "violation", cat=CAT_MONITOR,
+                    **{k: val for k, val in v.items()},
+                )
+        self.violations.extend(found)
+        if self.strict and found:
+            raise MonitorViolation(found)
+        return found

@@ -1,0 +1,91 @@
+"""Profiler hooks: optional ``jax.profiler`` capture of a steady-state
+round window, driven by the batcher's round lifecycle.
+
+Profiling a serving run naively captures the compile storm at the front
+of the trace, which drowns the steady-state signal the capture was for.
+:class:`ProfilerHooks` arms a window instead: trace capture starts at
+round ``start_round`` (after the per-bucket executables have typically
+compiled) and stops ``num_rounds`` later, writing a TensorBoard/Perfetto
+-loadable trace under ``profile_dir``.  The open/close moments are also
+published as events on the bus, so the obs trace shows exactly which
+rounds the device profile covers.
+
+The hooks degrade to no-ops when ``profile_dir`` is unset or when
+``jax.profiler`` is unavailable/fails to start (e.g. a second concurrent
+capture) — profiling must never be able to take down a serve.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.events import CAT_PROFILE, EventBus
+
+
+class ProfilerHooks:
+    """Arms a [start_round, start_round + num_rounds) capture window."""
+
+    def __init__(
+        self,
+        profile_dir: Optional[str] = None,
+        start_round: int = 4,
+        num_rounds: int = 8,
+        bus: Optional[EventBus] = None,
+    ):
+        assert start_round >= 0 and num_rounds >= 1
+        self.profile_dir = profile_dir
+        self.start_round = start_round
+        self.num_rounds = num_rounds
+        self.bus = bus
+        self.active = False
+        self.captured = False  # one window per run
+        self.error: Optional[str] = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.profile_dir is not None
+
+    def _publish(self, name: str, **args) -> None:
+        if self.bus is not None:
+            self.bus.publish(name, cat=CAT_PROFILE, **args)
+
+    def on_round(self, round_idx: int) -> None:
+        """Called once per batcher round (before dispatch); opens/closes
+        the capture window at the configured boundaries."""
+        if not self.enabled or self.captured and not self.active:
+            return
+        if not self.active and round_idx >= self.start_round:
+            self._start(round_idx)
+        elif self.active and round_idx >= self.start_round + self.num_rounds:
+            self._stop(round_idx)
+
+    def close(self) -> None:
+        """Stop a still-open window (run ended inside it)."""
+        if self.active:
+            self._stop(None)
+
+    def _start(self, round_idx: int) -> None:
+        try:
+            import jax.profiler
+
+            jax.profiler.start_trace(self.profile_dir)
+        except Exception as e:  # profiling must never take down a serve
+            self.error = f"{type(e).__name__}: {e}"
+            self.captured = True  # don't retry every round
+            self._publish("profile.error", error=self.error)
+            return
+        self.active = True
+        self._publish(
+            "profile.start", round=round_idx, dir=self.profile_dir,
+            num_rounds=self.num_rounds,
+        )
+
+    def _stop(self, round_idx) -> None:
+        try:
+            import jax.profiler
+
+            jax.profiler.stop_trace()
+        except Exception as e:
+            self.error = f"{type(e).__name__}: {e}"
+        self.active = False
+        self.captured = True
+        self._publish("profile.stop", round=round_idx, error=self.error)

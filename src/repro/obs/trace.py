@@ -1,0 +1,133 @@
+"""Trace exporters: JSON-lines and Chrome ``trace_event`` format.
+
+Two serializations of the same event stream (obs/events.py):
+
+* **JSON-lines** — one ``Event.to_dict()`` per line, the archival and
+  machine-diffable form.  ``read_jsonl`` inverts ``write_jsonl`` exactly
+  (``Event`` is a frozen dataclass, so round-trip equality is plain
+  ``==``) — the obs test suite locks that property.
+* **Chrome trace_event** — the ``{"traceEvents": [...]}`` JSON that
+  chrome://tracing and https://ui.perfetto.dev load directly.  Spans
+  become complete events (``"ph": "X"``; our ``ts`` marks a span's END,
+  Chrome wants its start, so the exporter rebases by ``dur``), instants
+  become ``"ph": "i"``, counters ``"ph": "C"``; each event category gets
+  its own named thread track so a serving run renders as parallel lanes:
+  rounds, request lifecycle, compiles, monitors, profiler windows.
+
+Timestamps are exported in microseconds relative to the first event, so
+a Perfetto view starts at t=0 regardless of the host clock epoch.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+from repro.obs.events import (
+    CATEGORIES,
+    KIND_COUNTER,
+    KIND_SPAN,
+    Event,
+)
+
+
+def _jsonable(obj):
+    """numpy scalars/arrays sneak into event args from fetched device
+    buffers; normalize them so both exporters emit plain JSON."""
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"event arg of type {type(obj).__name__} is not JSON-serializable")
+
+
+# -- JSON-lines --------------------------------------------------------------
+
+
+def write_jsonl(events: Iterable[Event], path: str) -> int:
+    """One event per line, publish order; returns the number written."""
+    n = 0
+    with open(path, "w") as f:
+        for ev in events:
+            f.write(json.dumps(ev.to_dict(), default=_jsonable, sort_keys=True))
+            f.write("\n")
+            n += 1
+    return n
+
+
+def read_jsonl(path: str) -> List[Event]:
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(Event.from_dict(json.loads(line)))
+    return events
+
+
+# -- Chrome trace_event ------------------------------------------------------
+
+# one synthetic thread per category so Perfetto renders parallel tracks
+_TID = {cat: i + 1 for i, cat in enumerate(CATEGORIES)}
+_PID = 1
+
+
+def to_chrome(events: Sequence[Event]) -> dict:
+    """Chrome trace_event JSON for the given events (publish order)."""
+    t0 = min((ev.ts - ev.dur for ev in events), default=0.0)
+
+    def us(t: float) -> float:
+        return (t - t0) * 1e6
+
+    out: List[dict] = [
+        {
+            "ph": "M",
+            "pid": _PID,
+            "tid": 0,
+            "name": "process_name",
+            "args": {"name": "repro-serving"},
+        }
+    ]
+    for cat, tid in _TID.items():
+        out.append(
+            {
+                "ph": "M",
+                "pid": _PID,
+                "tid": tid,
+                "name": "thread_name",
+                "args": {"name": cat},
+            }
+        )
+    for ev in events:
+        tid = _TID.get(ev.cat, len(_TID) + 1)
+        base = {
+            "name": ev.name,
+            "cat": ev.cat,
+            "pid": _PID,
+            "tid": tid,
+        }
+        if ev.kind == KIND_SPAN:
+            # Event.ts marks the END of the span; Chrome wants the start.
+            base.update(ph="X", ts=us(ev.ts - ev.dur), dur=ev.dur * 1e6,
+                        args=ev.args)
+        elif ev.kind == KIND_COUNTER:
+            # counter args must be numeric series
+            base.update(ph="C", ts=us(ev.ts), args=ev.args)
+        else:
+            base.update(ph="i", ts=us(ev.ts), s="t", args=ev.args)
+        out.append(base)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_chrome(events: Sequence[Event], path: str) -> int:
+    """Write the Chrome trace JSON; load it in chrome://tracing or
+    https://ui.perfetto.dev.  Returns the number of trace events."""
+    trace = to_chrome(events)
+    with open(path, "w") as f:
+        json.dump(trace, f, default=_jsonable)
+    return len(trace["traceEvents"])

@@ -14,8 +14,10 @@ Layering (DESIGN.md §7, §12):
                   horizon-fused dispatch + async double-buffered host
                   sync at `BatcherConfig(horizon>1)`;
   telemetry     — NFE ledgers, latency, realized savings, dispatch
-                  economics (`ServingTelemetry`).
+                  economics (`ServingTelemetry`), folded from the obs
+                  layer's event bus (repro.obs, DESIGN.md §14).
 """
+from repro.obs import ObsConfig
 from repro.serving.batcher import BatcherConfig, StepBatcher
 from repro.serving.engine import (
     EngineConfig,
@@ -34,6 +36,7 @@ __all__ = [
     "ContinuousScheduler",
     "EngineConfig",
     "GuidedEngine",
+    "ObsConfig",
     "Request",
     "ServingTelemetry",
     "StepBatcher",

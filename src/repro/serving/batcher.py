@@ -81,6 +81,15 @@ import numpy as np
 from repro.core.executor import GuidanceExecutor
 from repro.core.linear_ag import WindowCoeffs
 from repro.core.policies import empty_pstate, registered_policies
+from repro.obs import (
+    CAT_COMPILE,
+    EventBus,
+    LaneView,
+    MonitorSuite,
+    ObsConfig,
+    ProfilerHooks,
+    RoundView,
+)
 from repro.serving.engine import EngineConfig, PrefillCache, Request, pad_prompts
 from repro.serving.guided_decode import (
     LaneState,
@@ -183,11 +192,46 @@ class StepBatcher:
         clock=time.perf_counter,
         coeffs: Optional[WindowCoeffs] = None,
         mesh=None,
+        obs: Optional[ObsConfig] = None,
     ):
         self.api = api
         self.config = config
         self.bc = batch_config or BatcherConfig(max_slots=config.max_batch)
-        self.telemetry = telemetry or ServingTelemetry(clock=clock)
+        # Observability spine (DESIGN.md §14): one event bus carries the
+        # full lifecycle/round/compile/monitor stream; telemetry consumes
+        # it, monitors check invariants each round over host mirrors, the
+        # profiler hooks arm an optional steady-state capture window.
+        # None of it touches device work or host lifecycle decisions —
+        # goldens are bit-identical with obs on (strict or not).
+        self.obs = obs or ObsConfig()
+        self.telemetry = telemetry or ServingTelemetry(
+            clock=clock,
+            bus=EventBus(capacity=self.obs.bus_capacity, clock=clock),
+        )
+        self.bus = self.telemetry.bus
+        self.monitors = (
+            MonitorSuite(
+                strict=self.obs.strict,
+                bus=self.bus,
+                registry=self.telemetry.registry,
+            )
+            if self.obs.monitors
+            else None
+        )
+        self.profiler = ProfilerHooks(
+            profile_dir=self.obs.profile_dir,
+            start_round=self.obs.profile_start_round,
+            num_rounds=self.obs.profile_rounds,
+            bus=self.bus,
+        )
+        self._round_idx = 0  # completed batcher rounds (profiler window key)
+        # per-request host mirrors of the device NFE ledger (monitors):
+        # _nfes_seen is the ledger as last read back; _expected_rid is the
+        # policy-priced expectation, accumulated with the SAME increments
+        # the aggregate nfes_expected sums — per-rid so a conservation
+        # break names its request.
+        self._nfes_seen: Dict[int, float] = {}
+        self._expected_rid: Dict[int, float] = {}
         self.clock = clock
         self.executor = GuidanceExecutor(backend=config.guidance_backend)
         # Sharded serving (DESIGN.md §8): params are placed ONCE per the
@@ -246,7 +290,13 @@ class StepBatcher:
         # replayed for every later admission with the same shape (the
         # one-compile-per-bucket invariant lives in
         # prefill_compile_counts; asserted in tests/test_batcher.py).
-        self._prefill = PrefillCache(api)
+        self._prefill = PrefillCache(
+            api,
+            on_compile=lambda key, dt_s: self.bus.publish(
+                "compile", cat=CAT_COMPILE, lane="prefill",
+                bucket="x".join(map(str, key[0])) + f"_c{key[1]}", dt_s=dt_s,
+            ),
+        )
 
         def _traced_guided(params, state):
             K = state.tokens.shape[0]
@@ -333,6 +383,22 @@ class StepBatcher:
         if self.mesh is None:
             return contextlib.nullcontext()
         return use_mesh(self.mesh, serving_rules(self.mesh))
+
+    @contextlib.contextmanager
+    def _compile_attr(self, lane_name: str, bucket: int):
+        """Compile attribution (obs layer): if this lane dispatch traced a
+        new executable (first call at this bucket), publish a ``compile``
+        event carrying the (lane, bucket) cache key and the wall time the
+        trace+compile took — jit compiles synchronously inside the first
+        call, so clocking the call attributes it."""
+        before = sum(self.compile_counts[lane_name].values())
+        t0 = self.clock()
+        yield
+        if sum(self.compile_counts[lane_name].values()) > before:
+            self.bus.publish(
+                "compile", cat=CAT_COMPILE, lane=lane_name, bucket=bucket,
+                dt_s=self.clock() - t0,
+            )
 
     # -- submission ----------------------------------------------------------
 
@@ -594,6 +660,11 @@ class StepBatcher:
         self._gen[rid] = [int(np.asarray(first)[0, 0])]
         self._host_crossed[rid] = lane is self.cond
         self._guided_steps_host[rid] = 0
+        # monitor mirrors: the device ledger starts at 0 (prefill is not a
+        # decode NFE) and so does the expectation — conserved from step 0,
+        # including degenerate budget-1 requests that never decode
+        self._nfes_seen[rid] = 0.0
+        self._expected_rid[rid] = 0.0
         self.lane_history[rid] = [lane.name]
         self.telemetry.on_admit(rid, self._step_idx)
         # degenerate budget: the prefill token alone satisfies it
@@ -755,21 +826,26 @@ class StepBatcher:
         self._ensure_cache_len()
         t0 = self.clock()
         compiles0 = self._compiles_total()
+        self.profiler.on_round(self._round_idx)
         self._admit_pending()
 
         # host-mirror of the device ledger rule, *before* the step runs:
         # each guided slot pays its policy's price (2/1 for the default
         # ladder, refresh-cadenced for compress), 1 per linear slot
-        # (extrapolated uncond is 0-NFE), 1 per cond slot.
-        expected = (
-            sum(
-                self._guided_price(r)
-                for r in self.guided.rids
-                if r is not None
-            )
-            + 1.0 * self.linear.active_count
-            + 1.0 * self.cond.active_count
-        )
+        # (extrapolated uncond is 0-NFE), 1 per cond slot.  The same
+        # increments accumulate per rid (_expected_rid) so the ledger
+        # monitor can attribute a conservation break to its request.
+        expected = 0.0
+        for r in self.guided.rids:
+            if r is not None:
+                price = self._guided_price(r)
+                self._expected_rid[r] += price
+                expected += price
+        for lane in (self.linear, self.cond):
+            for r in lane.rids:
+                if r is not None:
+                    self._expected_rid[r] += 1.0
+                    expected += 1.0
         g_active = self.guided.active_count
         g_uncrossed = sum(
             1
@@ -778,6 +854,11 @@ class StepBatcher:
         )
         l_active = self.linear.active_count
         c_active = self.cond.active_count
+        policy_slots: Dict[str, int] = {}
+        for r in self.guided.rids:
+            if r is not None:
+                pid = self._reqs[r].policy
+                policy_slots[pid] = policy_slots.get(pid, 0) + 1
 
         # the mesh context matters at trace time only (first call per
         # bucket): the lane-state constraints and the model's logical-axis
@@ -786,19 +867,24 @@ class StepBatcher:
         dispatches = 0
         with self._mesh_ctx():
             if g_active:
-                _, self.guided.state, _ = self._guided_step(
-                    self.params, self.guided.state
-                )
+                with self._compile_attr("guided", self.guided.capacity):
+                    _, self.guided.state, _ = self._guided_step(
+                        self.params, self.guided.state
+                    )
                 ran = True
                 dispatches += 1
             if l_active:
-                _, self.linear.state, _ = self._linear_step(
-                    self.params, self.linear.state, self._beta
-                )
+                with self._compile_attr("linear", self.linear.capacity):
+                    _, self.linear.state, _ = self._linear_step(
+                        self.params, self.linear.state, self._beta
+                    )
                 ran = True
                 dispatches += 1
             if c_active:
-                _, self.cond.state = self._cond_step(self.params, self.cond.state)
+                with self._compile_attr("cond", self.cond.capacity):
+                    _, self.cond.state = self._cond_step(
+                        self.params, self.cond.state
+                    )
                 ran = True
                 dispatches += 1
 
@@ -839,9 +925,37 @@ class StepBatcher:
                 nfes_expected=expected,
                 dispatches=dispatches,
                 warmup=self._compiles_total() > compiles0,
+                policy_slots=policy_slots,
             )
+            self._check_round(self._step_idx)
+            self._round_idx += 1
         self._step_idx += 1
         return True
+
+    def _round_view(self, step: int) -> RoundView:
+        """Plain-data snapshot of this round for the invariant monitors —
+        built from host state the batcher already tracks (no device
+        sync), so monitoring can never perturb the run it watches."""
+        return RoundView(
+            step=step,
+            lanes={
+                lane.name: LaneView(
+                    active=lane.active_count,
+                    capacity=lane.capacity,
+                    rids=tuple(lane.rids),
+                )
+                for lane in (self.guided, self.linear, self.cond)
+            },
+            buckets=tuple(self.bc.buckets),
+            max_slots=self.bc.max_slots,
+            nfes_device=dict(self._nfes_seen),
+            nfes_expected=dict(self._expected_rid),
+            lane_history={k: tuple(v) for k, v in self.lane_history.items()},
+        )
+
+    def _check_round(self, step: int) -> None:
+        if self.monitors is not None:
+            self.monitors.on_round(self._round_view(step))
 
     def _postprocess(self, fetched):
         # Snapshot the slot maps as they were when the step ran: migrations
@@ -855,6 +969,7 @@ class StepBatcher:
             for slot, rid in enumerate(c_rids):
                 if rid is None:
                     continue
+                self._nfes_seen[rid] = float(nfes[slot])
                 self._gen[rid].append(int(toks[slot, 0]))
                 self._maybe_complete(rid, self.cond, slot, float(nfes[slot]))
         if fetched["l"] is not None:
@@ -862,6 +977,7 @@ class StepBatcher:
             for slot, rid in enumerate(l_rids):
                 if rid is None:
                     continue
+                self._nfes_seen[rid] = float(nfes[slot])
                 self._gen[rid].append(int(toks[slot, 0]))
                 # record crossing before the completion check so a request
                 # that crosses on its final decode step is still telemetered
@@ -876,6 +992,7 @@ class StepBatcher:
             for slot, rid in enumerate(g_rids):
                 if rid is None:
                     continue
+                self._nfes_seen[rid] = float(nfes[slot])
                 self._gen[rid].append(int(toks[slot, 0]))
                 self._guided_steps_host[rid] += 1
                 if bool(crossed[slot]) and not self._host_crossed[rid]:
@@ -895,9 +1012,16 @@ class StepBatcher:
         async pipeline the previous horizon's postprocess (which mutates
         them) runs after this dispatch."""
         compiles0 = self._compiles_total()
+        self.profiler.on_round(self._round_idx)
+        policy_slots: Dict[str, int] = {}
+        for r in self.guided.rids:
+            if r is not None:
+                pid = self._reqs[r].policy
+                policy_slots[pid] = policy_slots.get(pid, 0) + 1
         rec = {
             "step0": self._step_idx,
             "t0": self.clock(),
+            "policy_slots": policy_slots,
             "g_rids": list(self.guided.rids),
             "l_rids": list(self.linear.rids),
             "c_rids": list(self.cond.rids),
@@ -918,19 +1042,24 @@ class StepBatcher:
         with self._mesh_ctx():
             if rec["g_active"]:
                 beta = (self._beta,) if self._beta is not None else ()
-                self.guided.state, tr = self._guided_hor(
-                    self.params, self.guided.state, *beta
-                )
+                with self._compile_attr("guided", self.guided.capacity):
+                    self.guided.state, tr = self._guided_hor(
+                        self.params, self.guided.state, *beta
+                    )
                 rec["traces"]["g"] = tr
                 rec["dispatches"] += 1
             if rec["l_active"]:
-                self.linear.state, tr = self._linear_hor(
-                    self.params, self.linear.state, self._beta
-                )
+                with self._compile_attr("linear", self.linear.capacity):
+                    self.linear.state, tr = self._linear_hor(
+                        self.params, self.linear.state, self._beta
+                    )
                 rec["traces"]["l"] = tr
                 rec["dispatches"] += 1
             if rec["c_active"]:
-                self.cond.state, tr = self._cond_hor(self.params, self.cond.state)
+                with self._compile_attr("cond", self.cond.capacity):
+                    self.cond.state, tr = self._cond_hor(
+                        self.params, self.cond.state
+                    )
                 rec["traces"]["c"] = tr
                 rec["dispatches"] += 1
         # double buffering: enqueue the D2H copy now, so it lands while the
@@ -958,6 +1087,8 @@ class StepBatcher:
                     if rid is None or not tr.emitted[h, slot]:
                         continue
                     expected += 1.0
+                    self._expected_rid[rid] += 1.0
+                    self._nfes_seen[rid] = float(tr.nfes[h, slot])
                     self._gen[rid].append(int(tr.tokens[h, slot]))
                     self._complete_now(rid, float(tr.nfes[h, slot]), step)
             tr = fetched["l"]
@@ -966,6 +1097,8 @@ class StepBatcher:
                     if rid is None or not tr.emitted[h, slot]:
                         continue
                     expected += 1.0
+                    self._expected_rid[rid] += 1.0
+                    self._nfes_seen[rid] = float(tr.nfes[h, slot])
                     self._gen[rid].append(int(tr.tokens[h, slot]))
                     if bool(tr.crossed[h, slot]) and not self._host_crossed[rid]:
                         self._host_crossed[rid] = True
@@ -980,9 +1113,10 @@ class StepBatcher:
                     # substep's crossing/warmup updates: crossed or
                     # in-place-linear slots pay 1, everyone else the
                     # policy's guided price at this step index
-                    expected += self._guided_price(
-                        rid, allow_inplace_linear=True
-                    )
+                    price = self._guided_price(rid, allow_inplace_linear=True)
+                    expected += price
+                    self._expected_rid[rid] += price
+                    self._nfes_seen[rid] = float(tr.nfes[h, slot])
                     self._gen[rid].append(int(tr.tokens[h, slot]))
                     self._guided_steps_host[rid] += 1
                     if bool(tr.crossed[h, slot]) and not self._host_crossed[rid]:
@@ -1023,7 +1157,10 @@ class StepBatcher:
             steps=H,
             dispatches=rec["dispatches"],
             warmup=rec["warmup"],
+            policy_slots=rec["policy_slots"],
         )
+        self._check_round(step0)
+        self._round_idx += 1
 
     def _run_horizons(self, max_horizons: int) -> Dict[int, dict]:
         """The horizon-fused drive loop.  Synchronous mode fetches and
@@ -1058,12 +1195,15 @@ class StepBatcher:
 
     def run(self, max_steps: int = 100_000) -> Dict[int, dict]:
         """Drive steps until every submitted request has completed."""
-        if self.bc.horizon > 1:
-            return self._run_horizons(max_steps)
-        steps = 0
-        while self.step() and steps < max_steps:
-            steps += 1
-        return self.completed
+        try:
+            if self.bc.horizon > 1:
+                return self._run_horizons(max_steps)
+            steps = 0
+            while self.step() and steps < max_steps:
+                steps += 1
+            return self.completed
+        finally:
+            self.profiler.close()  # run ended inside an open capture window
 
     # -- reporting -----------------------------------------------------------
 
@@ -1081,6 +1221,11 @@ class StepBatcher:
     def report(self) -> dict:
         rep = self.telemetry.report(compile_counts=self.compile_counts)
         rep["mesh_shape"] = list(self.mesh_shape) if self.mesh_shape else None
+        if self.monitors is not None:
+            rep["monitors"] = {
+                "rounds_checked": self.monitors.rounds_checked,
+                "violations": list(self.monitors.violations),
+            }
         return rep
 
 

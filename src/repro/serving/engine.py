@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -133,10 +134,13 @@ class PrefillCache:
     tests/test_batcher.py.
     """
 
-    def __init__(self, api):
+    def __init__(self, api, on_compile=None):
         self.api = api
         self._fns: dict = {}
         self.compile_counts: dict = {}
+        # compile-attribution hook (obs layer): called as
+        # on_compile(key, dt_s) after a bucket's first (tracing) call
+        self.on_compile = on_compile
 
     def __call__(self, params, tokens, cache_len):
         key = (tuple(tokens.shape), cache_len)
@@ -151,6 +155,11 @@ class PrefillCache:
                 )
 
             fn = self._fns[key] = jax.jit(traced)
+            if self.on_compile is not None:
+                t0 = time.perf_counter()
+                out = fn(params, tokens)
+                self.on_compile(key, time.perf_counter() - t0)
+                return out
         return fn(params, tokens)
 
 

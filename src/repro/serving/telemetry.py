@@ -2,8 +2,17 @@
 
 The step-level batcher (serving/batcher.py) emits one event stream:
 request lifecycle (submit -> admit -> [cross -> migrate] -> complete) plus
-one record per decode step with lane occupancy and wall time.  This module
-turns that stream into the serving-side Table-1 accounting:
+one record per decode step with lane occupancy and wall time.  Since the
+observability layer landed (DESIGN.md §14) that stream IS a stream: every
+``on_*`` call publishes a typed event on an ``repro.obs.EventBus``, and
+``ServingTelemetry`` is itself a *consumer* of that bus — its request
+records, step lists and the live ``MetricsRegistry`` are all folded from
+the same events the trace exporters and invariant monitors see.  The
+end-of-run ``report()`` is therefore a view over the registry's stream,
+not a separate accounting; its numbers are bit-identical to the
+pre-bus implementation (golden fixtures pin this).
+
+``report()`` builds the serving-side Table-1 accounting:
 
 * a per-request NFE ledger and realized savings vs. the always-CFG
   baseline (2 NFEs x (tokens - 1), the price the request would have paid
@@ -14,23 +23,28 @@ turns that stream into the serving-side Table-1 accounting:
   branch is 0-NFE).  ``report()["totals"]["nfes_device"]`` must equal
   ``["nfes_expected"]`` — the ledger-conservation invariant (DESIGN.md §7)
   that catches lost or double-counted slots across migration and reuse,
-  now across all three lanes;
+  now across all three lanes *and* checked per round by the online
+  monitors (obs/monitors.py);
+* per-request TTFT (submit -> first streamed token, i.e. the admission
+  prefill) and time-per-output-token, plus their p50/p90/p99 percentiles
+  in the totals — the SLO inputs of the ROADMAP's streaming gateway;
 * per-lane slot-step totals (``lane_steps``) and the count of 0-NFE
-  extrapolated unconditional evaluations (``extrapolated_uncond`` — each
-  one is an NFE the linear lane saved while keeping guidance applied);
+  extrapolated unconditional evaluations (``extrapolated_uncond``);
 * tokens/sec and step-latency percentiles (p50/p90/p99) over the run's
   *steady-state* rounds: rounds that included a first-call-per-bucket
   compile (lane executables or admission prefill) are tagged ``warmup``
-  and totalled separately (``compile_s``, ``warmup_steps``) so the
-  percentiles describe serving latency, not trace time;
-* dispatch economics for horizon-fused decode (DESIGN.md §12): each
-  round records how many decode substeps it covered (``steps``) and how
-  many executables it launched (``dispatches``); totals report
+  and totalled separately (``compile_s``, ``warmup_steps``);
+* dispatch economics for horizon-fused decode (DESIGN.md §12):
   ``device_dispatches``, ``decode_substeps`` and the headline
   ``dispatches_per_token`` that the horizon scan drives toward ~3/H.
 
-``to_json`` writes the report for ``benchmarks/bench_serving.py``; the
-clock is injectable so tests can assert on timing fields deterministically.
+Clock semantics are explicit and deterministic: the injectable ``clock``
+is sampled exactly ONCE per published event (by the bus, at publish
+time).  The run's wall interval is seeded from the FIRST round event as
+``ts - dt_s`` — the moment that round's work began — and ends at the
+last round event's ``ts``, so ``wall_time_s`` tiles the observed rounds
+exactly and two runs driven by the same fake clock report identical
+timings regardless of how many lifecycle events interleave.
 """
 from __future__ import annotations
 
@@ -40,6 +54,10 @@ import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
+
+from repro.obs.events import CAT_COMPILE, CAT_REQUEST, CAT_ROUND, KIND_SPAN
+from repro.obs.events import Event, EventBus
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -59,6 +77,12 @@ class RequestRecord:
     tokens_out: int = 0
     nfes: float = 0.0  # device ledger at completion (decode NFEs)
     reason: str = ""  # "budget" | "eos"
+    # wall-clock stamps (bus-event timestamps): TTFT/TPOT inputs.  The
+    # first token streams at admission (the prefill emits it), so
+    # t_first is the admit event's timestamp.
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_complete: Optional[float] = None
 
     @property
     def baseline_nfes(self) -> float:
@@ -71,12 +95,56 @@ class RequestRecord:
         base = self.baseline_nfes
         return 100.0 * (1.0 - self.nfes / base) if base > 0 else 0.0
 
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit -> first streamed token (the admission prefill)."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token after the first (decode steady
+        rate); None until completion or for single-token requests."""
+        if self.t_first is None or self.t_complete is None:
+            return None
+        if self.tokens_out <= 1:
+            return None
+        return (self.t_complete - self.t_first) / (self.tokens_out - 1)
+
+
+def _pctl_ms(vals_s: List[float]) -> dict:
+    v = np.asarray(vals_s, np.float64) * 1e3
+    if v.size == 0:
+        return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+    return {
+        "mean": float(v.mean()),
+        "p50": float(np.percentile(v, 50)),
+        "p90": float(np.percentile(v, 90)),
+        "p99": float(np.percentile(v, 99)),
+    }
+
 
 class ServingTelemetry:
-    """Event sink + report builder for one batcher run."""
+    """Event sink + report builder for one batcher run.
 
-    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+    Publishes every ``on_*`` call as a typed event on ``bus`` and folds
+    its own state (request records, step lists, the live metrics
+    registry) inside its bus subscription — so external subscribers
+    (trace exporters, flushers) observe exactly the stream the report is
+    built from.  Pass a shared ``bus``/``registry`` to aggregate several
+    components onto one stream; by default each telemetry owns both.
+    """
+
+    def __init__(
+        self,
+        clock: Callable[[], float] = time.perf_counter,
+        bus: Optional[EventBus] = None,
+        registry: Optional[MetricsRegistry] = None,
+    ):
         self.clock = clock
+        self.bus = bus if bus is not None else EventBus(clock=clock)
+        self.registry = registry if registry is not None else MetricsRegistry()
         self.requests: Dict[int, RequestRecord] = {}
         self.step_latency_s: List[float] = []
         # warmup[i] marks step i as having included executable compilation
@@ -90,46 +158,45 @@ class ServingTelemetry:
         self.decode_substeps: int = 0  # decode steps covered (sum of H)
         self._t_start: Optional[float] = None
         self._t_end: Optional[float] = None
+        self.bus.subscribe(self._consume)
 
-    # -- request lifecycle ---------------------------------------------------
+    # -- request lifecycle (publish side) -------------------------------------
 
     def on_submit(self, rid, prompt_len, max_new_tokens, guided, step=0,
                   linear=False, policy="default"):
-        self.requests[rid] = RequestRecord(
-            rid=rid, prompt_len=int(prompt_len),
-            max_new_tokens=int(max_new_tokens), guided=bool(guided),
-            linear=bool(linear), policy=str(policy), submit_step=int(step),
+        self.bus.publish(
+            "submit", cat=CAT_REQUEST, rid=int(rid),
+            prompt_len=int(prompt_len), max_new_tokens=int(max_new_tokens),
+            guided=bool(guided), linear=bool(linear), policy=str(policy),
+            step=int(step),
         )
 
     def on_admit(self, rid, step):
-        self.requests[rid].admit_step = int(step)
+        self.bus.publish("admit", cat=CAT_REQUEST, rid=int(rid), step=int(step))
 
     def on_cross(self, rid, step):
-        if self.requests[rid].crossed_step is None:
-            self.requests[rid].crossed_step = int(step)
+        self.bus.publish("cross", cat=CAT_REQUEST, rid=int(rid), step=int(step))
 
     def on_linear(self, rid, step):
         """Request migrated guided -> linear (history window warm)."""
-        if self.requests[rid].linear_step is None:
-            self.requests[rid].linear_step = int(step)
+        self.bus.publish("linear", cat=CAT_REQUEST, rid=int(rid), step=int(step))
 
     def on_migrate(self, rid, step):
-        self.requests[rid].migrated_step = int(step)
+        self.bus.publish("migrate", cat=CAT_REQUEST, rid=int(rid), step=int(step))
 
     def on_complete(self, rid, step, nfes, tokens_out, reason="budget"):
-        r = self.requests[rid]
-        r.complete_step = int(step)
-        r.nfes = float(nfes)
-        r.tokens_out = int(tokens_out)
-        r.reason = reason
+        self.bus.publish(
+            "complete", cat=CAT_REQUEST, rid=int(rid), step=int(step),
+            nfes=float(nfes), tokens_out=int(tokens_out), reason=str(reason),
+        )
 
-    # -- per-step accounting --------------------------------------------------
+    # -- per-step accounting (publish side) -----------------------------------
 
     def on_step(
         self, step, *, guided_active, guided_uncrossed, guided_capacity,
         cond_active, cond_capacity, dt_s, nfes_expected,
         linear_active=0, linear_capacity=0, steps=1, dispatches=0,
-        warmup=False,
+        warmup=False, policy_slots=None,
     ):
         """One batcher round.  ``nfes_expected`` is the host-mirror
         increment: 2*guided_uncrossed + 1*(guided_active - guided_uncrossed)
@@ -137,32 +204,146 @@ class ServingTelemetry:
         unconditional branch costs 0 NFEs).
 
         Horizon-fused rounds (DESIGN.md §12) cover ``steps`` decode
-        substeps with ``dispatches`` executable launches — the
-        dispatches-per-token economics the horizon scan exists to fix.
-        ``warmup`` tags rounds that included a first-call-per-bucket
-        compile, which are excluded from the steady-state latency
-        percentiles and totalled under ``compile_s`` instead."""
+        substeps with ``dispatches`` executable launches.  ``warmup``
+        tags rounds that included a first-call-per-bucket compile, which
+        are excluded from the steady-state latency percentiles and
+        totalled under ``compile_s``.  ``policy_slots`` (optional
+        {policy_id: occupied guided slots}) attributes guided-lane
+        residency per guidance policy in the metrics registry."""
+        self.bus.publish(
+            "round", cat=CAT_ROUND, kind=KIND_SPAN, dur=float(dt_s),
+            step=int(step), steps=int(steps), dispatches=int(dispatches),
+            warmup=bool(warmup),
+            guided_active=int(guided_active),
+            guided_uncrossed=int(guided_uncrossed),
+            guided_capacity=int(guided_capacity),
+            linear_active=int(linear_active),
+            linear_capacity=int(linear_capacity),
+            cond_active=int(cond_active),
+            cond_capacity=int(cond_capacity),
+            nfes_expected=float(nfes_expected),
+            policy_slots=dict(policy_slots) if policy_slots else {},
+        )
+
+    # -- bus consumer ---------------------------------------------------------
+
+    def _consume(self, ev: Event) -> None:
+        """Fold one event into the request records, the step lists and
+        the live metrics registry.  Unknown event names are ignored (the
+        bus also carries monitor/profile/compile events from other
+        publishers)."""
+        a = ev.args
+        if ev.name == "submit":
+            self.requests[a["rid"]] = RequestRecord(
+                rid=a["rid"], prompt_len=a["prompt_len"],
+                max_new_tokens=a["max_new_tokens"], guided=a["guided"],
+                linear=a["linear"], policy=a["policy"],
+                submit_step=a["step"], t_submit=ev.ts,
+            )
+            self.registry.counter("requests.submitted").inc()
+        elif ev.name == "admit":
+            r = self.requests[a["rid"]]
+            r.admit_step = a["step"]
+            r.t_first = ev.ts
+            self.registry.counter("requests.admitted").inc()
+        elif ev.name == "cross":
+            r = self.requests[a["rid"]]
+            if r.crossed_step is None:
+                r.crossed_step = a["step"]
+                self.registry.counter("requests.crossed").inc()
+        elif ev.name == "linear":
+            r = self.requests[a["rid"]]
+            if r.linear_step is None:
+                r.linear_step = a["step"]
+                self.registry.counter("requests.linear").inc()
+        elif ev.name == "migrate":
+            self.requests[a["rid"]].migrated_step = a["step"]
+            self.registry.counter("requests.migrated").inc()
+        elif ev.name == "complete":
+            r = self.requests[a["rid"]]
+            r.complete_step = a["step"]
+            r.nfes = a["nfes"]
+            r.tokens_out = a["tokens_out"]
+            r.reason = a["reason"]
+            r.t_complete = ev.ts
+            self.registry.counter("requests.completed").inc()
+            self.registry.counter("tokens.out").inc(r.tokens_out)
+            self.registry.counter("nfes.device").inc(r.nfes)
+            if r.ttft_s is not None:
+                self.registry.histogram("request.ttft_ms").observe(
+                    r.ttft_s * 1e3
+                )
+            if r.tpot_s is not None:
+                self.registry.histogram("request.tpot_ms").observe(
+                    r.tpot_s * 1e3
+                )
+            if r.guided and r.baseline_nfes > 0:
+                self.registry.histogram("request.savings_pct").observe(
+                    r.savings_pct
+                )
+        elif ev.name == "round":
+            self._consume_round(ev)
+        elif ev.name == "compile":
+            # published by the batcher/prefill cache: per-executable
+            # compile attribution keyed by (lane, bucket)
+            lane, bucket = a.get("lane", "?"), a.get("bucket", "?")
+            dt = float(a.get("dt_s", 0.0))
+            self.registry.counter(f"compile.{lane}.b{bucket}.count").inc()
+            self.registry.counter(f"compile.{lane}.b{bucket}.s").inc(dt)
+            self.registry.counter("compile.total_s").inc(dt)
+
+    def _consume_round(self, ev: Event) -> None:
+        a = ev.args
+        dt_s = ev.dur
+        # wall-clock seeding (explicit, deterministic): the bus sampled
+        # the clock ONCE at publish (= end of the round); the run's wall
+        # interval starts where the first round's work began.
         if self._t_start is None:
-            self._t_start = self.clock() - dt_s
-        self._t_end = self.clock()
-        self.step_latency_s.append(float(dt_s))
-        self.step_warmup.append(bool(warmup))
-        self.nfes_expected += float(nfes_expected)
-        self.device_dispatches += int(dispatches)
-        self.decode_substeps += int(steps)
+            self._t_start = ev.ts - dt_s
+        self._t_end = ev.ts
+        self.step_latency_s.append(dt_s)
+        self.step_warmup.append(a["warmup"])
+        self.nfes_expected += a["nfes_expected"]
+        self.device_dispatches += a["dispatches"]
+        self.decode_substeps += a["steps"]
         self.step_occupancy.append(
             {
-                "step": int(step),
-                "steps": int(steps),
-                "warmup": bool(warmup),
-                "guided_active": int(guided_active),
-                "guided_capacity": int(guided_capacity),
-                "linear_active": int(linear_active),
-                "linear_capacity": int(linear_capacity),
-                "cond_active": int(cond_active),
-                "cond_capacity": int(cond_capacity),
+                "step": a["step"],
+                "steps": a["steps"],
+                "warmup": a["warmup"],
+                "guided_active": a["guided_active"],
+                "guided_capacity": a["guided_capacity"],
+                "linear_active": a["linear_active"],
+                "linear_capacity": a["linear_capacity"],
+                "cond_active": a["cond_active"],
+                "cond_capacity": a["cond_capacity"],
             }
         )
+        # live registry mirror
+        reg = self.registry
+        reg.counter("rounds").inc()
+        reg.counter("decode.substeps").inc(a["steps"])
+        reg.counter("device.dispatches").inc(a["dispatches"])
+        reg.counter("nfes.expected").inc(a["nfes_expected"])
+        if a["warmup"]:
+            reg.counter("rounds.warmup").inc()
+            reg.counter("compile.round_s").inc(dt_s)
+        else:
+            reg.histogram("step_latency_ms").observe(dt_s * 1e3)
+        act = cap = 0
+        for lane in ("guided", "linear", "cond"):
+            la, lc = a[f"{lane}_active"], a[f"{lane}_capacity"]
+            act, cap = act + la, cap + lc
+            reg.gauge(f"lane.{lane}.active").set(la)
+            reg.gauge(f"lane.{lane}.capacity").set(lc)
+            if la:
+                # dispatch attribution keyed by the executable cache key
+                # (lane, bucket=capacity): a lane with active slots
+                # launched exactly one executable this round
+                reg.counter(f"dispatch.{lane}.b{lc}").inc()
+        reg.gauge("slots.occupancy").set(act / cap if cap else 0.0)
+        for pid, n in a.get("policy_slots", {}).items():
+            reg.counter(f"policy.{pid}.guided_slot_steps").inc(n)
 
     # -- reporting -----------------------------------------------------------
 
@@ -233,6 +414,12 @@ class ServingTelemetry:
                     "nfes": r.nfes,
                     "baseline_nfes": r.baseline_nfes,
                     "savings_pct": r.savings_pct,
+                    "ttft_ms": (
+                        r.ttft_s * 1e3 if r.ttft_s is not None else None
+                    ),
+                    "tpot_ms": (
+                        r.tpot_s * 1e3 if r.tpot_s is not None else None
+                    ),
                     "reason": r.reason,
                 }
                 for r in recs
@@ -271,6 +458,15 @@ class ServingTelemetry:
                     "p90": float(np.percentile(lat, 90) * 1e3) if lat.size else 0.0,
                     "p99": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
                 },
+                # SLO inputs (ROADMAP streaming gateway): submit->first-
+                # token and steady decode rate percentiles over completed
+                # requests
+                "ttft_ms": _pctl_ms(
+                    [r.ttft_s for r in done if r.ttft_s is not None]
+                ),
+                "tpot_ms": _pctl_ms(
+                    [r.tpot_s for r in done if r.tpot_s is not None]
+                ),
                 "mean_occupancy": float(np.mean(np.asarray(act) / np.maximum(cap, 1)))
                 if occ
                 else 0.0,
@@ -287,3 +483,12 @@ class ServingTelemetry:
 
 def nfes_total_guided(guided_done) -> float:
     return sum(r.nfes for r in guided_done)
+
+
+# re-exported for callers that publish compile events alongside telemetry
+__all__ = [
+    "RequestRecord",
+    "ServingTelemetry",
+    "nfes_total_guided",
+    "CAT_COMPILE",
+]

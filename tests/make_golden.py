@@ -80,7 +80,7 @@ def _batcher_record(bat, done, rids):
     }
 
 
-def run_batcher_case(mesh=None, horizon=1):
+def run_batcher_case(mesh=None, horizon=1, obs=None):
     """Two-lane churn under a fixed seed: late arrival, slot reuse, a
     never-crossing neighbour, plain traffic.  ``mesh`` runs the identical
     workload sharded (tests/test_sharded_serving.py asserts bit-equality
@@ -101,6 +101,7 @@ def run_batcher_case(mesh=None, horizon=1):
     bat = StepBatcher(
         api, params, ec,
         BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon), mesh=mesh,
+        obs=obs,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 0, 2, 4])]
     done = bat.run()
@@ -126,7 +127,7 @@ def fit_golden_coeffs():
     return coeffs
 
 
-def run_three_lane_case(coeffs, mesh=None, horizon=1):
+def run_three_lane_case(coeffs, mesh=None, horizon=1, obs=None):
     """Three-lane churn: full ladder, never-crossing linear request, slot
     reuse — driven by the FIXTURE's coefficient vector.  ``mesh`` runs the
     identical workload sharded, ``horizon`` fuses H substeps per dispatch
@@ -144,7 +145,7 @@ def run_three_lane_case(coeffs, mesh=None, horizon=1):
     bat = StepBatcher(
         api, params, ec,
         BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon),
-        coeffs=coeffs, mesh=mesh,
+        coeffs=coeffs, mesh=mesh, obs=obs,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]
     done = bat.run()
@@ -157,7 +158,7 @@ def run_three_lane_case(coeffs, mesh=None, horizon=1):
     }
 
 
-def run_policy_case(policy, mesh=None, horizon=1):
+def run_policy_case(policy, mesh=None, horizon=1, obs=None):
     """Per-policy churn under a fixed seed: one instant-crosser, one
     never-crossing request (``gamma_bar=2.0``, exercising compress's
     refresh cadence / online_ag's gap watermark to the end of its budget)
@@ -176,6 +177,7 @@ def run_policy_case(policy, mesh=None, horizon=1):
     bat = StepBatcher(
         api, params, ec,
         BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon), mesh=mesh,
+        obs=obs,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]
     done = bat.run()

@@ -197,3 +197,143 @@ def test_two_lane_on_step_backward_compatible():
     assert t["lane_steps"] == {"guided": 2, "linear": 0, "cond": 1}
     assert t["extrapolated_uncond"] == 0
     assert t["mean_occupancy"] == pytest.approx(3 / 4)
+
+
+# -- clock-seeding semantics (regression: the wall interval used to sample
+# -- the clock twice per round, making wall_time_s depend on how often the
+# -- injectable clock had been consulted between rounds) ---------------------
+
+
+def test_round_samples_clock_exactly_once():
+    """One round -> ONE clock sample (the bus publish); the wall interval
+    is seeded from the first round event as ts - dt_s and ends at the
+    last round event's ts, exactly tiling the observed rounds."""
+    clock = FakeClock(tick=0.05)
+    tel = ServingTelemetry(clock=clock)
+    for i in range(3):
+        tel.on_step(
+            i, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+            cond_active=0, cond_capacity=1, dt_s=0.01, nfes_expected=2.0,
+        )
+    # 3 rounds -> 3 samples: ts = 0.05, 0.10, 0.15
+    assert clock.t == pytest.approx(0.15)
+    t = tel.report()["totals"]
+    # start = first ts - its dt = 0.05 - 0.01; end = last ts = 0.15
+    assert t["wall_time_s"] == pytest.approx(0.15 - (0.05 - 0.01))
+
+
+def test_wall_clock_independent_of_lifecycle_interleaving():
+    """Two runs whose rounds carry the same dt_s report the same
+    wall_time_s regardless of how many lifecycle events interleave —
+    lifecycle publishes consume clock ticks but the interval is anchored
+    to the round events alone."""
+
+    def run(extra_lifecycle):
+        clock = FakeClock(tick=0.05)
+        tel = ServingTelemetry(clock=clock)
+        tel.on_submit(0, 4, 8, True)  # 1 tick
+        if extra_lifecycle:  # consume extra ticks before the first round
+            tel.on_submit(1, 4, 8, True)
+            tel.on_admit(1, 0)
+        tel.on_admit(0, 0)
+        for i in range(2):
+            tel.on_step(
+                i, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+                cond_active=0, cond_capacity=1, dt_s=0.02, nfes_expected=2.0,
+            )
+        return tel.report()["totals"]["wall_time_s"]
+
+    # one round period (0.05) plus the first round's own dt (0.02)
+    assert run(False) == pytest.approx(0.07)
+    assert run(True) == pytest.approx(0.07)
+
+
+def test_all_warmup_run_has_consistent_wall_clock():
+    """A run whose every round compiled still seeds the wall interval
+    (regression: all-warmup runs must not report wall_time_s == 0 while
+    reporting nonzero latencies)."""
+    tel = ServingTelemetry(clock=FakeClock(tick=0.05))
+    for i in range(2):
+        tel.on_step(
+            i, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+            cond_active=0, cond_capacity=1, dt_s=0.5, nfes_expected=2.0,
+            warmup=True,
+        )
+    t = tel.report()["totals"]
+    assert t["wall_time_s"] == pytest.approx(0.10 - (0.05 - 0.5))
+    assert t["warmup_steps"] == 2
+    assert t["tokens_per_sec"] == 0.0  # no completions
+
+
+def test_zero_completed_requests_report():
+    """Steps ran but nothing completed (all requests still in flight):
+    totals stay well-defined — zero tokens, zero savings, empty TTFT/TPOT
+    percentiles — instead of dividing by an empty population."""
+    tel = ServingTelemetry(clock=FakeClock())
+    tel.on_submit(0, 4, 8, True)
+    tel.on_admit(0, 0)
+    tel.on_step(
+        0, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+        cond_active=0, cond_capacity=1, dt_s=0.01, nfes_expected=2.0,
+    )
+    t = tel.report()["totals"]
+    assert t["num_requests"] == 1 and t["num_completed"] == 0
+    assert t["tokens_out"] == 0 and t["tokens_per_sec"] == 0.0
+    assert t["mean_savings_pct"] == 0.0
+    assert t["ttft_ms"] == {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+    assert t["tpot_ms"] == {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+
+
+# -- TTFT / time-per-output-token --------------------------------------------
+
+
+def test_ttft_and_tpot_hand_computed():
+    """FakeClock(0.05) stamps: submit ts=0.05, admit ts=0.10 (the first
+    token streams at admission prefill), complete ts=0.20 with 5 tokens.
+    TTFT = 0.10 - 0.05 = 50 ms; TPOT = (0.20 - 0.10) / (5 - 1) = 25 ms."""
+    tel = ServingTelemetry(clock=FakeClock(tick=0.05))
+    tel.on_submit(0, 4, 5, True)  # ts = 0.05
+    tel.on_admit(0, 0)  # ts = 0.10
+    tel.on_step(
+        0, guided_active=1, guided_uncrossed=1, guided_capacity=1,
+        cond_active=0, cond_capacity=1, dt_s=0.01, nfes_expected=2.0,
+    )  # ts = 0.15
+    tel.on_complete(0, 4, nfes=8.0, tokens_out=5)  # ts = 0.20
+    rep = tel.report()
+    r = rep["requests"]["0"]
+    assert r["ttft_ms"] == pytest.approx(50.0)
+    assert r["tpot_ms"] == pytest.approx(25.0)
+    t = rep["totals"]
+    for q in ("mean", "p50", "p90", "p99"):
+        assert t["ttft_ms"][q] == pytest.approx(50.0)
+        assert t["tpot_ms"][q] == pytest.approx(25.0)
+
+
+def test_tpot_undefined_for_single_token_request():
+    """A budget-1 request emits only the prefill token: TTFT is defined,
+    TPOT is not (no decode interval to average)."""
+    tel = ServingTelemetry(clock=FakeClock(tick=0.05))
+    tel.on_submit(0, 4, 1, True)
+    tel.on_admit(0, 0)
+    tel.on_complete(0, 0, nfes=0.0, tokens_out=1)
+    r = tel.report()["requests"]["0"]
+    assert r["ttft_ms"] == pytest.approx(50.0)
+    assert r["tpot_ms"] is None
+
+
+def test_registry_mirrors_report_counters():
+    """The live metrics registry is folded from the SAME event stream as
+    report(): its counters must agree with the end-of-run totals."""
+    tel = _mk()
+    tel.on_submit(0, 4, 9, True)
+    tel.on_admit(0, 0)
+    tel.on_complete(0, 3, nfes=12.0, tokens_out=9)
+    t = tel.report()["totals"]
+    c = tel.registry.snapshot()["counters"]
+    assert c["rounds"] == t["decode_steps"]
+    assert c["decode.substeps"] == t["decode_substeps"]
+    assert c["nfes.expected"] == pytest.approx(t["nfes_expected"])
+    assert c["tokens.out"] == t["tokens_out"]
+    assert c["nfes.device"] == pytest.approx(t["nfes_device"])
+    assert c["requests.completed"] == t["num_completed"]
+    assert c["requests.submitted"] == t["num_requests"]
