@@ -1,0 +1,204 @@
+"""Paged-decode roofline: measured bytes/token vs the ``bytes_min`` model.
+
+The contiguous decode kernel's traffic floor (bench_kernels.py) charges the
+full ring cache every step: ``2*B*S*Hkv*D*4 + 2*B*Hq*D*4`` — every slot
+streams S entries whether or not they are valid yet.  The paged layout
+(DESIGN.md §15) only gathers a row's *resident* pages, so its measured
+traffic sits between the true validity floor (valid entries only) and the
+contiguous full-cache model, with a bounded page-granularity overhead
+(<= (L + P - 1) / L per row from the partially-filled frontier page).
+
+This bench builds a mixed-valid-length decode batch, runs the paged Pallas
+kernel against both the paged oracle and the contiguous reference (the
+bit-identity contract), and reports three traffic figures per token:
+
+  bytes_floor     valid entries only — unreachable ideal
+  bytes_measured  resident pages actually gathered (what the paged kernel
+                  streams; the page-touch model the serving batcher also
+                  reports per decode token)
+  bytes_contig    the contiguous kernel's full-cache traffic
+
+``--assert-budget`` (the CI roofline gate) fails unless
+``bytes_measured <= BUDGET_FACTOR * bytes_floor`` and
+``bytes_measured <= bytes_contig`` — i.e. page granularity costs at most
+the fixed budget over the ideal and the paged path never reads more than
+the contiguous one.  The int8 point repeats the measurement with quantized
+pages (values in int8, per-entry scales), whose budget is checked against
+a floor shrunk by the quantized payload.
+
+Usage: PYTHONPATH=src python benchmarks/bench_paged_roofline.py [--assert-budget]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# page granularity + pos-plane budget over the valid-entries floor; the
+# shortest row in the workload below (L=10, P=4) wastes at most
+# ceil(10/4)*4/10 = 1.2x on the frontier page, so 1.5 leaves headroom
+# without letting a full-cache regression (S/L ~ 3-6x here) sneak through
+BUDGET_FACTOR = 1.5
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def build_paged_batch(key, B, S, P, Hkv, D, lengths):
+    """Mixed-valid-length paged decode batch: per-row page chains over a
+    shared pool, sentinel page 0 for the unallocated tail."""
+    n = S // P
+    resident = [int(np.ceil(L / P)) for L in lengths]
+    Np = 1 + sum(resident)
+    kk, kv = jax.random.split(key)
+    k_pages = jax.random.normal(kk, (Np, P, Hkv, D), jnp.float32)
+    v_pages = jax.random.normal(kv, (Np, P, Hkv, D), jnp.float32)
+    pos = np.full((Np, P), INT32_MAX, np.int64)
+    bt = np.zeros((B, n), np.int32)
+    pid = 1
+    for b, L in enumerate(lengths):
+        for j in range(resident[b]):
+            bt[b, j] = pid
+            for o in range(P):
+                p = j * P + o
+                if p < L:
+                    pos[pid, o] = p
+            pid += 1
+    # sentinel page carries nothing readable
+    k_pages = k_pages.at[0].set(0.0)
+    v_pages = v_pages.at[0].set(0.0)
+    pos_pages = jnp.asarray(np.minimum(pos, INT32_MAX), jnp.int32)
+    return k_pages, v_pages, pos_pages, jnp.asarray(bt), resident
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--assert-budget", action="store_true",
+                    help="fail unless measured bytes/token is within "
+                         f"{BUDGET_FACTOR}x of the valid-entries floor and "
+                         "never above the contiguous full-cache model")
+    args, _ = ap.parse_known_args(argv)
+
+    from benchmarks.common import emit, timed
+    from repro.kernels.ops import (
+        paged_decode_attention,
+        paged_decode_attention_q8,
+        paged_guided_decode_attention,
+    )
+    from repro.kernels.ref import (
+        paged_decode_attention_q8_ref,
+        paged_decode_attention_ref,
+        paged_guided_decode_attention_ref,
+        quantize_page_ref,
+    )
+
+    B, S, P, Hq, Hkv, D = 8, 64, 4, 8, 2, 64
+    lengths = [10, 25, 64, 33, 17, 41, 12, 56]  # mixed-length workload
+    key = jax.random.PRNGKey(0)
+    k_pages, v_pages, pos_pages, bt, resident = build_paged_batch(
+        key, B, S, P, Hkv, D, lengths
+    )
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, Hq, 1, D), jnp.float32)
+    position = jnp.asarray(lengths, jnp.int32) - 1
+
+    out = paged_decode_attention(q, k_pages, v_pages, pos_pages, bt, position)
+    ref = paged_decode_attention_ref(
+        q, k_pages, v_pages, pos_pages, bt, position
+    )
+    parity = bool(jnp.allclose(out, ref, atol=1e-5))
+
+    # traffic per decoded token (one decode step serves B rows -> B tokens)
+    entry = Hkv * D * 4 * 2  # one K + one V entry, f32
+    qout = 2 * Hq * D * 4  # per-row query in + output out
+    bytes_floor = (sum(lengths) * entry + B * qout) / B
+    bytes_measured = (
+        sum(r * P for r in resident) * (entry + 4) + B * qout
+    ) / B  # resident pages: K+V+pos planes, frontier pages charged in full
+    bytes_contig = (B * S * entry + B * qout) / B
+
+    us = timed(
+        jax.jit(
+            lambda *a: paged_decode_attention_ref(*a)
+        ),
+        q, k_pages, v_pages, pos_pages, bt, position,
+    )
+    emit(
+        "paged_roofline_f32", us,
+        f"parity={int(parity)};B={B};S={S};P={P};Hkv={Hkv};D={D};"
+        f"bytes_floor={bytes_floor:.0f};bytes_measured={bytes_measured:.0f};"
+        f"bytes_contig={bytes_contig:.0f};"
+        f"overhead_vs_floor={bytes_measured / bytes_floor:.3f}x;"
+        f"cut_vs_contig={bytes_contig / bytes_measured:.2f}x",
+    )
+
+    # int8 pages: same walk, quantized payload + per-entry scales
+    k_q, k_s = quantize_page_ref(k_pages)
+    v_q, v_s = quantize_page_ref(v_pages)
+    out8 = paged_decode_attention_q8(
+        q, k_q, k_s, v_q, v_s, pos_pages, bt, position
+    )
+    ref8 = paged_decode_attention_q8_ref(
+        q, k_q, k_s, v_q, v_s, pos_pages, bt, position
+    )
+    parity8 = bool(jnp.allclose(out8, ref8, atol=1e-5))
+    qerr = float(jnp.max(jnp.abs(out8 - ref)))
+    entry8 = Hkv * D * 1 * 2 + Hkv * 4 * 2  # int8 K+V + f32 scales
+    floor8 = (sum(lengths) * entry8 + B * qout) / B
+    measured8 = (sum(r * P for r in resident) * (entry8 + 4) + B * qout) / B
+    emit(
+        "paged_roofline_int8", 0.0,
+        f"parity={int(parity8)};quant_err={qerr:.3g};"
+        f"bytes_floor={floor8:.0f};bytes_measured={measured8:.0f};"
+        f"overhead_vs_floor={measured8 / floor8:.3f}x;"
+        f"cut_vs_f32={bytes_measured / measured8:.2f}x",
+    )
+
+    # fused guidance epilogue: the cond/uncond pack decodes in one call and
+    # the combine happens in-kernel, so the two branch outputs never round-
+    # trip through HBM (saves 2 writes + 2 reads of (B, Hq, D) per token)
+    bt2 = jnp.concatenate([bt, bt], axis=0)
+    q2 = jnp.concatenate([q, q * 0.5], axis=0)
+    pos2 = jnp.concatenate([position, position], axis=0)
+    comb, gamma = paged_guided_decode_attention(
+        q2, k_pages, v_pages, pos_pages, bt2, pos2, guidance_scale=1.5
+    )
+    rcomb, rpart = paged_guided_decode_attention_ref(
+        q2, k_pages, v_pages, pos_pages, bt2, pos2, guidance_scale=1.5
+    )
+    p = jnp.sum(rpart, axis=1)
+    rgamma = p[:, 0] / jnp.maximum(jnp.sqrt(p[:, 1] * p[:, 2]), 1e-12)
+    parityg = bool(
+        jnp.allclose(comb, rcomb, atol=1e-5)
+        and jnp.allclose(gamma, rgamma, atol=1e-5)
+    )
+    epilogue_saved = 4 * Hq * D * 4  # per token: 2 branch outs written+read
+    emit(
+        "paged_roofline_fused_epilogue", 0.0,
+        f"parity={int(parityg)};scale=1.5;"
+        f"epilogue_bytes_saved_per_token={epilogue_saved}",
+    )
+
+    if args.assert_budget:
+        for tag, meas, floor in (
+            ("f32", bytes_measured, bytes_floor),
+            ("int8", measured8, floor8),
+        ):
+            assert meas <= BUDGET_FACTOR * floor, (
+                f"{tag}: measured bytes/token {meas:.0f} exceeds "
+                f"{BUDGET_FACTOR}x the valid-entries floor {floor:.0f}"
+            )
+        assert bytes_measured <= bytes_contig, (
+            f"paged path reads more than the contiguous full cache: "
+            f"{bytes_measured:.0f} vs {bytes_contig:.0f}"
+        )
+        assert parity and parity8 and parityg, "kernel parity failed"
+        print("# paged roofline budget OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,11 +75,16 @@ def load_history(path) -> list:
     return [data]  # legacy snapshot becomes the first history entry
 
 
-# config knobs that must match for two history entries' savings to be
-# comparable (mesh is excluded: sharded runs are bit-identical by contract)
+# Config knobs that must match for two history entries' savings to be
+# comparable.  mesh / horizon / policy are included even though today's
+# headline point is always the unsharded H=1 three-lane run: a CI matrix
+# cell (e.g. --policy compress --horizon 8) appends entries whose
+# *workload construction* may drift from the plain smoke run's in future
+# edits, and the regression gate must never let one matrix cell's entry
+# gate a different cell.
 COMPARABLE_KEYS = (
     "arch", "smoke", "requests", "max_slots", "scale", "gamma_bar",
-    "linear_window", "seed",
+    "linear_window", "seed", "mesh", "horizon", "policy",
 )
 
 
@@ -151,6 +156,11 @@ def main(argv=None):
                          "'all' sweeps the whole registry.  Honors "
                          "--horizon (the fused run must stay token- and "
                          "ledger-identical to H=1)")
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="KV page size for the paged three-lane point "
+                         "(DESIGN.md §15); tokens/ledgers must stay "
+                         "bit-identical to the contiguous run, peak "
+                         "resident KV bytes must be strictly below it")
     ap.add_argument("--out", default="BENCH_serving.json")
     # tolerate a host harness's own flags (benchmarks/run.py --in-process
     # imports this module and calls main() under its own sys.argv)
@@ -234,6 +244,61 @@ def main(argv=None):
     done3 = bat3.run()
     rep3 = bat3.report()
     t3 = rep3["totals"]
+
+    # Paged-KV point (DESIGN.md §15): the identical three-lane workload on
+    # the paged cache.  Tokens and NFE ledgers are bit-identical by the
+    # §15 contract; what the paged path buys is memory economics — peak
+    # resident KV bytes (pages actually held) strictly below the
+    # contiguous layout's always-full per-lane cache buffers, plus a
+    # measured decode bytes/token figure (page-touch accounting) that the
+    # paged-roofline CI job gates against the ``bytes_min`` traffic model.
+    def _contiguous_kv_bytes(b):
+        total = 0
+        for lane in (b.guided, b.linear, b.cond):
+            if lane.state is None:
+                continue
+            for caches in (
+                lane.state.caches_c, getattr(lane.state, "caches_u", None)
+            ):
+                if caches is None:
+                    continue
+                for is_attn, c in zip(b._plan_attn, caches):
+                    if is_attn:
+                        total += sum(
+                            leaf.nbytes for leaf in jax.tree.leaves(c)
+                        )
+        return total
+
+    bat3p = StepBatcher(
+        api, params, ec,
+        BatcherConfig(
+            max_slots=args.max_slots, paged=True, page_size=args.page_size
+        ),
+        coeffs=coeffs,
+    )
+    for r, a in zip(reqs3, arrivals):
+        bat3p.submit(r, arrival_step=a)
+    done3p = bat3p.run()
+    rep3p = bat3p.report()
+    t3p = rep3p["totals"]
+    assert t3p["nfes_device"] == t3p["nfes_expected"], (
+        "paged NFE ledger not conserved"
+    )
+    for rid in done3:
+        np.testing.assert_array_equal(
+            done3p[rid]["tokens"], done3[rid]["tokens"],
+            err_msg=f"paged tokens drifted for request {rid}",
+        )
+    pool_point = rep3p["page_pool"]
+    contig_bytes = _contiguous_kv_bytes(bat3)
+    pool_point["contiguous_kv_bytes"] = contig_bytes
+    assert pool_point["resident"] == 0, (
+        f"paged run leaked pages after drain: {pool_point}"
+    )
+    assert pool_point["peak_resident_bytes"] < contig_bytes, (
+        "paged peak resident KV bytes not below the contiguous layout: "
+        f"{pool_point['peak_resident_bytes']} vs {contig_bytes}"
+    )
 
     # Horizon-fused point (DESIGN.md §12): the three-lane workload with
     # doubled budgets (decode-dominated, several horizons per request) at
@@ -430,6 +495,10 @@ def main(argv=None):
     print(f"step_batcher_mean_occupancy,{t['mean_occupancy']:.3f}")
     print(f"three_lane_tokens_per_s,{t3['tokens_per_sec']:.1f}")
     print(f"three_lane_dispatches_per_token,{t3['dispatches_per_token']:.3f}")
+    print(f"paged_decode_bytes_per_token,{pool_point['decode_bytes_per_token']:.0f}")
+    print(f"paged_peak_resident_kv_bytes,{pool_point['peak_resident_bytes']}")
+    print(f"contiguous_kv_bytes,{contig_bytes}")
+    print(f"paged_shared_hits,{pool_point['shared_hits']}")
     if rep3h is not None:
         t3h, t3h1 = rep3h["totals"], rep3h1["totals"]
         print(f"horizon{args.horizon}_tokens_per_s,{t3h['tokens_per_sec']:.1f}")
@@ -462,6 +531,8 @@ def main(argv=None):
             "linear_window": args.linear_window,
             "mesh": args.mesh,
             "horizon": args.horizon,
+            "policy": args.policy,
+            "page_size": args.page_size,
             "seed": args.seed,
         },
         # wall-clock headline (the NFE savings above are scheduling wins;
@@ -478,6 +549,7 @@ def main(argv=None):
         "round_scheduler": round_stats,
         "step_batcher": rep,
         "three_lane_batcher": rep3,
+        "three_lane_paged": rep3p,
         "policy_points": policy_points,
     }
     if rep3h is not None:

@@ -115,6 +115,45 @@ class GuidanceExecutor:
             )
         return cfg_combine_with_gamma(eps_u, eps_c, scale)
 
+    # -- fused paged decode epilogue (DESIGN.md §15) -------------------------
+
+    def paged_decode_combine(
+        self, q, k_pages, v_pages, pos_pages, block_tables, position, scale,
+        *, window=None,
+    ):
+        """Guided paged decode attention with the guidance combine fused
+        into the attention epilogue: the cond/uncond pair's attention
+        outputs are linearly combined in VMEM (plus the Eq. 7 cosine
+        partials) so neither branch's output round-trips through HBM.
+
+        ``q``/``block_tables``/``position`` carry the [2B] pack (cond rows
+        first; DESIGN.md §3).  Returns (combined (B, Hq, 1, D), gamma (B,))
+        where gamma is the branches' head-reduced cosine.  The reference
+        backend runs both branches through the unfused paged oracle and
+        combines in jnp — the parity oracle the fused kernel is tested
+        against (tests/test_paged_kernels.py).
+        """
+        backend = self.resolved_backend()
+        if backend == "fused" and jnp.ndim(scale) == 0:
+            from repro.kernels.ops import paged_guided_decode_attention
+
+            interpret = (
+                _default_interpret() if self.interpret is None else self.interpret
+            )
+            return paged_guided_decode_attention(
+                q, k_pages, v_pages, pos_pages, block_tables, position,
+                guidance_scale=float(scale), window=window, interpret=interpret,
+            )
+        from repro.kernels.ref import paged_guided_decode_attention_ref
+
+        combined, partials = paged_guided_decode_attention_ref(
+            q, k_pages, v_pages, pos_pages, block_tables, position,
+            guidance_scale=scale, window=window,
+        )
+        p = jnp.sum(partials.astype(jnp.float32), axis=1)  # (B, 3) over heads
+        gamma = p[:, 0] / jnp.maximum(jnp.sqrt(p[:, 1] * p[:, 2]), 1e-12)
+        return combined, gamma
+
     # -- NFE ledger ---------------------------------------------------------
 
     @staticmethod

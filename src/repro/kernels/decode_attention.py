@@ -1,48 +1,71 @@
-"""Single-token decode attention against a KV cache — Pallas TPU kernel.
+"""Single-token decode attention — contiguous and paged Pallas TPU kernels.
 
 The guided-decoding hot spot (EXPERIMENTS §Perf pair 1): one query per
-request vs a (B, S, Hkv, Dh) ring cache.  Purely bandwidth-bound — the
-kernel streams each (bk, Dh) cache tile through VMEM exactly once and
-carries the online-softmax state in revisited per-(b,h) output blocks, so
-HBM traffic is the structural minimum (K+V read once, no f32 cache copies,
-no materialized (B,H,S) score tensor round-trip).
+request vs a KV cache.  Purely bandwidth-bound — each kernel streams every
+cache tile through VMEM exactly once and carries the online-softmax state
+in revisited per-(b,h) output blocks, so HBM traffic is the structural
+minimum (K+V read once, no f32 cache copies, no materialized (B,H,S) score
+tensor round-trip).
 
-Validity masking matches ``common.attention_decode``: a cache slot is
-attended iff ``pos[slot] <= position`` and (sliding window) ``pos[slot] >
-position - window`` — so ring-buffer semantics are preserved.
+Two cache layouts share the same masking contract:
 
-Grid (B, Hq, S // bk); kv axis innermost/"arbitrary".  GQA: the K/V/pos
-BlockSpecs map query head h -> kv head h // group (no repeated KV in HBM).
+* contiguous — ``decode_attention_raw``: per-request (B, S, Hkv, D) ring
+  caches, grid (B, Hq, S // bk).
+* paged (DESIGN.md §15) — ``paged_decode_attention_raw``: a global page
+  pool (Np, P, Hkv, D) walked through per-request block tables (B, n) via
+  scalar-prefetch index maps, grid (B, Hq, n).  Page 0 is the sentinel
+  page (``pos`` pinned at int32 max), so unallocated block-table entries
+  contribute nothing.  ``paged_decode_attention_q8_raw`` reads
+  int8-quantized pages with per-(page, slot, head) scales (the
+  ``kv_int8_pages`` perf flag's storage format).
+
+Validity masking matches ``common.attention_decode`` in every variant: a
+cache slot is attended iff ``pos[slot] <= position`` and (sliding window)
+``pos[slot] > position - window`` — ring-buffer semantics are preserved
+because the block table is indexed by ``(position % S) // P``.
+
+``paged_guided_decode_attention_raw`` additionally fuses the guidance
+``linear_combine`` epilogue (Eq. 3) into the walk: the query pack carries
+cond rows then uncond rows (2B), both branches' block tables are walked in
+one grid pass, and the combined output plus the cosine-gamma partials
+(Eq. 7, over the attention feature axes) are written directly — the two
+branch outputs never round-trip through HBM.
+
+``interpret=None`` gates on platform exactly like ``linear_combine``:
+compiled on a real TPU backend, interpret mode everywhere else.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.linear_combine import default_interpret
 
 DEFAULT_BK = 1024
 NEG_INF = -1e30
 
 
-def _kernel(pos_scalar_ref, q_ref, k_ref, v_ref, pos_ref, acc_ref, m_ref, l_ref,
-             *, bk, scale, window):
-    ki = pl.program_id(2)
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Platform-gated default shared with linear_combine: callers that do
+    not thread the flag get the compiled kernel on TPU, interpret mode on
+    every other backend (the satellite-1 contract)."""
+    return default_interpret() if interpret is None else bool(interpret)
 
-    @pl.when(ki == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)  # (1, d)
-    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
-    v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
-    slot_pos = pos_ref[0]  # (bk,) int32
-    cur = pos_scalar_ref[0, 0]  # this request's decode position
+# ---------------------------------------------------------------------------
+# shared online-softmax block update
+# ---------------------------------------------------------------------------
 
+
+def _softmax_block(acc_ref, m_ref, l_ref, q, k, v, slot_pos, cur, *,
+                   scale, window):
+    """One KV tile's online-softmax update against revisited (b,h) state."""
     s = (q @ k.T) * scale  # (1, bk)
     valid = slot_pos <= cur
     if window is not None:
@@ -62,12 +85,46 @@ def _kernel(pos_scalar_ref, q_ref, k_ref, v_ref, pos_ref, acc_ref, m_ref, l_ref,
     m_ref[0, 0] = m_new
 
 
+def _init_state(acc_ref, m_ref, l_ref):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+
+# ---------------------------------------------------------------------------
+# contiguous ring-cache kernel
+# ---------------------------------------------------------------------------
+
+
+def _kernel(pos_scalar_ref, q_ref, k_ref, v_ref, pos_ref, acc_ref, m_ref, l_ref,
+             *, bk, scale, window):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        _init_state(acc_ref, m_ref, l_ref)
+
+    _softmax_block(
+        acc_ref, m_ref, l_ref,
+        q_ref[0, 0].astype(jnp.float32),  # (1, d)
+        k_ref[0, 0].astype(jnp.float32),  # (bk, d)
+        v_ref[0, 0].astype(jnp.float32),
+        pos_ref[0],                       # (bk,) int32
+        pos_scalar_ref[0, 0],             # this request's decode position
+        scale=scale, window=window,
+    )
+
+
 def decode_attention_raw(
     q, k_cache, v_cache, pos_cache, position, *,
-    window=None, bk: int = DEFAULT_BK, interpret: bool = True,
+    window=None, bk: int = DEFAULT_BK, interpret: Optional[bool] = None,
 ):
     """q: (B, Hq, 1, D); k/v_cache: (B, S, Hkv, D); pos_cache: (B, S) int32;
-    position: (B,) int32.  Returns (acc, m, l) un-normalized."""
+    position: (B,) int32.  Returns (acc, m, l) un-normalized.
+
+    ``interpret=None`` resolves via ``default_interpret()`` — compiled on
+    TPU, interpret elsewhere."""
+    interpret = _resolve_interpret(interpret)
     B, Hq, _, D = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     group = Hq // Hkv
@@ -104,3 +161,285 @@ def decode_attention_raw(
         interpret=interpret,
     )(pos_s, q, kt, vt, pos_cache.astype(jnp.int32))
     return acc, m, l
+
+
+# ---------------------------------------------------------------------------
+# paged kernel: block-table walk over a global page pool (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(bt_ref, pos_scalar_ref, q_ref, k_ref, v_ref, pos_ref,
+                  acc_ref, m_ref, l_ref, *, scale, window):
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        _init_state(acc_ref, m_ref, l_ref)
+
+    b = pl.program_id(0)
+    _softmax_block(
+        acc_ref, m_ref, l_ref,
+        q_ref[0, 0].astype(jnp.float32),
+        k_ref[0, 0].astype(jnp.float32),  # (P, d) — one page, one kv head
+        v_ref[0, 0].astype(jnp.float32),
+        pos_ref[0],                       # (P,) int32
+        pos_scalar_ref[b, 0],
+        scale=scale, window=window,
+    )
+
+
+def _paged_q8_kernel(bt_ref, pos_scalar_ref, q_ref, k_ref, ks_ref, v_ref,
+                     vs_ref, pos_ref, acc_ref, m_ref, l_ref, *, scale, window):
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        _init_state(acc_ref, m_ref, l_ref)
+
+    b = pl.program_id(0)
+    # dequantize the int8 page against its per-(slot) scales in VMEM
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+    _softmax_block(
+        acc_ref, m_ref, l_ref,
+        q_ref[0, 0].astype(jnp.float32),
+        k, v, pos_ref[0], pos_scalar_ref[b, 0],
+        scale=scale, window=window,
+    )
+
+
+def _paged_specs(B, Hq, group, P, D, *, quantized: bool):
+    """in_specs for the paged walk; index maps read the prefetched block
+    table — grid (B, Hq, n), page id ``bt[b, j]``."""
+    specs = [
+        pl.BlockSpec((B, 1), lambda b, h, j, bt: (0, 0)),  # positions (SMEM-ish)
+        pl.BlockSpec((1, 1, 1, D), lambda b, h, j, bt: (b, h, 0, 0)),  # q
+        pl.BlockSpec(  # k page: (Np, Hkv, P, D) tile (1, 1, P, D) -> drop h
+            (1, 1, P, D), lambda b, h, j, bt: (bt[b, j], h // group, 0, 0)
+        ),
+    ]
+    if quantized:
+        specs.append(pl.BlockSpec(
+            (1, 1, P), lambda b, h, j, bt: (bt[b, j], h // group, 0)
+        ))
+    specs.append(pl.BlockSpec(
+        (1, 1, P, D), lambda b, h, j, bt: (bt[b, j], h // group, 0, 0)
+    ))
+    if quantized:
+        specs.append(pl.BlockSpec(
+            (1, 1, P), lambda b, h, j, bt: (bt[b, j], h // group, 0)
+        ))
+    specs.append(pl.BlockSpec((1, P), lambda b, h, j, bt: (bt[b, j], 0)))
+    return specs
+
+
+def _paged_out(B, Hq, D):
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, D), lambda b, h, j, bt: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, 1, 1), lambda b, h, j, bt: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, 1, 1), lambda b, h, j, bt: (b, h, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Hq, 1, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+    ]
+    return out_specs, out_shape
+
+
+def paged_decode_attention_raw(
+    q, k_pages, v_pages, pos_pages, block_tables, position, *,
+    window=None, interpret: Optional[bool] = None,
+):
+    """Paged decode attention: walk each request's block table over the
+    global page pool.
+
+    q: (B, Hq, 1, D); k/v_pages: (Np, P, Hkv, D); pos_pages: (Np, P) int32;
+    block_tables: (B, n) int32 (entry 0 = the sentinel page, pos pinned at
+    int32 max, so unallocated tail entries are inert); position: (B,).
+    Returns (acc, m, l) un-normalized — same contract as the contiguous
+    kernel, parity against ``ref.paged_decode_attention_ref``."""
+    interpret = _resolve_interpret(interpret)
+    B, Hq, _, D = q.shape
+    Np, P, Hkv = k_pages.shape[:3]
+    n = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    kt = jnp.swapaxes(k_pages, 1, 2)  # (Np, Hkv, P, D)
+    vt = jnp.swapaxes(v_pages, 1, 2)
+    pos_s = position.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window)
+    out_specs, out_shape = _paged_out(B, Hq, D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n),
+        in_specs=_paged_specs(B, Hq, group, P, D, quantized=False),
+        out_specs=out_specs,
+    )
+    acc, m, l = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos_s, q, kt, vt,
+      pos_pages.astype(jnp.int32))
+    return acc, m, l
+
+
+def paged_decode_attention_q8_raw(
+    q, k_pages, k_scale, v_pages, v_scale, pos_pages, block_tables, position,
+    *, window=None, interpret: Optional[bool] = None,
+):
+    """Paged decode attention over int8-quantized KV pages.
+
+    k/v_pages: (Np, P, Hkv, D) int8; k/v_scale: (Np, P, Hkv) f32 per-entry
+    per-head dequant scales (DESIGN.md §15 page format).  Other arguments
+    and the (acc, m, l) contract match ``paged_decode_attention_raw``."""
+    interpret = _resolve_interpret(interpret)
+    B, Hq, _, D = q.shape
+    Np, P, Hkv = k_pages.shape[:3]
+    n = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    kt = jnp.swapaxes(k_pages, 1, 2)  # (Np, Hkv, P, D) int8
+    vt = jnp.swapaxes(v_pages, 1, 2)
+    kst = jnp.swapaxes(k_scale, 1, 2)  # (Np, Hkv, P)
+    vst = jnp.swapaxes(v_scale, 1, 2)
+    pos_s = position.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_paged_q8_kernel, scale=scale, window=window)
+    out_specs, out_shape = _paged_out(B, Hq, D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n),
+        in_specs=_paged_specs(B, Hq, group, P, D, quantized=True),
+        out_specs=out_specs,
+    )
+    acc, m, l = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos_s, q, kt, kst, vt, vst,
+      pos_pages.astype(jnp.int32))
+    return acc, m, l
+
+
+# ---------------------------------------------------------------------------
+# fused guidance epilogue: cond/uncond pack + Eq. 3 combine in one walk
+# ---------------------------------------------------------------------------
+
+
+def _paged_guided_kernel(
+    bt_ref, pos_scalar_ref, qc_ref, qu_ref, kc_ref, vc_ref, pc_ref,
+    ku_ref, vu_ref, pu_ref, out_ref, gp_ref,
+    accc_ref, mc_ref, lc_ref, accu_ref, mu_ref, lu_ref,
+    *, scale, gscale, window, B,
+):
+    ji = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        _init_state(accc_ref, mc_ref, lc_ref)
+        _init_state(accu_ref, mu_ref, lu_ref)
+
+    b = pl.program_id(0)
+    _softmax_block(
+        accc_ref, mc_ref, lc_ref,
+        qc_ref[0, 0].astype(jnp.float32),
+        kc_ref[0, 0].astype(jnp.float32), vc_ref[0, 0].astype(jnp.float32),
+        pc_ref[0], pos_scalar_ref[b, 0],
+        scale=scale, window=window,
+    )
+    _softmax_block(
+        accu_ref, mu_ref, lu_ref,
+        qu_ref[0, 0].astype(jnp.float32),
+        ku_ref[0, 0].astype(jnp.float32), vu_ref[0, 0].astype(jnp.float32),
+        pu_ref[0], pos_scalar_ref[b + B, 0],
+        scale=scale, window=window,
+    )
+
+    @pl.when(ji == nj - 1)
+    def _epilogue():
+        # both branches' outputs normalize and combine in VMEM — neither
+        # round-trips through HBM (Eq. 3: u + s * (c - u)); the gamma
+        # partials (Eq. 7 over the head's feature axis) ride along so the
+        # caller can reduce the cosine diagnostic without re-reading them.
+        oc = accc_ref[0, 0] / jnp.maximum(lc_ref[0, 0], 1e-30)
+        ou = accu_ref[0, 0] / jnp.maximum(lu_ref[0, 0], 1e-30)
+        out_ref[0, 0] = ou + gscale * (oc - ou)
+        gp_ref[0, 0, 0] = jnp.sum(oc * ou)
+        gp_ref[0, 0, 1] = jnp.sum(ou * ou)
+        gp_ref[0, 0, 2] = jnp.sum(oc * oc)
+
+
+def paged_guided_decode_attention_raw(
+    q, k_pages, v_pages, pos_pages, block_tables, position, *,
+    guidance_scale: float, window=None, interpret: Optional[bool] = None,
+):
+    """Paged decode attention for the cond/uncond pack with the guidance
+    combine fused as the kernel epilogue.
+
+    q: (2B, Hq, 1, D) — cond rows first, uncond rows second (the serving
+    pack convention); block_tables (2B, n) and position (2B,) likewise.
+    Returns (combined (B, Hq, 1, D) f32, partials (B, Hq, 3) f32) where
+    ``partials[..., :]`` are (dot, |u|^2, |c|^2) over the head feature
+    axis — summed over heads by the caller they reduce to the Eq. 7
+    cosine gamma of the two attention outputs."""
+    interpret = _resolve_interpret(interpret)
+    B2, Hq, _, D = q.shape
+    assert B2 % 2 == 0, "packed kernel expects cond rows then uncond rows"
+    B = B2 // 2
+    Np, P, Hkv = k_pages.shape[:3]
+    n = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    kt = jnp.swapaxes(k_pages, 1, 2)  # (Np, Hkv, P, D)
+    vt = jnp.swapaxes(v_pages, 1, 2)
+    posq = pos_pages.astype(jnp.int32)
+    pos_s = position.reshape(B2, 1).astype(jnp.int32)
+    bt = block_tables.astype(jnp.int32)
+    qc, qu = q[:B], q[B:]
+
+    kernel = functools.partial(
+        _paged_guided_kernel, scale=scale, gscale=float(guidance_scale),
+        window=window, B=B,
+    )
+    kv_c = pl.BlockSpec(
+        (1, 1, P, D), lambda b, h, j, t: (t[b, j], h // group, 0, 0))
+    kv_u = pl.BlockSpec(
+        (1, 1, P, D), lambda b, h, j, t: (t[b + B, j], h // group, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n),
+        in_specs=[
+            pl.BlockSpec((B2, 1), lambda b, h, j, t: (0, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, t: (b, h, 0, 0)),
+            kv_c, kv_c,
+            pl.BlockSpec((1, P), lambda b, h, j, t: (t[b, j], 0)),
+            kv_u, kv_u,
+            pl.BlockSpec((1, P), lambda b, h, j, t: (t[b + B, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 3), lambda b, h, j, t: (b, h, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j, t: (b, h, 0, 0)),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Hq, 1, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 3), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq, 1, 1), jnp.float32),
+    ]
+    outs = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+    )(bt, pos_s, qc, qu, kt, vt, posq, kt, vt, posq)
+    combined, partials = outs[0], outs[1]
+    return combined, partials

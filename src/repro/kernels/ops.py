@@ -11,7 +11,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import decode_attention_raw
+from repro.kernels.decode_attention import (
+    decode_attention_raw,
+    paged_decode_attention_q8_raw,
+    paged_decode_attention_raw,
+    paged_guided_decode_attention_raw,
+)
 from repro.kernels.flash_attention import flash_attention_raw
 from repro.kernels.fused_guidance import fused_guidance_2d
 from repro.kernels.linear_combine import linear_combine_1d
@@ -50,17 +55,65 @@ def linear_combine(history, beta, *, interpret=None, block: int = 1024):
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
 def decode_attention(
     q, k_cache, v_cache, pos_cache, position, *, window=None, bk: int = 1024,
-    interpret: bool = True,
+    interpret=None,
 ):
     """Single-token decode attention vs a ring KV cache (normalized).
 
     q: (B, Hq, 1, D); caches (B, S, Hkv, D) + pos (B, S); position (B,).
+    ``interpret=None`` gates on platform (compiled on TPU, interpret
+    elsewhere) — same contract as ``linear_combine``.
     """
     acc, m, l = decode_attention_raw(
         q, k_cache, v_cache, pos_cache, position,
         window=window, bk=bk, interpret=interpret,
     )
     return acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(
+    q, k_pages, v_pages, pos_pages, block_tables, position, *,
+    window=None, interpret=None,
+):
+    """Paged decode attention (normalized): walk (B, n) block tables over
+    a global (Np, P, Hkv, D) page pool.  Page 0 is the inert sentinel."""
+    acc, m, l = paged_decode_attention_raw(
+        q, k_pages, v_pages, pos_pages, block_tables, position,
+        window=window, interpret=interpret,
+    )
+    return acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention_q8(
+    q, k_pages, k_scale, v_pages, v_scale, pos_pages, block_tables, position,
+    *, window=None, interpret=None,
+):
+    """Paged decode attention over int8 pages with per-entry scales."""
+    acc, m, l = paged_decode_attention_q8_raw(
+        q, k_pages, k_scale, v_pages, v_scale, pos_pages, block_tables,
+        position, window=window, interpret=interpret,
+    )
+    return acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("guidance_scale", "window", "interpret"))
+def paged_guided_decode_attention(
+    q, k_pages, v_pages, pos_pages, block_tables, position, *,
+    guidance_scale: float, window=None, interpret=None,
+):
+    """Fused-epilogue paged attention for the cond/uncond pack.
+
+    q/block_tables/position carry 2B rows (cond then uncond).  Returns
+    (combined (B, Hq, 1, D), gamma (B,)) where gamma is the Eq. 7 cosine
+    of the two branches' attention outputs, reduced over heads."""
+    combined, partials = paged_guided_decode_attention_raw(
+        q, k_pages, v_pages, pos_pages, block_tables, position,
+        guidance_scale=guidance_scale, window=window, interpret=interpret,
+    )
+    p = jnp.sum(partials, axis=1)  # (B, 3) over heads
+    gamma = p[:, 0] / jnp.maximum(jnp.sqrt(p[:, 1] * p[:, 2]), 1e-12)
+    return combined, gamma
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))

@@ -43,6 +43,82 @@ def decode_attention_ref(q, k_cache, v_cache, pos_cache, position, *, window=Non
     return jnp.einsum("bhqk,bhkd->bhqd", w, vr.astype(jnp.float32))
 
 
+def _gather_pages(pages, block_tables):
+    """(Np, P, ...) pages + (B, n) tables -> contiguous (B, n*P, ...).
+
+    This is the bit-identity bridge: a paged cache gathered through its
+    block table IS the contiguous cache (sentinel/unallocated entries carry
+    pos = int32 max and mask out exactly like never-written ring slots)."""
+    g = pages[block_tables]                     # (B, n, P, ...)
+    B, n, P = g.shape[:3]
+    return g.reshape((B, n * P) + g.shape[3:])
+
+
+def paged_decode_attention_ref(
+    q, k_pages, v_pages, pos_pages, block_tables, position, *, window=None
+):
+    """Oracle for the paged kernel: gather pages into the contiguous layout
+    and defer to ``decode_attention_ref``.  k/v_pages: (Np, P, Hkv, D);
+    pos_pages: (Np, P); block_tables: (B, n)."""
+    bt = block_tables.astype(jnp.int32)
+    return decode_attention_ref(
+        q,
+        _gather_pages(k_pages, bt),
+        _gather_pages(v_pages, bt),
+        _gather_pages(pos_pages, bt),
+        position,
+        window=window,
+    )
+
+
+def quantize_page_ref(x):
+    """f32 (.., D) -> (int8 values, f32 per-row scale over the last axis).
+
+    Symmetric absmax quantization — the DESIGN.md §15 int8 page format."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def paged_decode_attention_q8_ref(
+    q, k_pages, k_scale, v_pages, v_scale, pos_pages, block_tables, position,
+    *, window=None,
+):
+    """Oracle for the int8 paged kernel: dequantize, gather, defer."""
+    k = k_pages.astype(jnp.float32) * k_scale[..., None]
+    v = v_pages.astype(jnp.float32) * v_scale[..., None]
+    return paged_decode_attention_ref(
+        q, k, v, pos_pages, block_tables, position, window=window
+    )
+
+
+def paged_guided_decode_attention_ref(
+    q, k_pages, v_pages, pos_pages, block_tables, position, *,
+    guidance_scale, window=None,
+):
+    """Oracle for the fused-epilogue kernel: run both branches through the
+    paged oracle, then combine per Eq. 3 and report the per-(b, h) gamma
+    partials (dot, |u|^2, |c|^2) over the feature axis."""
+    B2 = q.shape[0]
+    B = B2 // 2
+    out = paged_decode_attention_ref(
+        q, k_pages, v_pages, pos_pages, block_tables, position, window=window
+    )
+    oc, ou = out[:B], out[B:]
+    combined = ou + guidance_scale * (oc - ou)
+    partials = jnp.stack(
+        [
+            jnp.sum(oc * ou, axis=(-2, -1)),
+            jnp.sum(ou * ou, axis=(-2, -1)),
+            jnp.sum(oc * oc, axis=(-2, -1)),
+        ],
+        axis=-1,
+    )  # (B, Hq, 3)
+    return combined, partials
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """q: (B,Hq,S,D); k/v: (B,Hkv,S,D) -> (B,Hq,S,D) f32."""
     B, Hq, S, D = q.shape

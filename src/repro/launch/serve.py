@@ -134,6 +134,18 @@ def main():
                          "are identical to --horizon 1; admission/"
                          "migration/streaming quantize to horizon "
                          "boundaries")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve the KV cache from a global page pool with "
+                         "per-slot block tables (DESIGN.md §15; implies "
+                         "--continuous): identical prompt prefixes share "
+                         "pages, completed requests recycle theirs, tokens "
+                         "and NFE ledgers stay bit-identical to the "
+                         "contiguous layout")
+    ap.add_argument("--page-size", type=int, default=16, metavar="P",
+                    help="tokens per KV page in --paged mode")
+    ap.add_argument("--kv-int8-pages", action="store_true",
+                    help="store KV pages as int8 with per-entry scales "
+                         "(perf_flags.kv_int8_pages; --paged only)")
     ap.add_argument("--mesh", default=None, metavar="DXM",
                     help="serve sharded on a (d, m) data x model mesh "
                          "(e.g. 8x1), or 'host' for the data-majority "
@@ -213,8 +225,12 @@ def main():
 
     obs_on = bool(args.trace or args.trace_chrome or args.metrics_json
                   or args.strict_monitors or args.profile)
+    if args.kv_int8_pages:
+        from repro import perf_flags
+
+        perf_flags.set_flags(kv_int8_pages=True)
     if (args.continuous or args.linear or args.horizon > 1
-            or args.policy != "default" or obs_on):
+            or args.policy != "default" or args.paged or obs_on):
         from repro.obs import MetricsFlusher, ObsConfig, write_chrome, write_jsonl
         from repro.serving import BatcherConfig, StepBatcher
 
@@ -225,7 +241,8 @@ def main():
         )
         bat = StepBatcher(
             api, params, ec,
-            BatcherConfig(max_slots=args.requests, horizon=args.horizon),
+            BatcherConfig(max_slots=args.requests, horizon=args.horizon,
+                          paged=args.paged, page_size=args.page_size),
             coeffs=coeffs, mesh=mesh,
             obs=ObsConfig(
                 monitors=not args.no_monitors,
@@ -282,6 +299,14 @@ def main():
               f"{t['decode_substeps']} decode substeps)")
         print(f"  NFE ledger: device {t['nfes_device']:.0f} == "
               f"expected {t['nfes_expected']:.0f}")
+        if args.paged:
+            pp = rep["page_pool"]
+            print(f"  page pool: peak {pp['peak_resident']}/"
+                  f"{pp['num_pages'] - 1} pages "
+                  f"({pp['peak_resident_bytes'] / 1e6:.2f} MB), "
+                  f"shared hits {pp['shared_hits']}, "
+                  f"COW copies {pp['cow_copies']}, "
+                  f"decode bytes/token {pp['decode_bytes_per_token']:.0f}")
         mon = rep.get("monitors")
         if mon is not None:
             print(f"  invariant monitors: {mon['rounds_checked']} rounds "

@@ -333,25 +333,13 @@ def attention_chunked(
 
 
 
-def attention_decode(params, ac: AttnConfig, x, cache, position):
-    """Single-step decode: x (B,1,d); cache dict {k,v: (B,S,Hkv,Dh)}.
-
-    ``position`` (B,) int32 is the index of the new token.  The cache is
-    updated at ``position % S`` (ring-buffer semantics when sliding_window
-    equals the cache length; plain append otherwise).  Entries at positions
-    > current position (never written) are masked via the ``pos`` buffer.
-    """
+def _decode_attend(params, ac: AttnConfig, x, q, k_cache, v_cache, pos_cache,
+                   position):
+    """Shared decode-attention epilogue: single query vs a (B,S,Hkv,Dh)
+    cache with pos-buffer validity masking.  Both the contiguous and the
+    paged layout funnel through this exact op sequence, which is what makes
+    the paged path bitwise-identical to the contiguous one."""
     B = x.shape[0]
-    S = cache["k"].shape[1]
-    q, k_new, v_new = _project_qkv(params, ac, x, position[:, None])
-    slot = (position % S).astype(jnp.int32)
-    bidx = jnp.arange(B)
-    k_cache = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
-    v_cache = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
-    pos_cache = cache["pos"].at[bidx, slot].set(position.astype(jnp.int32))
-    k_cache = lsc(k_cache, "batch", "kvlen", "kvheads", None)
-    v_cache = lsc(v_cache, "batch", "kvlen", "kvheads", None)
-
     qg = _grouped(q, ac).astype(jnp.float32)[:, 0]  # (B,Hkv,G,Dh)
     scale = 1.0 / np.sqrt(ac.head_dim)
     s = _score_einsum("bhgd,bkhd->bhgk", qg, k_cache) * scale
@@ -367,8 +355,79 @@ def attention_decode(params, ac: AttnConfig, x, cache, position):
     y = out @ params["wo"]
     if ac.use_bias:
         y = y + params["bo"]
+    return y
+
+
+def attention_decode(params, ac: AttnConfig, x, cache, position):
+    """Single-step decode: x (B,1,d); cache dict {k,v: (B,S,Hkv,Dh)}.
+
+    ``position`` (B,) int32 is the index of the new token.  The cache is
+    updated at ``position % S`` (ring-buffer semantics when sliding_window
+    equals the cache length; plain append otherwise).  Entries at positions
+    > current position (never written) are masked via the ``pos`` buffer.
+    """
+    S = cache["k"].shape[1]
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, ac, x, position[:, None])
+    slot = (position % S).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    pos_cache = cache["pos"].at[bidx, slot].set(position.astype(jnp.int32))
+    k_cache = lsc(k_cache, "batch", "kvlen", "kvheads", None)
+    v_cache = lsc(v_cache, "batch", "kvlen", "kvheads", None)
+    y = _decode_attend(params, ac, x, q, k_cache, v_cache, pos_cache, position)
     new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
     return y, new_cache
+
+
+def paged_attention_decode(params, ac: AttnConfig, x, cache, pool, position):
+    """Paged single-step decode (DESIGN.md §15): cache carries only a block
+    table ``{"bt": (B, n)}``; K/V live in a global page pool
+    ``{"k"/"v": (Np, P, Hkv, Dh), "pos": (Np, P)}`` shared by every slot.
+
+    The new token's K/V is scattered into the slot's private frontier page
+    (``bt[b, (position % S) // P]``); a freed slot's table points at the
+    sentinel page 0, whose ``pos`` row the write redirect below pins at
+    int32 max, so stale decodes of inactive slots are absorbed.  The read
+    side gathers the table back into the contiguous (B, S, Hkv, Dh) layout
+    and funnels through ``_decode_attend`` — the attention math is the
+    contiguous path's, bit for bit (S rounds up to a page multiple; the
+    extra tail entries carry pos = int32 max and mask out exactly like
+    never-written ring slots).
+    """
+    B = x.shape[0]
+    bt = cache["bt"].astype(jnp.int32)  # (B, n)
+    n = bt.shape[1]
+    P = pool["pos"].shape[1]
+    S = n * P
+    q, k_new, v_new = _project_qkv(params, ac, x, position[:, None])
+    slot = (position % S).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    page = bt[bidx, slot // P]  # (B,)
+    off = slot % P
+    # sentinel redirect: writes routed to page 0 must not mark it valid, and
+    # must not carry values either — an inactive slot's hidden state is NaN
+    # (its table has zero valid entries, so its softmax is 0/0), and a NaN
+    # k/v landing in the shared page 0 would poison every active row that
+    # gathers page 0 in its table tail (0 * NaN = NaN in the value einsum).
+    absorb = (page == 0)[:, None, None]
+    k_val = jnp.where(absorb, 0, k_new[:, 0]).astype(pool["k"].dtype)
+    v_val = jnp.where(absorb, 0, v_new[:, 0]).astype(pool["v"].dtype)
+    k_pool = pool["k"].at[page, off].set(k_val)
+    v_pool = pool["v"].at[page, off].set(v_val)
+    pos_val = jnp.where(
+        page == 0, jnp.int32(jnp.iinfo(jnp.int32).max), position.astype(jnp.int32)
+    )
+    pos_pool = pool["pos"].at[page, off].set(pos_val)
+    k_cache = k_pool[bt].reshape(B, S, ac.num_kv_heads, ac.head_dim)
+    v_cache = v_pool[bt].reshape(B, S, ac.num_kv_heads, ac.head_dim)
+    pos_cache = pos_pool[bt].reshape(B, S)
+    k_cache = lsc(k_cache, "batch", "kvlen", "kvheads", None)
+    v_cache = lsc(v_cache, "batch", "kvlen", "kvheads", None)
+    y = _decode_attend(params, ac, x, q, k_cache, v_cache, pos_cache, position)
+    new_pool = {"k": k_pool, "v": v_pool, "pos": pos_pool}
+    return y, dict(cache), new_pool
 
 
 def init_kv_cache(cfg, batch: int, seq_len: int, dtype=None):
@@ -379,6 +438,22 @@ def init_kv_cache(cfg, batch: int, seq_len: int, dtype=None):
         "k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
         "pos": jnp.full((batch, S), jnp.iinfo(jnp.int32).max, jnp.int32),
+    }
+
+
+def init_kv_page_pool(cfg, num_pages: int, page_size: int, dtype=None):
+    """One layer's page pool (stacked over periods by the caller).  Page 0
+    is the sentinel: its ``pos`` row (like every fresh page's) sits at
+    int32 max so it masks out of every attention read."""
+    dtype = dtype or dtype_of(cfg)
+    return {
+        "k": jnp.zeros(
+            (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim), dtype
+        ),
+        "v": jnp.zeros(
+            (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim), dtype
+        ),
+        "pos": jnp.full((num_pages, page_size), jnp.iinfo(jnp.int32).max, jnp.int32),
     }
 
 

@@ -10,6 +10,7 @@ dense residual) feed-forward.
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -105,15 +106,19 @@ def init_decoder(key, cfg):
 # ---------------------------------------------------------------------------
 
 
-def _apply_block(p, cfg, kind, x, positions, *, mode, cache, chunk):
-    """Returns (x, new_cache, kv_for_prefill, aux)."""
+def _apply_block(p, cfg, kind, x, positions, *, mode, cache, chunk, pool=None):
+    """Returns (x, new_cache, kv_for_prefill, aux, new_pool)."""
     mixer, ffn = kind
     aux = jnp.zeros((), jnp.float32)
-    new_cache, kv = None, None
+    new_cache, kv, new_pool = None, None, None
     if mixer == "attn":
         h = cm.rmsnorm(p["attn_norm"], x)
         ac = cm.attn_cfg_from(cfg)
-        if mode == "decode":
+        if mode == "decode" and pool is not None:
+            y, new_cache, new_pool = cm.paged_attention_decode(
+                p["attn"], ac, h, cache, pool, positions
+            )
+        elif mode == "decode":
             y, new_cache = cm.attention_decode(p["attn"], ac, h, cache, positions)
         elif mode == "prefill":
             y, k, v = cm.attention_chunked(
@@ -137,7 +142,7 @@ def _apply_block(p, cfg, kind, x, positions, *, mode, cache, chunk):
         if "mlp" in p:
             delta = delta + cm.mlp(p["mlp"], h)
         x = x + delta
-    return x, new_cache, kv, aux
+    return x, new_cache, kv, aux, new_pool
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +187,7 @@ def forward(
         x, aux = carry
         kvs = []
         for i, kind in enumerate(plan):
-            x, _, kv, a = _apply_block(
+            x, _, kv, a, _ = _apply_block(
                 stacked_p[f"blocks_{i}"],
                 cfg,
                 kind,
@@ -208,7 +213,7 @@ def forward(
             p_i = jax.tree.map(lambda a: a[pi], stacked)
             per_caches = []
             for i, kind in enumerate(plan):
-                x, cache_new, kv, a = _apply_block(
+                x, cache_new, kv, a, _ = _apply_block(
                     p_i[f"blocks_{i}"],
                     cfg,
                     kind,
@@ -267,7 +272,7 @@ def decode_step(params, cfg, token, caches, position):
         stacked_p, caches_p = inp
         new_caches = []
         for i, kind in enumerate(plan):
-            x, cache_new, _, _ = _apply_block(
+            x, cache_new, _, _, _ = _apply_block(
                 stacked_p[f"blocks_{i}"],
                 cfg,
                 kind,
@@ -302,3 +307,115 @@ def init_caches(cfg, batch: int, seq_len: int):
             jax.tree.map(lambda x: jnp.broadcast_to(x, (npd,) + x.shape), one)
         )
     return caches
+
+
+# ---------------------------------------------------------------------------
+# paged decode (DESIGN.md §15): block-table caches over a global page pool
+# ---------------------------------------------------------------------------
+
+
+def plan_attn_mask(cfg) -> tuple:
+    """Per plan position: True where the cache is a paged block table."""
+    return tuple(mixer == "attn" for mixer, _ in layer_plan(cfg))
+
+
+def ring_len(cfg, seq_len: int) -> int:
+    """Logical ring length matching ``init_kv_cache`` sizing."""
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def decode_step_paged(params, cfg, token, caches, pools, position):
+    """Paged twin of ``decode_step``: attention plan positions carry
+    ``{"bt"}`` block tables in ``caches`` and read/write the page ``pools``
+    (list per plan position, None at non-attention positions, leaves
+    stacked over periods like the caches).
+
+    Returns (logits (B,1,V), new_caches, new_pools).
+    """
+    plan = layer_plan(cfg)
+    x = cm.embed(params["embed"], token)
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model, x.dtype) ** 0.5
+    stacked = {k: v for k, v in params.items() if k.startswith("blocks_")}
+
+    def period_body(x, inp):
+        stacked_p, caches_p, pools_p = inp
+        new_caches, new_pools = [], []
+        for i, kind in enumerate(plan):
+            x, cache_new, _, _, pool_new = _apply_block(
+                stacked_p[f"blocks_{i}"],
+                cfg,
+                kind,
+                x,
+                position,
+                mode="decode",
+                cache=caches_p[i],
+                chunk=0,
+                pool=pools_p[i],
+            )
+            new_caches.append(cache_new)
+            new_pools.append(pool_new)
+        return x, (new_caches, new_pools)
+
+    x, (new_caches, new_pools) = cm.scan(period_body, x, (stacked, caches, pools))
+    x = cm.rmsnorm(params["final_norm"], x)
+    logits = cm.unembed(
+        params["embed"], x, cfg.vocab_size, lm_head=params.get("lm_head")
+    )
+    return logits, new_caches, new_pools
+
+
+def init_paged(cfg, batch: int, seq_len: int, num_pages: int, page_size: int):
+    """Paged decode state: (caches, pools).
+
+    caches — list per plan position: attention positions hold
+    ``{"bt": (npd, batch, n)}`` int32 block tables (all entries 0 = the
+    sentinel page, i.e. unallocated); other positions hold their usual
+    recurrent caches.  pools — matching list: attention positions hold
+    ``{"k", "v", "pos"}`` page-pool leaves stacked over periods, None
+    elsewhere.  One logical page id spans every layer (each layer indexes
+    its own period-stacked page array with the same id).
+    """
+    from repro.serving.paged_kv import pages_for
+
+    plan = layer_plan(cfg)
+    npd = n_periods(cfg)
+    n = pages_for(ring_len(cfg, seq_len), page_size)
+    caches, pools = [], []
+    bcast = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (npd,) + x.shape), t
+    )
+    for mixer, _ in plan:
+        if mixer == "attn":
+            caches.append(bcast({"bt": jnp.zeros((batch, n), jnp.int32)}))
+            pools.append(bcast(cm.init_kv_page_pool(cfg, num_pages, page_size)))
+        else:
+            caches.append(bcast(mamba2.init_ssm_cache(cfg, batch)))
+            pools.append(None)
+    return caches, pools
+
+
+@functools.partial(jax.jit, static_argnames=("start", "cnt"))
+def _write_page_leaf(pool_leaf, row_leaf, pid, *, start: int, cnt: int):
+    # pool_leaf: (npd, Np, P, ...); row_leaf: (npd, 1, S, ...) from prefill
+    return pool_leaf.at[:, pid, :cnt].set(row_leaf[:, 0, start : start + cnt])
+
+
+def write_prefill_page(cfg, pools, prefill_caches, pid: int, start: int, cnt: int):
+    """Scatter one page's worth of a B=1 contiguous prefill cache (entries
+    [start, start+cnt)) into page ``pid`` across every attention layer.
+    Offsets >= cnt keep their pos = int32 max from allocation reset, so a
+    partial tail page masks exactly like unwritten ring slots."""
+    pid = jnp.asarray(pid, jnp.int32)
+    out = []
+    for is_attn, pool, row in zip(plan_attn_mask(cfg), pools, prefill_caches):
+        if not is_attn:
+            out.append(pool)
+            continue
+        out.append(
+            {
+                key: _write_page_leaf(pool[key], row[key], pid, start=start, cnt=cnt)
+                for key in ("k", "v", "pos")
+            }
+        )
+    return out

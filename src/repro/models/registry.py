@@ -33,6 +33,18 @@ class ModelApi:
     decode_step: Optional[Callable]
     init_caches: Optional[Callable]
     input_specs: Callable
+    # paged KV decode (DESIGN.md §15) — optional; families without a KV
+    # cache (and non-decoder families) leave these None and the serving
+    # stack falls back to the contiguous layout.
+    #   decode_step_paged(params, token, caches, pools, position)
+    #       -> (logits, new_caches, new_pools)
+    #   init_paged(batch, seq_len, num_pages, page_size) -> (caches, pools)
+    #   write_prefill_page(pools, prefill_caches, pid, start, cnt) -> pools
+    #   plan_attn: per plan position, True where caches hold block tables
+    decode_step_paged: Optional[Callable] = None
+    init_paged: Optional[Callable] = None
+    write_prefill_page: Optional[Callable] = None
+    plan_attn: Optional[tuple] = None
 
 
 def _tok_dtype():
@@ -87,6 +99,16 @@ def _decoder_api(cfg: ArchConfig) -> ModelApi:
         decode_step=decode_step,
         init_caches=lambda batch, seq_len: decoder.init_caches(cfg, batch, seq_len),
         input_specs=input_specs,
+        decode_step_paged=lambda params, token, caches, pools, position: (
+            decoder.decode_step_paged(params, cfg, token, caches, pools, position)
+        ),
+        init_paged=lambda batch, seq_len, num_pages, page_size: (
+            decoder.init_paged(cfg, batch, seq_len, num_pages, page_size)
+        ),
+        write_prefill_page=lambda pools, prefill_caches, pid, start, cnt: (
+            decoder.write_prefill_page(cfg, pools, prefill_caches, pid, start, cnt)
+        ),
+        plan_attn=decoder.plan_attn_mask(cfg),
     )
 
 

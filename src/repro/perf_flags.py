@@ -45,6 +45,12 @@ prefill_seq_parallel: bool = _env("REPRO_PREFILL_SEQ_PARALLEL")
 # (~2.3x traffic cut; EXPERIMENTS.md §Perf).  Read by core/executor.py's
 # backend="auto" at trace time.
 fused_guidance: bool = _env("REPRO_FUSED_GUIDANCE")
+# int8-quantized KV pages (DESIGN.md §15): store paged K/V as symmetric
+# absmax int8 per (page entry, kv-head) with f32 scales, dequantized in VMEM
+# by the paged decode kernel.  Hypothesis: paged decode is page-traffic-bound;
+# int8 pages cut K/V bytes/token ~4x (f32) / ~2x (bf16) at bounded logit
+# drift (parity bounds in tests/test_paged_kernels.py).
+kv_int8_pages: bool = _env("REPRO_KV_INT8_PAGES")
 
 
 def set_flags(**kw) -> dict:

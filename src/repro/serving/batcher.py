@@ -90,7 +90,14 @@ from repro.obs import (
     ProfilerHooks,
     RoundView,
 )
-from repro.serving.engine import EngineConfig, PrefillCache, Request, pad_prompts
+from repro.serving import paged_kv
+from repro.serving.engine import (
+    EngineConfig,
+    PrefillCache,
+    Request,
+    pad_prompts,
+    prefill_pages,
+)
 from repro.serving.guided_decode import (
     LaneState,
     LinearLaneState,
@@ -135,6 +142,18 @@ class BatcherConfig:
     # the device computes — the host never idles the device on a blocking
     # fetch.  None resolves to True when horizon > 1.
     async_fetch: Optional[bool] = None
+    # Paged KV cache (DESIGN.md §15): replace the contiguous per-(lane,
+    # slot, branch) KV buffers with one global page pool + per-slot block
+    # tables; pages are allocated lazily (prefill + a pre-dispatch top-up
+    # covering the horizon's writes), shared across identical tokenized
+    # context prefixes, and recycled on completion.
+    paged: bool = False
+    page_size: int = 16
+    # total pages in the pool (id 0 is the sentinel); None -> sized so the
+    # worst case (max_slots requests, cond+uncond, full private tables)
+    # always fits — still strictly less device memory than the contiguous
+    # layout's 4 lane-state cache copies.
+    num_pages: Optional[int] = None
 
     def __post_init__(self):
         if self.buckets is None:
@@ -142,12 +161,25 @@ class BatcherConfig:
             while b[-1] < self.max_slots:
                 b.append(b[-1] * 2)
             self.buckets = tuple(b)
-        assert self.buckets == tuple(sorted(self.buckets))
-        assert max(self.buckets) >= self.max_slots, (
-            "largest lane bucket must fit max_slots so migration can never "
-            f"strand a request: {self.buckets} vs max_slots={self.max_slots}"
-        )
-        assert self.horizon >= 1, f"horizon must be >= 1, got {self.horizon}"
+        # config validation raises (never asserts): these run on user input
+        # and must survive python -O
+        if self.buckets != tuple(sorted(self.buckets)):
+            raise ValueError(
+                f"lane buckets must be sorted ascending: {self.buckets}"
+            )
+        if max(self.buckets) < self.max_slots:
+            raise ValueError(
+                "largest lane bucket must fit max_slots so migration can never "
+                f"strand a request: {self.buckets} vs max_slots={self.max_slots}"
+            )
+        if self.horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {self.horizon}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1: {self.page_size}")
+        if self.num_pages is not None and self.num_pages < 2:
+            raise ValueError(
+                f"page pool needs >= 2 pages (sentinel + 1): {self.num_pages}"
+            )
         if self.async_fetch is None:
             self.async_fetch = self.horizon > 1
 
@@ -265,6 +297,34 @@ class StepBatcher:
         self.linear = _Lane("linear")
         self.cond = _Lane("cond")
         self.cache_len = self.bc.cache_len
+        # Paged KV (DESIGN.md §15): host allocator ledgers + the single
+        # live device pool reference.  The pool pytree is installed into a
+        # lane's state right before its dispatch (donated with it) and
+        # extracted from the result, so consecutive lane dispatches chain
+        # through one live buffer — never a stale alias of a donated one.
+        self._paged = bool(self.bc.paged)
+        if self._paged and getattr(api, "decode_step_paged", None) is None:
+            raise ValueError(
+                "paged serving needs a model family with a paged decode "
+                f"step (family {getattr(api.cfg, 'family', '?')!r} has none)"
+            )
+        plan_attn = getattr(api, "plan_attn", None)  # toy apis have no plan
+        self._plan_attn = list(plan_attn) if plan_attn else []
+        self._pool: Optional[paged_kv.PagePool] = None  # host ledgers
+        self._pool_dev = None  # device page-pool pytree (one live reference)
+        # rid -> (next write position not yet page-covered, end of the
+        # request's write range); advanced by H at each dispatch so the
+        # async horizon pipeline's in-flight substeps always land on
+        # allocated pages
+        self._span: Dict[int, Tuple[int, int]] = {}
+        # (rid, branch) -> worst-case pages not yet acquired; admission
+        # gates on free - sum(reserved) so decode top-ups never exhaust
+        self._reserved: Dict[Tuple[int, str], int] = {}
+        # measured paged decode traffic (page-touch accounting, see
+        # ``_ensure_pages``) for the bytes/token report vs ``bytes_min``
+        self._page_nb: Optional[int] = None
+        self._traffic_bytes = 0
+        self._traffic_tokens = 0
         self._vocab: Optional[int] = None  # logits width, set at first prefill
         self._pending: List[_Pending] = []
         self._next_rid = 0
@@ -458,7 +518,7 @@ class StepBatcher:
         common = dict(
             tokens=z(capacity, 1),
             position=z(capacity),
-            caches_c=self.api.init_caches(capacity, self.cache_len),
+            caches_c=self._lane_caches(capacity),
             crossed=z(capacity, dt=bool),
             nfes=z(capacity, dt=jnp.float32),
             active=z(capacity, dt=bool),
@@ -482,9 +542,7 @@ class StepBatcher:
                 )
             state = LaneState(
                 caches_u=(
-                    self.api.init_caches(capacity, self.cache_len)
-                    if kind == "guided"
-                    else None
+                    self._lane_caches(capacity) if kind == "guided" else None
                 ),
                 hist_c=self._empty_hist(capacity) if hist else None,
                 hist_u=self._empty_hist(capacity) if hist else None,
@@ -507,55 +565,266 @@ class StepBatcher:
         with self._mesh_ctx():
             return shard_lane_state(state)
 
-    @staticmethod
-    def _concat_states(s, fresh):
-        """Row-concat two same-type lane states: cache trees carry the slot
-        axis at 1 (axis 0 is the scan-period stack), every other leaf at 0."""
-        kw = {}
-        for name in s._fields:
-            a, b = getattr(s, name), getattr(fresh, name)
-            if name in ("caches_c", "caches_u"):
-                kw[name] = (
-                    None
-                    if a is None
-                    else jax.tree.map(
-                        lambda x, y: jnp.concatenate([x, y], axis=1), a, b
-                    )
-                )
-            elif name == "pstate":
-                kw[name] = (
-                    None
-                    if a is None
-                    else {
-                        k: jnp.concatenate([a[k], b[k]], axis=0) for k in a
-                    }
-                )
-            elif a is None:
-                kw[name] = None
-            else:
-                kw[name] = jnp.concatenate([a, b], axis=0)
-        return type(s)(**kw)
-
-    def _grow(self, lane: _Lane, need: int):
-        """Grow a lane to the smallest bucket holding ``need`` slots; existing
-        rows are preserved, new rows start empty (inactive)."""
-        cap = self._bucket_for(need)
-        if cap <= lane.capacity:
+    def _ensure_lane(self, lane: _Lane):
+        """Allocate a lane's fixed-capacity state on first use.  Lanes are
+        born at the bucket that fits ``max_slots``: occupancy growth reuses
+        free rows instead of re-tracing at a larger shape, so exactly ONE
+        executable exists per lane for the batcher's lifetime (paged mode
+        is what makes the fixed allocation cheap — KV lives in the shared
+        page pool, and an empty slot's block-table row costs n int32s, not
+        cache_len KV rows)."""
+        if lane.state is not None:
             return
-        fresh = self._empty_state(cap - lane.capacity, lane.name)
-        if lane.state is None:
-            lane.state = fresh
-        else:
-            lane.state = self._concat_states(lane.state, fresh)
-        lane.rids = lane.rids + [None] * (cap - lane.capacity)
+        cap = self._bucket_for(self.bc.max_slots)
+        lane.state = self._empty_state(cap, lane.name)
+        lane.rids = [None] * cap
         lane.capacity = cap
 
     def _take_slot(self, lane: _Lane) -> Optional[int]:
-        slot = lane.free_slot()
-        if slot is None and lane.capacity < max(self.bc.buckets):
-            self._grow(lane, lane.capacity + 1)
-            slot = lane.free_slot()
-        return slot
+        self._ensure_lane(lane)
+        return lane.free_slot()
+
+    # -- paged KV plumbing (DESIGN.md §15) -----------------------------------
+
+    def _lane_caches(self, capacity: int):
+        """Per-slot decode caches for one lane: contiguous KV buffers, or
+        (paged) block tables + recurrent caches.  The device pool pytree is
+        allocated exactly once — later lanes only need tables, so their
+        ``init_paged`` call builds a throwaway minimal pool."""
+        if not self._paged:
+            return self.api.init_caches(capacity, self.cache_len)
+        npages = self._pool_pages() if self._pool_dev is None else 2
+        caches, pools = self.api.init_paged(
+            capacity, self.cache_len, npages, self.bc.page_size
+        )
+        if self._pool_dev is None:
+            self._pool_dev = pools
+        return caches
+
+    def _pool_pages(self) -> int:
+        if self.bc.num_pages is not None:
+            return self.bc.num_pages
+        # worst case: every slot holds a full cond+uncond table privately
+        n = paged_kv.pages_for(self.cache_len, self.bc.page_size)
+        return 1 + 2 * self.bc.max_slots * n
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            self._pool = paged_kv.PagePool(
+                self._pool_pages(), self.bc.page_size
+            )
+
+    def _page_headroom(self, req: Request, S: int) -> bool:
+        """Conservative admission gate: the pool must hold this request's
+        worst-case page demand (no sharing credit) on top of every resident
+        request's outstanding worst case, so the pre-dispatch top-ups
+        (``_ensure_pages``) can never exhaust mid-flight — exhaustion
+        queues the admission instead."""
+        self._ensure_pool()
+        branches = 2 if req.guided else 1
+        last = S + max(req.max_new_tokens - 1, 0)  # end of the write range
+        need = branches * paged_kv.pages_for(last, self.bc.page_size)
+        outstanding = sum(self._reserved.values())
+        return self._pool.free_pages - outstanding >= need
+
+    def _admit_paged_row(self, rid, branch, lane_caches, slot, tok_row, S, ext):
+        """Install one branch's prefilled context as pages: a full page is
+        shared by its (S, token-chain) key when an identical prefill
+        already wrote it (refcount++, no device write); misses allocate a
+        sentinel-reset page and scatter the contiguous prefill row into
+        it; the partial frontier page is always private (the degenerate
+        copy-on-write — its "copy" is the branch's own prefill slice).
+        Returns the lane caches with the slot's block-table row installed."""
+        P = self.bc.page_size
+        owner = (rid, branch)
+        n = paged_kv.table_len(lane_caches, self._plan_attn)
+        row = np.zeros(n, np.int32)
+        to_write: List[Optional[int]] = []
+        for j in range(paged_kv.pages_for(S, P)):
+            full = (j + 1) * P <= S
+            key = (S, paged_kv.chain_key(tok_row, (j + 1) * P)) if full else None
+            pid = self._pool.share_lookup(key) if full else None
+            if pid is None:
+                pid = self._pool.alloc()
+                self._pool_dev = paged_kv.reset_pages(self._pool_dev, [pid])
+                to_write.append(pid)
+                if full:
+                    self._pool.share_register(key, pid)
+            else:
+                to_write.append(None)  # shared: bits already resident
+            self._pool.assign(owner, j, pid)
+            self._reserved[owner] = max(self._reserved.get(owner, 0) - 1, 0)
+            row[j] = pid
+        self._pool_dev = prefill_pages(
+            self.api, self._pool_dev, ext["caches"], to_write, S, P
+        )
+        return paged_kv.set_block_row(lane_caches, self._plan_attn, slot, row)
+
+    def _set_row_recurrent(self, dst_caches, slot, src_caches):
+        """Copy a B=1 prefill's non-attention (recurrent) cache rows into a
+        lane slot; attention positions hold block tables installed by
+        ``_admit_paged_row`` and are passed through untouched."""
+        out = []
+        for is_attn, dst, src in zip(self._plan_attn, dst_caches, src_caches):
+            if is_attn:
+                out.append(dst)
+            else:
+                out.append(
+                    jax.tree.map(
+                        lambda d, s: d.at[:, slot].set(s[:, 0]), dst, src
+                    )
+                )
+        return out
+
+    def _ensure_pages(self):
+        """Pre-dispatch top-up: allocate (or copy-on-write privatize) every
+        page the next dispatch can write — positions [pos, pos + H) per
+        live slot and branch, clamped to the request's own write range.
+        Admission's worst-case reservation guarantees the allocs here never
+        exhaust; the COW branch privatizes a still-shared page before a
+        ring-wrap write could mutate bits other owners read."""
+        if not self._paged:
+            return
+        H = self.bc.horizon
+        P = self.bc.page_size
+        for lane in (self.guided, self.linear, self.cond):
+            if lane.state is None:
+                continue
+            ring = paged_kv.table_len(lane.state.caches_c, self._plan_attn) * P
+            if self._page_nb is None:
+                self._page_nb = paged_kv.page_nbytes(self._pool_dev)
+            for slot, rid in enumerate(lane.rids):
+                if rid is None:
+                    continue
+                lo, end = self._span[rid]
+                hi = min(lo + H, end)
+                if hi <= lo:
+                    continue
+                self._span[rid] = (hi, end)
+                branches = ("c", "u") if lane is self.guided else ("c",)
+                # measured decode traffic (bytes/token vs the ``bytes_min``
+                # roofline model): each substep gathers the row's resident
+                # pages per branch and scatters one entry back, so the page
+                # ledger at this choke point *is* the byte counter
+                for p in range(lo, hi):
+                    valid = min(paged_kv.pages_for(p + 1, P), ring // P)
+                    per_branch = valid * self._page_nb + self._page_nb // P
+                    self._traffic_bytes += len(branches) * per_branch
+                    self._traffic_tokens += 1
+                pages = sorted({(p % ring) // P for p in range(lo, hi)})
+                for branch in branches:
+                    owner = (rid, branch)
+                    tbl = self._pool.table_of(owner)
+                    for j in pages:
+                        cur = tbl.get(j)
+                        if cur is None:
+                            pid = self._pool.alloc()
+                            self._pool_dev = paged_kv.reset_pages(
+                                self._pool_dev, [pid]
+                            )
+                            self._pool.assign(owner, j, pid)
+                            self._reserved[owner] = max(
+                                self._reserved.get(owner, 0) - 1, 0
+                            )
+                        elif self._pool.refcount(cur) > 1:
+                            pid = self._pool.alloc()
+                            self._pool_dev = paged_kv.copy_page(
+                                self._pool_dev, cur, pid
+                            )
+                            self._pool.stats.cow_copies += 1
+                            self._pool.decref(cur)
+                            del tbl[j]
+                            self._pool.assign(owner, j, pid)
+                        else:
+                            continue
+                        caches = (
+                            lane.state.caches_c
+                            if branch == "c"
+                            else lane.state.caches_u
+                        )
+                        caches = paged_kv.set_block_entry(
+                            caches, self._plan_attn, slot, j, pid
+                        )
+                        lane.state = lane.state._replace(
+                            **{
+                                "caches_c" if branch == "c" else "caches_u":
+                                caches
+                            }
+                        )
+
+    def _install_pool(self, state):
+        return state._replace(pool=self._pool_dev) if self._paged else state
+
+    def _extract_pool(self, state):
+        if self._paged:
+            self._pool_dev = state.pool
+            state = state._replace(pool=None)
+        return state
+
+    def _release_pages(self, rid: int, lane: _Lane, slot: int, branches):
+        """Return a request's pages to the free list (per branch) and point
+        the freed slot's block-table rows back at the sentinel, so a stale
+        decode of the recycled slot writes into page 0 (absorbed) and
+        reads nothing — the paged no-KV-bleed guarantee."""
+        if not self._paged:
+            return
+        kw = {}
+        for branch in branches:
+            self._reserved.pop((rid, branch), None)
+            self._pool.release_owner((rid, branch))
+            field = "caches_c" if branch == "c" else "caches_u"
+            caches = getattr(lane.state, field, None)
+            if caches is not None:
+                kw[field] = paged_kv.zero_block_row(
+                    caches, self._plan_attn, slot
+                )
+        if kw:
+            lane.state = lane.state._replace(**kw)
+
+    def _paged_after_migration(self, rid: int, src: _Lane, s_slot: int):
+        """Host page bookkeeping after a migration's device row copy: the
+        cond-branch ledger follows the request unchanged (ownership moves
+        with the block-table row — refcounts untouched); the source slot's
+        tables point back at the sentinel; and leaving the guided lane
+        frees the uncond branch — no lane below it evaluates that branch
+        again."""
+        if not self._paged:
+            return
+        kw = dict(
+            caches_c=paged_kv.zero_block_row(
+                src.state.caches_c, self._plan_attn, s_slot
+            )
+        )
+        caches_u = getattr(src.state, "caches_u", None)
+        if caches_u is not None:  # linear lane dropped the branch already
+            self._reserved.pop((rid, "u"), None)
+            self._pool.release_owner((rid, "u"))
+            kw["caches_u"] = paged_kv.zero_block_row(
+                caches_u, self._plan_attn, s_slot
+            )
+        src.state = src.state._replace(**kw)
+
+    def pool_stats(self) -> Optional[dict]:
+        """Page-pool counters + the conservation check (paged mode only)."""
+        if not self._paged or self._pool is None:
+            return None
+        self._pool.check_conservation()
+        pb = paged_kv.page_nbytes(self._pool_dev)
+        st = self._pool.stats
+        return {
+            **dataclasses.asdict(st),
+            "resident": self._pool.resident_pages,
+            "free": self._pool.free_pages,
+            "page_nbytes": pb,
+            "peak_resident_bytes": st.peak_resident * pb,
+            "decode_bytes_total": self._traffic_bytes,
+            "decode_tokens": self._traffic_tokens,
+            "decode_bytes_per_token": (
+                self._traffic_bytes / self._traffic_tokens
+                if self._traffic_tokens
+                else 0.0
+            ),
+        }
 
     @property
     def total_active(self) -> int:
@@ -599,10 +868,12 @@ class StepBatcher:
         previous tenant).  Prefill runs before the slot is taken so the
         first admission can size the history buffers from the logits."""
         toks_c, S = pad_prompts([req], use_negative=False)
+        if self._paged and not self._page_headroom(req, S):
+            return False  # pool exhausted: stay queued, retried next step
         logits_c, ext_c = self._prefill(self.params, toks_c, self.cache_len)
         if self._vocab is None:
             self._vocab = int(logits_c.shape[-1])
-        ext_u = logits_u = None
+        toks_u = ext_u = logits_u = None
         if req.guided:
             toks_u, _ = pad_prompts([req], use_negative=True)
             logits_u, ext_u = self._prefill(self.params, toks_u, self.cache_len)
@@ -612,10 +883,33 @@ class StepBatcher:
         if slot is None:
             return False
         st = lane.state
-        caches_c = _set_row(st.caches_c, slot, ext_c["caches"])
-        caches_u = st.caches_u
-        if ext_u is not None:
-            caches_u = _set_row(st.caches_u, slot, ext_u["caches"])
+        if self._paged:
+            # reserve the worst-case page demand up front (decremented as
+            # pages are acquired), then install prefill pages + tables; the
+            # recurrent (non-attention) rows still copy contiguously
+            last = S + max(req.max_new_tokens - 1, 0)
+            for br in ("c", "u") if req.guided else ("c",):
+                self._reserved[(rid, br)] = paged_kv.pages_for(
+                    last, self.bc.page_size
+                )
+            caches_c = self._admit_paged_row(
+                rid, "c", st.caches_c, slot, np.asarray(toks_c)[0], S, ext_c
+            )
+            caches_c = self._set_row_recurrent(caches_c, slot, ext_c["caches"])
+            caches_u = st.caches_u
+            if ext_u is not None:
+                caches_u = self._admit_paged_row(
+                    rid, "u", st.caches_u, slot, np.asarray(toks_u)[0], S, ext_u
+                )
+                caches_u = self._set_row_recurrent(
+                    caches_u, slot, ext_u["caches"]
+                )
+            self._span[rid] = (S, last)
+        else:
+            caches_c = _set_row(st.caches_c, slot, ext_c["caches"])
+            caches_u = st.caches_u
+            if ext_u is not None:
+                caches_u = _set_row(st.caches_u, slot, ext_u["caches"])
         gb = self.config.gamma_bar if req.gamma_bar is None else req.gamma_bar
         budget = req.max_new_tokens - 1  # decode tokens after the prefill one
         # admission targets the guided or cond lane, both LaneState
@@ -705,6 +999,9 @@ class StepBatcher:
             return False
         lane.rids[slot] = None
         lane.state = lane.state._replace(active=lane.state.active.at[slot].set(False))
+        # paged: recycle both branches' pages and sentinel the slot's tables
+        self._release_pages(rid, lane, slot, ("c", "u"))
+        self._span.pop(rid, None)
         self.completed[rid] = {
             "tokens": np.asarray(gen, np.int32),
             "nfes": float(nfes),
@@ -765,6 +1062,7 @@ class StepBatcher:
         )
         src.state = ss._replace(active=ss.active.at[s_slot].set(False))
         src.rids[s_slot] = None
+        self._paged_after_migration(rid, src, s_slot)
         self.cond.rids[c_slot] = rid
         self._enter_lane(rid, "cond")
         self.telemetry.on_migrate(rid, self._step_idx)
@@ -797,6 +1095,7 @@ class StepBatcher:
         )
         self.guided.state = gs._replace(active=gs.active.at[g_slot].set(False))
         self.guided.rids[g_slot] = None
+        self._paged_after_migration(rid, self.guided, g_slot)
         self.linear.rids[l_slot] = rid
         self._enter_lane(rid, "linear")
         self.telemetry.on_linear(rid, self._step_idx)
@@ -828,6 +1127,7 @@ class StepBatcher:
         compiles0 = self._compiles_total()
         self.profiler.on_round(self._round_idx)
         self._admit_pending()
+        self._ensure_pages()
 
         # host-mirror of the device ledger rule, *before* the step runs:
         # each guided slot pays its policy's price (2/1 for the default
@@ -868,23 +1168,28 @@ class StepBatcher:
         with self._mesh_ctx():
             if g_active:
                 with self._compile_attr("guided", self.guided.capacity):
-                    _, self.guided.state, _ = self._guided_step(
-                        self.params, self.guided.state
+                    _, st, _ = self._guided_step(
+                        self.params, self._install_pool(self.guided.state)
                     )
+                    self.guided.state = self._extract_pool(st)
                 ran = True
                 dispatches += 1
             if l_active:
                 with self._compile_attr("linear", self.linear.capacity):
-                    _, self.linear.state, _ = self._linear_step(
-                        self.params, self.linear.state, self._beta
+                    _, st, _ = self._linear_step(
+                        self.params,
+                        self._install_pool(self.linear.state),
+                        self._beta,
                     )
+                    self.linear.state = self._extract_pool(st)
                 ran = True
                 dispatches += 1
             if c_active:
                 with self._compile_attr("cond", self.cond.capacity):
-                    _, self.cond.state = self._cond_step(
-                        self.params, self.cond.state
+                    _, st = self._cond_step(
+                        self.params, self._install_pool(self.cond.state)
                     )
+                    self.cond.state = self._extract_pool(st)
                 ran = True
                 dispatches += 1
 
@@ -1043,23 +1348,28 @@ class StepBatcher:
             if rec["g_active"]:
                 beta = (self._beta,) if self._beta is not None else ()
                 with self._compile_attr("guided", self.guided.capacity):
-                    self.guided.state, tr = self._guided_hor(
-                        self.params, self.guided.state, *beta
+                    st, tr = self._guided_hor(
+                        self.params, self._install_pool(self.guided.state), *beta
                     )
+                    self.guided.state = self._extract_pool(st)
                 rec["traces"]["g"] = tr
                 rec["dispatches"] += 1
             if rec["l_active"]:
                 with self._compile_attr("linear", self.linear.capacity):
-                    self.linear.state, tr = self._linear_hor(
-                        self.params, self.linear.state, self._beta
+                    st, tr = self._linear_hor(
+                        self.params,
+                        self._install_pool(self.linear.state),
+                        self._beta,
                     )
+                    self.linear.state = self._extract_pool(st)
                 rec["traces"]["l"] = tr
                 rec["dispatches"] += 1
             if rec["c_active"]:
                 with self._compile_attr("cond", self.cond.capacity):
-                    self.cond.state, tr = self._cond_hor(
-                        self.params, self.cond.state
+                    st, tr = self._cond_hor(
+                        self.params, self._install_pool(self.cond.state)
                     )
+                    self.cond.state = self._extract_pool(st)
                 rec["traces"]["c"] = tr
                 rec["dispatches"] += 1
         # double buffering: enqueue the D2H copy now, so it lands while the
@@ -1178,6 +1488,7 @@ class StepBatcher:
                 break
             self._ensure_cache_len()
             self._admit_pending()
+            self._ensure_pages()
             rec = None
             if self.total_active:
                 rec = self._dispatch_horizon()
@@ -1221,6 +1532,8 @@ class StepBatcher:
     def report(self) -> dict:
         rep = self.telemetry.report(compile_counts=self.compile_counts)
         rep["mesh_shape"] = list(self.mesh_shape) if self.mesh_shape else None
+        if self._paged:
+            rep["page_pool"] = self.pool_stats()
         if self.monitors is not None:
             rep["monitors"] = {
                 "rounds_checked": self.monitors.rounds_checked,

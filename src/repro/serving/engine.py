@@ -115,6 +115,24 @@ def pad_prompts(
     return jnp.asarray(toks), S
 
 
+def prefill_pages(api, pools, prefill_caches, page_ids, S: int, page_size: int):
+    """Scatter a B=1 contiguous prefill row into the page pool (DESIGN.md
+    §15): ``page_ids[j]`` receives cache entries [j*P, min((j+1)*P, S)) of
+    every attention layer; ``None`` entries (prefix-shared pages already
+    resident from an identical earlier prefill) are skipped — sharing means
+    never re-writing bits that are already there.  A partial tail page
+    keeps its unwritten offsets at the int32-max position sentinel from
+    allocation, masking exactly like unwritten ring slots."""
+    for j, pid in enumerate(page_ids):
+        if pid is None:
+            continue
+        start = j * page_size
+        cnt = min(page_size, S - start)
+        if cnt > 0:
+            pools = api.write_prefill_page(pools, prefill_caches, pid, start, cnt)
+    return pools
+
+
 class PrefillCache:
     """Compiled prefill, one executable per prompt-length bucket.
 

@@ -57,6 +57,37 @@ def _packed_cfg_eval(api, params, tokens, position, caches_c, caches_u):
     return logits2[:B], logits2[B:], new_c, new_u
 
 
+def _decode_eval(api, params, tokens, position, caches, pool):
+    """Single-branch decode honoring the optional page pool (DESIGN.md
+    §15).  Returns (logits, new_caches, new_pool) with new_pool None on
+    the contiguous path."""
+    if pool is not None:
+        return api.decode_step_paged(params, tokens, caches, pool, position)
+    logits, new_c = api.decode_step(params, tokens, caches, position)
+    return logits, new_c, None
+
+
+def _packed_cfg_eval_paged(api, params, tokens, position, caches_c, caches_u,
+                           pool):
+    """``_packed_cfg_eval`` over block-table caches: the [2B] pack
+    concatenates the branch block tables on the slot axis while both walk
+    the ONE shared page pool — prefix-shared prompt pages are read by both
+    branches without duplication.  Returns
+    (logits_c, logits_u, new_c, new_u, new_pool)."""
+    B = tokens.shape[0]
+    tok2 = jnp.concatenate([tokens, tokens], axis=0)
+    pos2 = jnp.concatenate([position, position], axis=0)
+    caches2 = jax.tree.map(
+        lambda c, u: jnp.concatenate([c, u], axis=1), caches_c, caches_u
+    )
+    logits2, new_caches2, new_pool = _decode_eval(
+        api, params, tok2, pos2, caches2, pool
+    )
+    new_c = jax.tree.map(lambda x: x[:, :B], new_caches2)
+    new_u = jax.tree.map(lambda x: x[:, B:], new_caches2)
+    return logits2[:B], logits2[B:], new_c, new_u, new_pool
+
+
 def guided_decode_step(
     api, params, state: GuidedState, *, scale: float, gamma_bar: float,
     greedy: bool = True, key=None, executor: Optional[GuidanceExecutor] = None,
@@ -158,6 +189,12 @@ class LaneState(NamedTuple):
     # are overwritten wholesale at admission like every other leaf.
     policy_id: object = None  # (K,) int32
     pstate: object = None  # dict of (K, ...) leaves or None
+    # Paged KV (DESIGN.md §15): the global page pool the caches' block
+    # tables index — list per plan position of {"k","v","pos"} leaves,
+    # None on the contiguous layout.  The batcher owns the single live
+    # reference and installs/extracts it around each dispatch so the
+    # donated lane steps thread one pool through every lane.
+    pool: object = None
 
 
 class LinearLaneState(NamedTuple):
@@ -180,6 +217,8 @@ class LinearLaneState(NamedTuple):
     # on-device lifecycle for horizon-fused decode (see LaneState)
     remaining: object = None  # (B,) int32
     frozen: object = None  # (B,) bool
+    # paged KV page pool (see LaneState.pool)
+    pool: object = None
 
 
 def push_history(hist, x):
@@ -214,9 +253,17 @@ def guided_lane_step(
     """
     executor = get_executor(executor)
     state = constrain_lane_state(state)
-    logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
-        api, params, state.tokens, state.position, state.caches_c, state.caches_u
-    )
+    if state.pool is not None:
+        logits_c, logits_u, new_c, new_u, new_pool = _packed_cfg_eval_paged(
+            api, params, state.tokens, state.position, state.caches_c,
+            state.caches_u, state.pool,
+        )
+    else:
+        logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
+            api, params, state.tokens, state.position, state.caches_c,
+            state.caches_u,
+        )
+        new_pool = None
     pstate, warm = state.pstate, state.warm
     if policies is not None and state.pstate is not None:
         from repro.core.policies import guided_policy_update
@@ -244,7 +291,7 @@ def guided_lane_step(
     new_state = constrain_lane_state(state._replace(
         tokens=nxt, position=state.position + 1, caches_c=new_c, caches_u=new_u,
         crossed=res.crossed, nfes=res.nfes, hist_c=hist_c, hist_u=hist_u,
-        warm=warm, pstate=pstate,
+        warm=warm, pstate=pstate, pool=new_pool,
     ))
     return nxt, new_state, res.gamma
 
@@ -263,8 +310,8 @@ def linear_lane_step(
 
     executor = get_executor(executor)
     state = constrain_lane_state(state)
-    logits_c, new_c = api.decode_step(
-        params, state.tokens, state.caches_c, state.position
+    logits_c, new_c, new_pool = _decode_eval(
+        api, params, state.tokens, state.position, state.caches_c, state.pool
     )
     u_hat = apply_window(beta, logits_c, state.hist_c, state.hist_u)
     res = executor.linear_lane_update(
@@ -277,6 +324,7 @@ def linear_lane_step(
         crossed=res.crossed, nfes=res.nfes,
         hist_c=push_history(state.hist_c, logits_c),
         hist_u=push_history(state.hist_u, u_hat),
+        pool=new_pool,
     ))
     return nxt, new_state, res.gamma
 
@@ -285,13 +333,14 @@ def cond_lane_step(api, params, state: LaneState):
     """One conditional-lane step: 1 NFE per active slot (the AG tail and
     plain unguided traffic).  Returns (next, new_state)."""
     state = constrain_lane_state(state)
-    logits, new_c = api.decode_step(
-        params, state.tokens, state.caches_c, state.position
+    logits, new_c, new_pool = _decode_eval(
+        api, params, state.tokens, state.position, state.caches_c, state.pool
     )
     nxt = _select(logits, True, None)
     new_state = constrain_lane_state(state._replace(
         tokens=nxt, position=state.position + 1, caches_c=new_c,
         nfes=GuidanceExecutor.lane_ledger_cond(state.nfes, state.active),
+        pool=new_pool,
     ))
     return nxt, new_state
 
@@ -395,9 +444,20 @@ def _guided_horizon_substep(
     — the default policy overrides nothing on top).
     """
     live = state.active & ~state.frozen
-    logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
-        api, params, state.tokens, state.position, state.caches_c, state.caches_u
-    )
+    if state.pool is not None:
+        # pool writes from frozen/inactive slots are idempotent or
+        # sentinel-absorbed (DESIGN.md §15), so the pool is carried through
+        # the scan un-selected — only per-slot leaves need freeze masking
+        logits_c, logits_u, new_c, new_u, new_pool = _packed_cfg_eval_paged(
+            api, params, state.tokens, state.position, state.caches_c,
+            state.caches_u, state.pool,
+        )
+    else:
+        logits_c, logits_u, new_c, new_u = _packed_cfg_eval(
+            api, params, state.tokens, state.position, state.caches_c,
+            state.caches_u,
+        )
+        new_pool = None
     hist_c, hist_u = state.hist_c, state.hist_u
     if hist_c is not None and beta is not None:
         from repro.core.linear_ag import apply_window
@@ -435,7 +495,7 @@ def _guided_horizon_substep(
     )
     new_state = constrain_lane_state(state._replace(
         warm=state.warm + live.astype(state.warm.dtype),
-        hist_c=hist_c, hist_u=hist_u, pstate=pstate, **kw,
+        hist_c=hist_c, hist_u=hist_u, pstate=pstate, pool=new_pool, **kw,
     ))
     trace = HorizonTrace(
         tokens=kw["tokens"][:, 0], crossed=res.crossed, nfes=res.nfes,
@@ -452,8 +512,8 @@ def _linear_horizon_substep(
     live = state.active & ~state.frozen
     from repro.core.linear_ag import apply_window
 
-    logits_c, new_c = api.decode_step(
-        params, state.tokens, state.caches_c, state.position
+    logits_c, new_c, new_pool = _decode_eval(
+        api, params, state.tokens, state.position, state.caches_c, state.pool
     )
     u_hat = apply_window(beta, logits_c, state.hist_c, state.hist_u)
     res = executor.linear_lane_update(
@@ -467,7 +527,7 @@ def _linear_horizon_substep(
         state, live, nxt, new_c, None, res.crossed, res.nfes, eos_token
     )
     new_state = constrain_lane_state(state._replace(
-        hist_c=hist_c, hist_u=hist_u, **kw
+        hist_c=hist_c, hist_u=hist_u, pool=new_pool, **kw
     ))
     trace = HorizonTrace(
         tokens=kw["tokens"][:, 0], crossed=res.crossed, nfes=res.nfes,
@@ -479,15 +539,15 @@ def _linear_horizon_substep(
 def _cond_horizon_substep(api, params, state: LaneState, *, eos_token):
     """One conditional-lane substep under the horizon freeze mask."""
     live = state.active & ~state.frozen
-    logits, new_c = api.decode_step(
-        params, state.tokens, state.caches_c, state.position
+    logits, new_c, new_pool = _decode_eval(
+        api, params, state.tokens, state.position, state.caches_c, state.pool
     )
     nxt = _select(logits, True, None)
     nfes = GuidanceExecutor.lane_ledger_cond(state.nfes, live)
     kw, _ = _advance(
         state, live, nxt, new_c, None, state.crossed, nfes, eos_token
     )
-    new_state = constrain_lane_state(state._replace(**kw))
+    new_state = constrain_lane_state(state._replace(pool=new_pool, **kw))
     trace = HorizonTrace(
         tokens=kw["tokens"][:, 0], crossed=state.crossed, nfes=nfes,
         emitted=live,

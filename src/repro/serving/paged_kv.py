@@ -1,0 +1,324 @@
+"""Paged KV cache: host-side page allocator + device page-pool helpers.
+
+DESIGN.md §15.  The contiguous per-slot layout allocates ``cache_len`` KV
+rows for every (lane, slot, branch) whether or not a request ever writes
+them.  The paged layout replaces that with ONE global pool of fixed-size
+pages per attention layer and a per-slot *block table* of page ids; slots
+hold only the pages their sequence actually covers, the cond/uncond pair
+(and any requests with an identical tokenized context prefix) share the
+full pages of that prefix, and completed requests return their pages to
+the free list for immediate reuse.
+
+Split of responsibilities:
+
+* ``PagePool`` (this module, pure host state) — free list, per-page
+  refcounts, the prefix-sharing index, per-(request, branch) page ledgers
+  and the conservation invariant ``allocated == freed + resident``.  It
+  never touches device memory.
+* device helpers (this module) — tiny jitted updates over the pool
+  pytree: sentinel-safe position resets on allocation, page copies for
+  copy-on-write, block-table row edits.
+* the model (``models/decoder.py``) owns the pool pytree layout — a list
+  per plan position of ``{"k", "v", "pos"}`` leaves shaped
+  ``(npd, num_pages, P, Hkv, Dh)`` / ``(npd, num_pages, P)`` — and the
+  paged decode step; the batcher wires the two together.
+
+Page 0 is the **sentinel**: never allocated, its ``pos`` row pinned at
+int32 max so any block-table entry left at 0 (unallocated tail, freed
+slot) attends to nothing and absorbs the masked writes of inactive slots.
+
+Sharing / copy-on-write rules:
+
+* a *full* page of a prefilled context is keyed by the token chain that
+  produced it — ``hash(tokens[: (j + 1) * P])`` — and re-used by any later
+  admission whose branch context starts with the same chain (refcount +1,
+  no device write);
+* the page containing the write frontier is always private: a partial
+  prefill page is written fresh per branch (the degenerate copy-on-write
+  — the "copy" is the branch's own prefill slice), and a shared *full*
+  page is copied to a fresh private page before a ring-wrap or in-place
+  divergence can write into it (``cow_pages`` → device ``copy_page``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def pages_for(length: int, page_size: int) -> int:
+    """Number of pages needed to cover ``length`` cache entries."""
+    return -(-int(length) // int(page_size))
+
+
+def chain_key(tokens, upto: int) -> Tuple[int, ...]:
+    """Sharing key for the full page ending at ``upto``: the token chain
+    that determined its KV content (positions are 0..upto-1 for every
+    admission prefill, so equal chains give bitwise-equal pages)."""
+    arr = np.asarray(tokens).reshape(-1)[:upto]
+    return tuple(int(t) for t in arr)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    num_pages: int
+    page_size: int
+    allocated_total: int = 0
+    freed_total: int = 0
+    shared_hits: int = 0
+    cow_copies: int = 0
+    peak_resident: int = 0
+
+
+class PageExhausted(RuntimeError):
+    """Raised by ``alloc`` when the free list is empty — admission paths
+    must check ``can_allocate`` first and queue instead of admitting."""
+
+
+class PagePool:
+    """Host-side allocator over page ids ``1..num_pages-1`` (0 = sentinel).
+
+    Tracks refcounts (prefix sharing), the chain-key sharing index, and
+    per-(owner, branch) page ledgers so frees never require a device
+    read-back of the block tables.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError(
+                f"page pool needs >= 2 pages (sentinel + 1): {num_pages}"
+            )
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1: {page_size}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() -> 1 first
+        self._ref = np.zeros(num_pages, np.int64)
+        self._share: Dict[Tuple, int] = {}
+        self._share_rev: Dict[int, Tuple] = {}
+        # (owner, branch) -> {page index in table -> page id}
+        self._owned: Dict[Tuple, Dict[int, int]] = {}
+        self.stats = PoolStats(num_pages=num_pages, page_size=page_size)
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def resident_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def can_allocate(self, count: int) -> bool:
+        return len(self._free) >= count
+
+    # -- allocation / refcounts -------------------------------------------
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PageExhausted(
+                f"page pool exhausted ({self.num_pages - 1} pages all resident)"
+            )
+        pid = self._free.pop()
+        self._ref[pid] = 1
+        self.stats.allocated_total += 1
+        self.stats.peak_resident = max(self.stats.peak_resident, self.resident_pages)
+        return pid
+
+    def incref(self, pid: int) -> int:
+        assert self._ref[pid] > 0, f"incref on free page {pid}"
+        self._ref[pid] += 1
+        return pid
+
+    def decref(self, pid: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        assert self._ref[pid] > 0, f"decref on free page {pid}"
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            key = self._share_rev.pop(pid, None)
+            if key is not None:
+                self._share.pop(key, None)
+            self._free.append(pid)
+            self.stats.freed_total += 1
+            return True
+        return False
+
+    def refcount(self, pid: int) -> int:
+        return int(self._ref[pid])
+
+    # -- prefix sharing ----------------------------------------------------
+
+    def share_lookup(self, key: Tuple) -> Optional[int]:
+        pid = self._share.get(key)
+        if pid is not None:
+            self.stats.shared_hits += 1
+            self.incref(pid)
+        return pid
+
+    def share_register(self, key: Tuple, pid: int) -> None:
+        # first writer wins; later identical prefills share the earlier page
+        self._share.setdefault(key, pid)
+        self._share_rev.setdefault(pid, key)
+
+    # -- per-owner ledgers -------------------------------------------------
+
+    def table_of(self, owner: Tuple) -> Dict[int, int]:
+        return self._owned.setdefault(owner, {})
+
+    def assign(self, owner: Tuple, index: int, pid: int) -> None:
+        tbl = self.table_of(owner)
+        assert index not in tbl, (owner, index)
+        tbl[index] = pid
+
+    def release_owner(self, owner: Tuple) -> List[int]:
+        """Decref every page the owner holds; returns the freed page ids."""
+        tbl = self._owned.pop(owner, {})
+        freed = [pid for pid in tbl.values() if self.decref(pid)]
+        return freed
+
+    def move_owner(self, src: Tuple, dst: Tuple) -> None:
+        """Transfer a ledger wholesale (lane migration: the device block-
+        table row is copied by the lane migration itself; refcounts are
+        unchanged because ownership moves rather than duplicates)."""
+        assert dst not in self._owned or not self._owned[dst], dst
+        self._owned[dst] = self._owned.pop(src, {})
+
+    # -- invariants --------------------------------------------------------
+
+    def check_conservation(self) -> None:
+        """allocated == freed + resident, refcounts consistent with ledgers."""
+        st = self.stats
+        if st.allocated_total != st.freed_total + self.resident_pages:
+            raise AssertionError(
+                f"page ledger violated: allocated={st.allocated_total} != "
+                f"freed={st.freed_total} + resident={self.resident_pages}"
+            )
+        refs = np.zeros(self.num_pages, np.int64)
+        for tbl in self._owned.values():
+            for pid in tbl.values():
+                refs[pid] += 1
+            # shared pages may also be referenced by the share index alone;
+            # owner references must never exceed the recorded refcount
+        if (refs > self._ref).any():
+            bad = np.nonzero(refs > self._ref)[0]
+            raise AssertionError(f"owner ledgers exceed refcounts: pages {bad}")
+        free_set = set(self._free)
+        if len(free_set) != len(self._free):
+            raise AssertionError("double free: duplicate ids on the free list")
+        live = {pid for pid in range(1, self.num_pages) if self._ref[pid] > 0}
+        if live & free_set:
+            raise AssertionError(f"freed pages still referenced: {live & free_set}")
+
+
+# ---------------------------------------------------------------------------
+# device-side pool edits (tiny jitted updates over the pool pytree)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _reset_pos_leaf(pos_leaf, pids):
+    # pos_leaf: (npd, Np, P); pids: (m,) int32
+    return pos_leaf.at[:, pids].set(jnp.int32(INT32_MAX))
+
+
+def reset_pages(pools, pids) -> list:
+    """Pin ``pos`` of freshly allocated pages at int32 max (no-KV-bleed:
+    a recycled page is inert until its new owner writes it)."""
+    pids = jnp.asarray(pids, jnp.int32)
+    out = []
+    for pool in pools:
+        if pool is None:
+            out.append(None)
+        else:
+            out.append({**pool, "pos": _reset_pos_leaf(pool["pos"], pids)})
+    return out
+
+
+@jax.jit
+def _copy_page_leaf(leaf, src, dst):
+    return leaf.at[:, dst].set(leaf[:, src])
+
+
+def copy_page(pools, src: int, dst: int) -> list:
+    """Copy-on-write materialization: duplicate page ``src`` into ``dst``
+    across every layer leaf (k, v, pos)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    out = []
+    for pool in pools:
+        if pool is None:
+            out.append(None)
+        else:
+            out.append({k: _copy_page_leaf(v, src, dst) for k, v in pool.items()})
+    return out
+
+
+@jax.jit
+def _set_bt_row(bt_leaf, slot, row):
+    # bt_leaf: (npd, B, n); row: (n,) int32
+    return bt_leaf.at[:, slot].set(row)
+
+
+def set_block_row(caches, plan_attn: List[bool], slot: int, row) -> list:
+    """Install a block-table row for ``slot`` on every attention plan
+    position (the same logical table serves all layers)."""
+    row = jnp.asarray(row, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    out = []
+    for is_attn, cache in zip(plan_attn, caches):
+        if is_attn:
+            out.append({**cache, "bt": _set_bt_row(cache["bt"], slot, row)})
+        else:
+            out.append(cache)
+    return out
+
+
+@jax.jit
+def _set_bt_entry(bt_leaf, slot, j, pid):
+    return bt_leaf.at[:, slot, j].set(pid)
+
+
+def set_block_entry(caches, plan_attn: List[bool], slot: int, j: int, pid: int) -> list:
+    row_edit = lambda c: {**c, "bt": _set_bt_entry(
+        c["bt"], jnp.asarray(slot, jnp.int32), jnp.asarray(j, jnp.int32),
+        jnp.asarray(pid, jnp.int32))}
+    return [row_edit(c) if a else c for a, c in zip(plan_attn, caches)]
+
+
+def zero_block_row(caches, plan_attn: List[bool], slot: int) -> list:
+    """Point a freed slot's whole table at the sentinel so any stale decode
+    of that slot writes into page 0 (absorbed) and reads nothing."""
+    n = None
+    for is_attn, cache in zip(plan_attn, caches):
+        if is_attn:
+            n = cache["bt"].shape[-1]
+            break
+    if n is None:
+        return caches
+    return set_block_row(caches, plan_attn, slot, jnp.zeros((n,), jnp.int32))
+
+
+def table_len(caches, plan_attn: List[bool]) -> int:
+    """Block-table length n (pages per slot) read off the cache tree."""
+    for is_attn, cache in zip(plan_attn, caches):
+        if is_attn:
+            return int(cache["bt"].shape[-1])
+    raise ValueError("no attention plan positions: paged KV needs a KV cache")
+
+
+def page_nbytes(pools) -> int:
+    """Bytes of one page summed over every layer leaf (k + v + pos)."""
+    total = 0
+    for pool in pools:
+        if pool is None:
+            continue
+        for leaf in jax.tree.leaves(pool):
+            # leaf: (npd, Np, P, ...) — bytes per page = size / Np
+            total += leaf.nbytes // leaf.shape[1]
+    return total

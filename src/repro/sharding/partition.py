@@ -328,6 +328,20 @@ CACHE_KEY_AXES: dict = {
     "pos": (None, "slots", "kvlen"),
     "state": (None, "slots", "ssm_heads", None, None),
     "conv_x": (None, "slots", None, "ssm_inner"),
+    # paged KV (DESIGN.md §15): per-slot block tables ride the cache tree —
+    # slot axis at 1 like every cache leaf, page-index axis replicated.
+    "bt": (None, "slots", None),
+}
+
+# Page-pool leaves (DESIGN.md §15): the pool is global — pages are shared
+# across slots (prefix sharing / COW), so there is NO slot axis to shard.
+# Leaves are period-stacked: k/v (npd, Np, P, Hkv, Dh), pos (npd, Np, P).
+# Only the KV-head axis shards (tensor parallel); the page axis stays
+# replicated so any slot's block table can reach any page on any shard.
+POOL_KEY_AXES: dict = {
+    "k": (None, None, None, "kvheads", None),
+    "v": (None, None, None, "kvheads", None),
+    "pos": (None, None, None),
 }
 
 
@@ -394,6 +408,21 @@ def _cache_leaf_axes(path, ndim) -> tuple:
     return axes
 
 
+def _pool_leaf_axes(path, ndim) -> tuple:
+    key = next(
+        (
+            e.key
+            for e in reversed(path)
+            if isinstance(e, jax.tree_util.DictKey)
+        ),
+        None,
+    )
+    axes = POOL_KEY_AXES.get(key)
+    if axes is None:  # unknown pool kind: fully replicated
+        axes = (None,) * ndim
+    return axes
+
+
 def _map_lane_leaves(fn, state):
     """Apply ``fn(axes, leaf) -> leaf`` over every array leaf of a lane
     state NamedTuple (LaneState / LinearLaneState / GuidedState), resolving
@@ -412,6 +441,13 @@ def _map_lane_leaves(fn, state):
                 k: fn(PSTATE_KEY_AXES.get(k, ("slots",)), x)
                 for k, x in v.items()
             }
+        elif name == "pool":
+            # Page pools carry no slot axis — they must NOT hit the
+            # ("slots",) fallback below (sharding the page axis over "data"
+            # would strand pages on one shard's replica).
+            kw[name] = jax.tree_util.tree_map_with_path(
+                lambda p, x: fn(_pool_leaf_axes(p, x.ndim), x), v
+            )
         else:
             kw[name] = fn(LANE_FIELD_AXES.get(name, ("slots",)), v)
     return type(state)(**kw)

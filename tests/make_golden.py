@@ -80,13 +80,15 @@ def _batcher_record(bat, done, rids):
     }
 
 
-def run_batcher_case(mesh=None, horizon=1, obs=None):
+def run_batcher_case(mesh=None, horizon=1, obs=None, paged=False):
     """Two-lane churn under a fixed seed: late arrival, slot reuse, a
     never-crossing neighbour, plain traffic.  ``mesh`` runs the identical
     workload sharded (tests/test_sharded_serving.py asserts bit-equality
     against the fixture generated without one); ``horizon`` fuses H decode
     substeps per dispatch (tokens/NFE ledgers must still match the fixture
-    bit-exactly — lifecycle steps quantize to horizon boundaries)."""
+    bit-exactly — lifecycle steps quantize to horizon boundaries);
+    ``paged`` serves from the paged KV pool (DESIGN.md §15 — same bit-exact
+    contract, compile counts excluded)."""
     from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
 
     cfg, api, params = golden_model()
@@ -100,8 +102,9 @@ def run_batcher_case(mesh=None, horizon=1, obs=None):
     ec = EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=2)
     bat = StepBatcher(
         api, params, ec,
-        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon), mesh=mesh,
-        obs=obs,
+        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon,
+                      paged=paged, page_size=4),
+        mesh=mesh, obs=obs,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 0, 2, 4])]
     done = bat.run()
@@ -127,11 +130,11 @@ def fit_golden_coeffs():
     return coeffs
 
 
-def run_three_lane_case(coeffs, mesh=None, horizon=1, obs=None):
+def run_three_lane_case(coeffs, mesh=None, horizon=1, obs=None, paged=False):
     """Three-lane churn: full ladder, never-crossing linear request, slot
     reuse — driven by the FIXTURE's coefficient vector.  ``mesh`` runs the
-    identical workload sharded, ``horizon`` fuses H substeps per dispatch
-    (see ``run_batcher_case``)."""
+    identical workload sharded, ``horizon`` fuses H substeps per dispatch,
+    ``paged`` serves from the paged KV pool (see ``run_batcher_case``)."""
     from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
 
     cfg, api, params = golden_model()
@@ -144,7 +147,8 @@ def run_three_lane_case(coeffs, mesh=None, horizon=1, obs=None):
     ec = EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
     bat = StepBatcher(
         api, params, ec,
-        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon),
+        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon,
+                      paged=paged, page_size=4),
         coeffs=coeffs, mesh=mesh, obs=obs,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]
@@ -158,7 +162,7 @@ def run_three_lane_case(coeffs, mesh=None, horizon=1, obs=None):
     }
 
 
-def run_policy_case(policy, mesh=None, horizon=1, obs=None):
+def run_policy_case(policy, mesh=None, horizon=1, obs=None, paged=False):
     """Per-policy churn under a fixed seed: one instant-crosser, one
     never-crossing request (``gamma_bar=2.0``, exercising compress's
     refresh cadence / online_ag's gap watermark to the end of its budget)
@@ -176,8 +180,9 @@ def run_policy_case(policy, mesh=None, horizon=1, obs=None):
     ec = EngineConfig(scale=1.5, gamma_bar=0.5, max_batch=2)
     bat = StepBatcher(
         api, params, ec,
-        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon), mesh=mesh,
-        obs=obs,
+        BatcherConfig(max_slots=2, buckets=(1, 2), horizon=horizon,
+                      paged=paged, page_size=4),
+        mesh=mesh, obs=obs,
     )
     rids = [bat.submit(r, arrival_step=a) for r, a in zip(reqs, [0, 1, 3])]
     done = bat.run()

@@ -121,6 +121,68 @@ def test_policy_fixture_locked(golden, policy):
     assert got["nfes_device"] == want["nfes_device"]
 
 
+def _check_tokens(got, want):
+    """Token + NFE bit-identity only — the right bar when the comparable
+    baseline differs in lifecycle quantization (horizon-fused runs)."""
+    for rid in want:
+        np.testing.assert_array_equal(
+            np.asarray(got[rid]["tokens"]), np.asarray(want[rid]["tokens"]),
+            err_msg=f"request {rid} paged token drift",
+        )
+        assert got[rid]["nfes"] == want[rid]["nfes"], rid
+
+
+@pytest.mark.parametrize("horizon", [1, 8])
+def test_paged_batcher_matches_golden(golden, horizon):
+    """Paged-KV bit-identity (DESIGN.md §15): the golden two-lane and
+    three-lane workloads served from the page pool must reproduce the
+    contiguous run's tokens, NFE ledgers and lifecycle steps exactly.  At
+    H=1 the baseline is the checked-in fixture; at H=8 lifecycle steps
+    quantize to horizon boundaries, so the field-exact baseline is the
+    contiguous H=8 twin while tokens/NFEs still lock to the fixture.
+    Compile counts are excluded throughout — the paged batcher admits at
+    fixed lane capacity instead of walking the bucket ladder, so its
+    executable census legitimately differs."""
+    from repro.core.linear_ag import WindowCoeffs
+
+    got = run_batcher_case(horizon=horizon, paged=True)
+    _check_tokens(got["requests"], golden["batcher"]["requests"])
+    coeffs = WindowCoeffs(
+        K=int(golden["coeffs"]["K"]),
+        beta=np.asarray(golden["coeffs"]["beta"], np.float32),
+    )
+    got3 = run_three_lane_case(coeffs, horizon=horizon, paged=True)
+    _check_tokens(got3["requests"], golden["three_lane"]["requests"])
+    if horizon == 1:
+        _check_requests(got["requests"], golden["batcher"]["requests"])
+        _check_requests(got3["requests"], golden["three_lane"]["requests"])
+        assert got3["nfes_device"] == golden["three_lane"]["nfes_device"]
+    else:
+        twin = run_batcher_case(horizon=horizon, paged=False)
+        _check_requests(got["requests"], twin["requests"])
+        twin3 = run_three_lane_case(coeffs, horizon=horizon, paged=False)
+        _check_requests(got3["requests"], twin3["requests"])
+        assert got3["nfes_device"] == twin3["nfes_device"]
+
+
+@pytest.mark.parametrize("horizon", [1, 8])
+@pytest.mark.parametrize("policy", ["default", "compress", "online_ag"])
+def test_paged_policy_matches_golden(golden, policy, horizon):
+    """Every registered guidance policy stays bit-identical when served
+    from the paged KV pool, at H=1 (vs its fixture) and horizon-fused H=8
+    (vs the contiguous H=8 twin; tokens/NFEs still lock to the fixture)."""
+    got = run_policy_case(policy, horizon=horizon, paged=True)
+    want = golden["policies"][policy]
+    _check_tokens(got["requests"], want["requests"])
+    if horizon == 1:
+        _check_requests(got["requests"], want["requests"])
+        assert got["nfes_device"] == want["nfes_device"]
+    else:
+        twin = run_policy_case(policy, horizon=horizon, paged=False)
+        _check_requests(got["requests"], twin["requests"])
+        assert got["nfes_device"] == twin["nfes_device"]
+
+
 def test_golden_coeffs_refit_is_close(golden):
     """Refitting on this host should land near the stored vector (loose
     tolerance: guards against accidental regressor-order changes without

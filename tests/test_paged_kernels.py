@@ -1,0 +1,222 @@
+"""Paged decode-attention kernel net (DESIGN.md §15).
+
+Covers the three paged Pallas kernels against their gather-and-defer
+oracles (f32 pages, int8 pages with per-entry scales, and the fused
+guidance epilogue), the platform gating of ``interpret=None`` (the
+decode-attention twin of ``test_linear_combine_interpret_gating`` — a
+TPU-hosted run must get the compiled Mosaic kernel, never a silent
+interpreter fallback), and the executor's fused paged-combine route.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (
+    decode_attention,
+    paged_decode_attention,
+    paged_decode_attention_q8,
+    paged_guided_decode_attention,
+)
+from repro.kernels.ref import (
+    decode_attention_ref,
+    paged_decode_attention_q8_ref,
+    paged_decode_attention_ref,
+    paged_guided_decode_attention_ref,
+    quantize_page_ref,
+)
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def _paged_batch(key, B, S, P, Hkv, D, lengths):
+    """Per-row page chains over a shared pool; sentinel page 0 for the
+    unallocated tail (pos = int32 max, zero payload)."""
+    n = S // P
+    resident = [int(np.ceil(length / P)) for length in lengths]
+    Np = 1 + sum(resident)
+    kk, kv = jax.random.split(key)
+    k_pages = jax.random.normal(kk, (Np, P, Hkv, D), jnp.float32)
+    v_pages = jax.random.normal(kv, (Np, P, Hkv, D), jnp.float32)
+    k_pages = k_pages.at[0].set(0.0)
+    v_pages = v_pages.at[0].set(0.0)
+    pos = np.full((Np, P), INT32_MAX, np.int64)
+    bt = np.zeros((B, n), np.int32)
+    pid = 1
+    for b, length in enumerate(lengths):
+        for j in range(resident[b]):
+            bt[b, j] = pid
+            for o in range(P):
+                if j * P + o < length:
+                    pos[pid, o] = j * P + o
+            pid += 1
+    return (
+        k_pages, v_pages,
+        jnp.asarray(np.minimum(pos, INT32_MAX), jnp.int32),
+        jnp.asarray(bt),
+    )
+
+
+@pytest.fixture(scope="module")
+def batch():
+    B, S, P, Hq, Hkv, D = 4, 32, 4, 8, 2, 32
+    lengths = [5, 17, 32, 12]
+    k_pages, v_pages, pos_pages, bt = _paged_batch(
+        jax.random.PRNGKey(0), B, S, P, Hkv, D, lengths
+    )
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, Hq, 1, D), jnp.float32)
+    position = jnp.asarray(lengths, jnp.int32) - 1
+    return q, k_pages, v_pages, pos_pages, bt, position
+
+
+def test_decode_attention_interpret_gating():
+    """``interpret=None`` resolves per platform — the compiled kernel on a
+    real TPU backend, interpret (validation) mode everywhere else.  The
+    default must NOT be a hard-coded ``True``: that would silently run the
+    interpreter on TPU and throw away the kernel entirely."""
+    import inspect
+
+    from repro.kernels.decode_attention import (
+        _resolve_interpret,
+        decode_attention_raw,
+    )
+    from repro.kernels.linear_combine import default_interpret
+
+    on_tpu = jax.default_backend() == "tpu"
+    assert _resolve_interpret(None) == (not on_tpu)
+    assert _resolve_interpret(None) == default_interpret()
+    # explicit overrides pass through untouched
+    assert _resolve_interpret(True) is True
+    assert _resolve_interpret(False) is False
+    # the signature default is the platform gate, not a literal True
+    sig = inspect.signature(decode_attention_raw)
+    assert sig.parameters["interpret"].default is None
+
+
+def test_paged_matches_gather_oracle(batch):
+    q, k_pages, v_pages, pos_pages, bt, position = batch
+    out = paged_decode_attention(q, k_pages, v_pages, pos_pages, bt, position)
+    ref = paged_decode_attention_ref(
+        q, k_pages, v_pages, pos_pages, bt, position
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_paged_matches_contiguous_reference(batch):
+    """Bit-identity bridge: gathering the pool through the block table IS
+    the contiguous cache, so the paged kernel must agree with the plain
+    contiguous kernel fed the gathered layout."""
+    q, k_pages, v_pages, pos_pages, bt, position = batch
+    B, n = bt.shape
+    P = pos_pages.shape[1]
+
+    def gather(pages):
+        g = pages[bt]
+        return g.reshape((B, n * P) + g.shape[3:])
+
+    paged = paged_decode_attention(
+        q, k_pages, v_pages, pos_pages, bt, position
+    )
+    contig = decode_attention(
+        q, gather(k_pages), gather(v_pages), gather(pos_pages), position
+    )
+    np.testing.assert_allclose(
+        np.asarray(paged), np.asarray(contig), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_paged_sliding_window(batch):
+    q, k_pages, v_pages, pos_pages, bt, position = batch
+    out = paged_decode_attention(
+        q, k_pages, v_pages, pos_pages, bt, position, window=8
+    )
+    ref = paged_decode_attention_ref(
+        q, k_pages, v_pages, pos_pages, bt, position, window=8
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_paged_q8_matches_oracle(batch):
+    """int8 pages (``perf_flags.kv_int8_pages``): kernel vs dequantize-and-
+    gather oracle, plus a sanity bound on the quantization error itself."""
+    q, k_pages, v_pages, pos_pages, bt, position = batch
+    k_q, k_s = quantize_page_ref(k_pages)
+    v_q, v_s = quantize_page_ref(v_pages)
+    assert k_q.dtype == jnp.int8 and v_q.dtype == jnp.int8
+    out = paged_decode_attention_q8(
+        q, k_q, k_s, v_q, v_s, pos_pages, bt, position
+    )
+    ref = paged_decode_attention_q8_ref(
+        q, k_q, k_s, v_q, v_s, pos_pages, bt, position
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5
+    )
+    f32 = paged_decode_attention(q, k_pages, v_pages, pos_pages, bt, position)
+    assert float(jnp.max(jnp.abs(out - f32))) < 0.1, (
+        "int8 page quantization error out of band"
+    )
+
+
+def test_fused_epilogue_matches_reference_combine(batch):
+    """The fused guidance epilogue (cond/uncond pack in one call) must
+    match the reference path — per-branch attention, then Eq. 3 combine
+    and the Eq. 7 gamma from the partials — to the standard tolerance."""
+    q, k_pages, v_pages, pos_pages, bt, position = batch
+    q2 = jnp.concatenate([q, 0.7 * q], axis=0)
+    bt2 = jnp.concatenate([bt, bt], axis=0)
+    pos2 = jnp.concatenate([position, position], axis=0)
+    comb, gamma = paged_guided_decode_attention(
+        q2, k_pages, v_pages, pos_pages, bt2, pos2, guidance_scale=1.5
+    )
+    rcomb, rpart = paged_guided_decode_attention_ref(
+        q2, k_pages, v_pages, pos_pages, bt2, pos2, guidance_scale=1.5
+    )
+    p = jnp.sum(rpart.astype(jnp.float32), axis=1)
+    rgamma = p[:, 0] / jnp.maximum(jnp.sqrt(p[:, 1] * p[:, 2]), 1e-12)
+    np.testing.assert_allclose(
+        np.asarray(comb), np.asarray(rcomb), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(gamma), np.asarray(rgamma), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_executor_paged_combine_backends_agree(batch):
+    """core/executor.py routes the paged cond/uncond step through the fused
+    kernel when the resolved backend is 'fused'; the reference route must
+    produce the same combined logits and gamma."""
+    from repro.core.executor import GuidanceExecutor
+
+    q, k_pages, v_pages, pos_pages, bt, position = batch
+    q2 = jnp.concatenate([q, 0.7 * q], axis=0)
+    bt2 = jnp.concatenate([bt, bt], axis=0)
+    pos2 = jnp.concatenate([position, position], axis=0)
+    args = (q2, k_pages, v_pages, pos_pages, bt2, pos2, 1.5)
+    fused = GuidanceExecutor(backend="fused").paged_decode_combine(*args)
+    ref = GuidanceExecutor(backend="reference").paged_decode_combine(*args)
+    np.testing.assert_allclose(
+        np.asarray(fused[0]), np.asarray(ref[0]), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(fused[1]), np.asarray(ref[1]), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_kv_int8_pages_flag_defaults_off():
+    """``perf_flags.kv_int8_pages`` gates the quantized page format; it
+    must default off (paper-faithful baseline) and round-trip through
+    ``set_flags`` like every other perf hypothesis."""
+    from repro import perf_flags
+
+    assert perf_flags.kv_int8_pages is False
+    prev = perf_flags.set_flags(kv_int8_pages=True)
+    try:
+        assert perf_flags.kv_int8_pages is True
+    finally:
+        perf_flags.set_flags(**prev)
+    assert perf_flags.kv_int8_pages is False

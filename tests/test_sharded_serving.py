@@ -74,7 +74,7 @@ def _golden_coeffs(golden):
     )
 
 
-def assert_bit_identical(got, want):
+def assert_requests_identical(got, want):
     """Tokens, NFE ledgers and every lifecycle step must match exactly."""
     assert set(got["requests"]) == set(want["requests"])
     for rid, w in want["requests"].items():
@@ -89,6 +89,10 @@ def assert_bit_identical(got, want):
             "migrated_step", "complete_step",
         ):
             assert g[field] == w[field], (rid, field, g[field], w[field])
+
+
+def assert_bit_identical(got, want):
+    assert_requests_identical(got, want)
     want_cc = {
         k: {int(c): n for c, n in v.items()}
         for k, v in want["compile_counts"].items()
@@ -124,6 +128,28 @@ def check_golden_parity(shape):
         )
         assert g["nfes"] == w["nfes"], f"request {rid} horizon ledger drift"
     assert goth["nfes_device"] == golden["three_lane"]["nfes_device"]
+    # paged KV under the mesh (DESIGN.md §15): serving both golden
+    # workloads from the page pool must stay bit-identical per mesh shape
+    # — requests compared field-exact at H=1, compile counts excluded (the
+    # paged batcher admits at fixed lane capacity, not the bucket ladder);
+    # the horizon-fused paged run pins tokens/NFEs (lifecycle steps
+    # quantize to horizon boundaries)
+    gotp = run_three_lane_case(_golden_coeffs(golden), mesh=mesh, paged=True)
+    assert_requests_identical(gotp, golden["three_lane"])
+    assert gotp["nfes_device"] == golden["three_lane"]["nfes_device"]
+    gotp2 = run_batcher_case(mesh=mesh, paged=True)
+    assert_requests_identical(gotp2, golden["batcher"])
+    gotph = run_three_lane_case(
+        _golden_coeffs(golden), mesh=mesh, paged=True, horizon=8
+    )
+    for rid, w in golden["three_lane"]["requests"].items():
+        g = gotph["requests"][rid]
+        np.testing.assert_array_equal(
+            np.asarray(g["tokens"]), np.asarray(w["tokens"]),
+            err_msg=f"request {rid} paged horizon token drift under mesh",
+        )
+        assert g["nfes"] == w["nfes"], f"request {rid} paged horizon NFE drift"
+    assert gotph["nfes_device"] == golden["three_lane"]["nfes_device"]
     # the whole-batch engine's mesh path holds the same contract: tokens
     # and NFE ledgers bit-identical, gammas to float tolerance
     eng = run_engine_case(mesh=mesh)
