@@ -1,0 +1,32 @@
+"""Declarative scheduled regression harness (DESIGN.md §16).
+
+ReFrame-shaped, not ReFrame-sized: jobs are plain-data ``JobSpec``s — a
+command template, a matrix of axes, a timeout, a retry budget and a list
+of declarative asserts (perf floors, savings gates, bit-parity checks)
+evaluated against the structured result each cell produces (by default
+the newest ``BENCH_serving.json`` history entry the cell appended).  The
+runner expands the matrix, executes each cell as a subprocess with
+retry/backoff and per-attempt log files, publishes every lifecycle
+transition as events on a ``repro.obs`` EventBus, and writes one JSONL
+result line per cell.
+
+``python -m repro.harness --nightly`` runs the serving regression
+matrix — lanes x mesh {1x8, 4x2, 8x1, 2-process cluster} x horizon
+{1, 8} x policy {default, compress, online_ag} x {contiguous, paged} —
+each cell appending a timestamped entry to the bench history so the
+perf trajectory is continuous rather than per-PR; ``--smoke`` decimates
+the matrix to a pinned subset that still covers every axis value.
+"""
+from repro.harness.nightly import nightly_jobs
+from repro.harness.runner import CellResult, run_cell, run_jobs
+from repro.harness.spec import ASSERT_KINDS, JobCell, JobSpec
+
+__all__ = [
+    "ASSERT_KINDS",
+    "CellResult",
+    "JobCell",
+    "JobSpec",
+    "nightly_jobs",
+    "run_cell",
+    "run_jobs",
+]

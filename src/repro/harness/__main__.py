@@ -1,0 +1,94 @@
+"""CLI: ``python -m repro.harness --nightly [--smoke] [--only axis=v]``.
+
+Runs the declarative nightly serving matrix (harness/nightly.py) and
+exits nonzero if any cell fails — the scheduled workflow's gate.  Cell
+logs land under ``--log-dir``, one JSONL result line per cell under
+``--results``, and the harness's own event stream (cells as spans,
+attempts as instants) under ``--trace``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.harness.nightly import nightly_jobs
+from repro.harness.runner import run_jobs
+
+
+def parse_only(pairs):
+    only = {}
+    for p in pairs:
+        if "=" not in p:
+            raise SystemExit(f"--only wants axis=value, got {p!r}")
+        k, v = p.split("=", 1)
+        only[k] = v
+    return only
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.harness", description=__doc__)
+    ap.add_argument("--nightly", action="store_true",
+                    help="run the nightly serving regression matrix")
+    ap.add_argument("--smoke", action="store_true",
+                    help="decimate the matrix to the pinned subset that "
+                         "still covers every axis value")
+    ap.add_argument("--bench-out", default="BENCH_serving.json",
+                    help="bench history file the serving cells append to")
+    ap.add_argument("--run-dir", default="artifacts/harness",
+                    help="working dir for cluster runs + reports")
+    ap.add_argument("--log-dir", default="artifacts/harness/logs")
+    ap.add_argument("--results", default="artifacts/harness/results.jsonl")
+    ap.add_argument("--trace", default="artifacts/harness/trace.jsonl",
+                    help="harness event stream (JSONL; '' disables)")
+    ap.add_argument("--only", action="append", default=[],
+                    metavar="AXIS=VALUE",
+                    help="run only cells matching every given pair "
+                         "(repeatable; the CI shard filter)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the expanded cells and exit")
+    args = ap.parse_args(argv)
+
+    if not args.nightly:
+        ap.error("nothing to do: pass --nightly")
+    specs = nightly_jobs(bench_out=args.bench_out, run_dir=args.run_dir,
+                         smoke=args.smoke)
+    if args.smoke:
+        full = sum(
+            len(s.cells()) for s in
+            nightly_jobs(bench_out=args.bench_out, run_dir=args.run_dir)
+        )
+        now = sum(len(s.cells()) for s in specs)
+        print(f"[harness] --smoke decimation: {now} of {full} cells "
+              f"(every axis value still covered; the full matrix runs "
+              f"nightly)")
+    only = parse_only(args.only)
+    if args.list:
+        for spec in specs:
+            for c in spec.cells():
+                if only and not all(
+                    c.axes_dict.get(k) == v for k, v in only.items()
+                ):
+                    continue
+                print(f"{c.slug}: {' '.join(c.cmd)}")
+        return 0
+
+    from repro.obs import EventBus, write_jsonl
+
+    bus = EventBus()
+    summary = run_jobs(specs, args.log_dir, results_path=args.results,
+                       bus=bus, only=only)
+    if args.trace:
+        write_jsonl(bus.events(), args.trace)
+    print(f"[harness] {summary['passed']} passed, "
+          f"{summary['failed']} failed "
+          f"(results -> {args.results})")
+    for r in summary["cells"]:
+        if not r.ok:
+            print(f"[harness] FAILED {r.job} {r.axes}: {r.status} "
+                  f"({r.error}); last log: {r.log}")
+    return 1 if summary["failed"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,136 @@
+"""The nightly serving regression matrix (DESIGN.md §16).
+
+Three declarative jobs cover the ISSUE's lanes x mesh x horizon x policy
+x {contiguous, paged} grid:
+
+* ``serving`` — the full three-lane ladder (``--lanes three``) over
+  mesh {1x8, 4x2, 8x1} x horizon {1, 8} x policy {default, compress,
+  online_ag} x kv {contiguous, paged}.  Each cell is one
+  ``bench_serving.py --smoke`` run on 8 simulated devices: it appends a
+  timestamped entry to the bench history (the continuous perf
+  trajectory) and the harness asserts the recorded entry — ledger
+  bit-parity, the savings ladder, per-policy floors, the paged pool
+  drain, and the H=8 dispatch-cut floor.
+* ``serving-two`` — the two-lane ladder cells (``--lanes two``) per
+  mesh; the deeper axes ride only the three-lane job (a two-lane cell
+  has no linear lane, policy points or paged headline by construction).
+* ``cluster`` — the 2-process ``launch/cluster.py`` golden run
+  (mesh value ``cluster2``): simulated devices per worker, merged
+  tokens/NFE ledgers asserted bit-identical to the single-process
+  golden fixture.
+
+``--smoke`` pins a decimated subset that still covers every axis value
+at least once (the runner logs exactly how many cells were dropped —
+no silent caps).
+"""
+from __future__ import annotations
+
+import sys
+from typing import List
+
+from repro.harness.spec import JobSpec
+
+BENCH = "benchmarks/bench_serving.py"
+FIXTURE = "tests/fixtures/golden_serving.json"
+
+EIGHT_DEVICES = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+# decimated --smoke cells: every axis value appears in at least one cell
+SMOKE_SERVING = (
+    {"mesh": "8x1", "horizon": "1", "policy": "default",
+     "kv": "contiguous", "lanes": "three"},
+    {"mesh": "4x2", "horizon": "8", "policy": "compress",
+     "kv": "paged", "lanes": "three"},
+    {"mesh": "1x8", "horizon": "1", "policy": "online_ag",
+     "kv": "contiguous", "lanes": "three"},
+)
+SMOKE_TWO = ({"mesh": "8x1", "lanes": "two"},)
+
+
+def nightly_jobs(bench_out: str = "BENCH_serving.json",
+                 run_dir: str = "artifacts/harness",
+                 smoke: bool = False) -> List[JobSpec]:
+    serving_asserts = (
+        # ledger conservation of the headline point, bit-exact
+        {"kind": "bit_parity", "key": "headline.nfes_device",
+         "key_b": "headline.nfes_expected"},
+        # the paper's efficiency ladder, re-asserted on the recorded entry
+        {"kind": "savings_gate",
+         "key": "three_lane_batcher.totals.mean_savings_pct",
+         "key_b": "step_batcher.totals.mean_savings_pct"},
+        {"kind": "savings_gate",
+         "key": "step_batcher.totals.mean_savings_pct",
+         "key_b": "round_scheduler.mean_savings_pct"},
+        {"kind": "perf_floor", "key": "perf.tokens_per_s", "value": 1.0},
+        # every policy must realize non-negative savings vs always-CFG
+        {"kind": "savings_gate",
+         "key": "policy_points.{policy}.mean_savings_pct", "value": 0.0},
+        # the paged pool must drain (no leaked pages after completion)
+        {"kind": "bit_parity", "key": "three_lane_paged.page_pool.resident",
+         "value": 0},
+        # dispatch economics: H=8 must cut launches/token >= 4x
+        {"kind": "perf_floor", "key": "perf.horizon.dispatch_cut",
+         "value": 4.0, "when": {"horizon": "8"}},
+    )
+    serving = JobSpec(
+        name="serving",
+        cmd=(sys.executable, BENCH, "--smoke", "--lanes", "{lanes}",
+             "--mesh", "{mesh}", "--horizon", "{horizon}",
+             "--policy", "{policy}", "--kv", "{kv}", "--out", bench_out),
+        matrix={
+            "lanes": ("three",),
+            "mesh": ("1x8", "4x2", "8x1"),
+            "horizon": ("1", "8"),
+            "policy": ("default", "compress", "online_ag"),
+            "kv": ("contiguous", "paged"),
+        },
+        env=dict(EIGHT_DEVICES),
+        timeout_s=1800.0,
+        retries=1,
+        asserts=serving_asserts,
+        result_path=bench_out,
+        result_kind="bench_history",
+        pinned=SMOKE_SERVING if smoke else None,
+    )
+    serving_two = JobSpec(
+        name="serving-two",
+        cmd=(sys.executable, BENCH, "--smoke", "--lanes", "{lanes}",
+             "--mesh", "{mesh}", "--out", bench_out),
+        matrix={"lanes": ("two",), "mesh": ("1x8", "4x2", "8x1")},
+        env=dict(EIGHT_DEVICES),
+        timeout_s=1800.0,
+        retries=1,
+        asserts=(
+            {"kind": "bit_parity", "key": "headline.nfes_device",
+             "key_b": "headline.nfes_expected"},
+            {"kind": "savings_gate",
+             "key": "step_batcher.totals.mean_savings_pct",
+             "key_b": "round_scheduler.mean_savings_pct"},
+            {"kind": "perf_floor", "key": "perf.tokens_per_s",
+             "value": 1.0},
+        ),
+        result_path=bench_out,
+        result_kind="bench_history",
+        pinned=SMOKE_TWO if smoke else None,
+    )
+    cluster_out = f"{run_dir}/cluster_report.json"
+    cluster = JobSpec(
+        name="cluster",
+        cmd=(sys.executable, "-m", "repro.launch.cluster",
+             "--processes", "2", "--local-devices", "2", "--golden",
+             "--parity-fixture", FIXTURE,
+             "--run-dir", f"{run_dir}/cluster",
+             "--out", cluster_out),
+        matrix={"mesh": ("cluster2",)},
+        timeout_s=900.0,
+        retries=1,
+        asserts=(
+            {"kind": "bit_parity", "key": "totals.nfes_device",
+             "key_b": "totals.nfes_expected"},
+            {"kind": "bit_parity", "key": "parity.golden", "value": True},
+            {"kind": "perf_floor", "key": "parity.requests", "value": 4},
+        ),
+        result_path=cluster_out,
+        result_kind="json",
+    )
+    return [serving, serving_two, cluster]

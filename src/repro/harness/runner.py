@@ -1,0 +1,223 @@
+"""Execute harness cells: subprocess + retry/backoff + asserts + JSONL.
+
+Each cell runs as a subprocess (merged stdout/stderr into a per-attempt
+log file under the harness log dir), with a hard timeout and a retry
+budget with exponential backoff.  After a clean exit the cell's
+structured result is loaded (``bench_history``: the newest entry of a
+``{"history": [...]}`` bench file; ``json``: the file verbatim) and the
+declarative asserts evaluate against it.  A cell passes only when the
+command exits 0 AND every assert holds; on retry exhaustion the recorded
+result names the LAST attempt's log so the nightly artifact points
+straight at the failure.
+
+Every lifecycle transition (cell start/end, attempt fail, assert
+verdicts) is published on a ``repro.obs`` EventBus — the harness speaks
+the same trace dialect as the serving stack, so ``write_jsonl`` exports
+a harness trace next to the bench history.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import time
+from typing import List, Optional, Sequence
+
+from repro.harness.spec import JobCell, JobSpec
+
+CAT_HARNESS = "harness"
+
+
+def resolve_path(result: dict, dotpath: str):
+    """Walk ``a.b.c`` through nested dicts; KeyError carries the full
+    path and the keys available at the failing hop."""
+    node = result
+    walked = []
+    for part in dotpath.split("."):
+        walked.append(part)
+        if not isinstance(node, dict) or part not in node:
+            have = sorted(node) if isinstance(node, dict) else type(node)
+            raise KeyError(
+                f"result path {dotpath!r} broke at "
+                f"{'.'.join(walked)!r} (available: {have})"
+            )
+        node = node[part]
+    return node
+
+
+def load_result(cell: JobCell) -> dict:
+    if cell.result_path is None:
+        return {}
+    with open(cell.result_path) as f:
+        data = json.load(f)
+    if cell.result_kind == "bench_history":
+        history = data["history"] if isinstance(data, dict) else data
+        if not history:
+            raise ValueError(
+                f"{cell.result_path}: empty bench history (the cell "
+                f"appended nothing)"
+            )
+        return history[-1]
+    return data
+
+
+def eval_asserts(asserts: Sequence[dict], result: dict) -> List[dict]:
+    """Evaluate every assert; never raises — each verdict records ok +
+    a human-readable detail (missing result paths fail the assert)."""
+    verdicts = []
+    for a in asserts:
+        kind = a["kind"]
+        try:
+            got = resolve_path(result, a["key"])
+            if "key_b" in a:
+                want = resolve_path(result, a["key_b"])
+                want_desc = f"{a['key_b']} = {want}"
+            else:
+                want = a["value"]
+                want_desc = repr(want)
+            if kind == "perf_floor" or kind == "savings_gate":
+                ok = got >= want
+                rel = ">="
+            elif kind == "perf_ceiling":
+                ok = got <= want
+                rel = "<="
+            else:  # bit_parity
+                ok = got == want
+                rel = "=="
+            detail = f"{a['key']} = {got} {rel} {want_desc}"
+        except (KeyError, TypeError) as e:
+            ok, detail = False, str(e)
+        verdicts.append({
+            "kind": kind, "key": a["key"], "ok": bool(ok), "detail": detail,
+        })
+    return verdicts
+
+
+@dataclasses.dataclass
+class CellResult:
+    job: str
+    axes: dict
+    status: str  # pass | fail | timeout | assert_fail | error
+    attempts: int
+    duration_s: float
+    log: Optional[str]  # LAST attempt's log path
+    returncode: Optional[int] = None
+    asserts: List[dict] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "pass"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _attempt(cell: JobCell, log_path: str) -> tuple:
+    """One attempt: (status, returncode, asserts, error)."""
+    env = dict(os.environ)
+    env.update(dict(cell.env))
+    with open(log_path, "w") as log:
+        try:
+            proc = subprocess.run(
+                list(cell.cmd), stdout=log, stderr=subprocess.STDOUT,
+                env=env, timeout=cell.timeout_s,
+            )
+        except subprocess.TimeoutExpired:
+            return "timeout", None, [], f"timed out after {cell.timeout_s}s"
+    if proc.returncode != 0:
+        return ("fail", proc.returncode, [],
+                f"exit {proc.returncode}")
+    try:
+        result = load_result(cell)
+    except (OSError, ValueError, KeyError) as e:
+        return "error", proc.returncode, [], f"result unreadable: {e}"
+    verdicts = eval_asserts(cell.asserts, result)
+    if all(v["ok"] for v in verdicts):
+        return "pass", proc.returncode, verdicts, None
+    bad = "; ".join(v["detail"] for v in verdicts if not v["ok"])
+    return "assert_fail", proc.returncode, verdicts, bad
+
+
+def run_cell(cell: JobCell, log_dir: str, bus=None,
+             sleep=time.sleep) -> CellResult:
+    """Run one cell with its retry budget; the result's ``log`` is always
+    the last attempt's file."""
+    os.makedirs(log_dir, exist_ok=True)
+    t0 = time.perf_counter()
+    status, rc, verdicts, error, log_path = "error", None, [], None, None
+    attempts = 0
+    for attempt in range(cell.retries + 1):
+        attempts = attempt + 1
+        log_path = os.path.join(log_dir, f"{cell.slug}.try{attempt}.log")
+        status, rc, verdicts, error = _attempt(cell, log_path)
+        if bus is not None:
+            bus.publish(
+                f"attempt:{cell.slug}", cat=CAT_HARNESS,
+                attempt=attempt, status=status, log=log_path,
+            )
+        if status == "pass":
+            break
+        if attempt < cell.retries:
+            sleep(cell.backoff_s * (2 ** attempt))
+    res = CellResult(
+        job=cell.job, axes=cell.axes_dict, status=status,
+        attempts=attempts, duration_s=time.perf_counter() - t0,
+        log=log_path, returncode=rc, asserts=verdicts, error=error,
+    )
+    if bus is not None:
+        bus.publish(
+            f"cell:{cell.slug}", cat=CAT_HARNESS, kind="span",
+            dur=res.duration_s, status=status, attempts=attempts,
+            log=log_path,
+        )
+    return res
+
+
+def run_jobs(specs: Sequence[JobSpec], log_dir: str,
+             results_path: Optional[str] = None, bus=None,
+             sleep=time.sleep, echo=print, only=None) -> dict:
+    """Expand every spec and run its cells sequentially.
+
+    ``only`` (axis -> value) keeps just the matching cells — the CI
+    nightly shards the matrix across parallel jobs with it.  Returns
+    ``{"cells": [CellResult...], "passed": n, "failed": n}``; appends
+    one JSON line per cell to ``results_path`` as it goes (a crashed
+    harness still leaves the completed cells' records behind).
+    """
+    cells = [c for spec in specs for c in spec.cells()]
+    if only:
+        kept = [
+            c for c in cells
+            if all(c.axes_dict.get(k) == v for k, v in only.items())
+        ]
+        # no silent caps: say exactly what the filter dropped
+        echo(f"[harness] --only {only}: {len(kept)} of {len(cells)} "
+             f"cells kept")
+        cells = kept
+    if bus is not None:
+        bus.publish("harness:start", cat=CAT_HARNESS, cells=len(cells))
+    results = []
+    for i, cell in enumerate(cells):
+        echo(f"[harness] cell {i + 1}/{len(cells)}: {cell.slug}")
+        res = run_cell(cell, log_dir, bus=bus, sleep=sleep)
+        mark = "ok" if res.ok else f"{res.status}: {res.error}"
+        echo(f"[harness]   -> {mark} "
+             f"({res.attempts} attempt(s), {res.duration_s:.1f}s)")
+        results.append(res)
+        if results_path:
+            with open(results_path, "a") as f:
+                f.write(json.dumps(res.to_dict(), sort_keys=True) + "\n")
+    passed = sum(r.ok for r in results)
+    summary = {
+        "cells": results,
+        "passed": passed,
+        "failed": len(results) - passed,
+    }
+    if bus is not None:
+        bus.publish(
+            "harness:done", cat=CAT_HARNESS,
+            passed=passed, failed=summary["failed"],
+        )
+    return summary

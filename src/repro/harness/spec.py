@@ -1,0 +1,243 @@
+"""Plain-data job specs for the regression harness (DESIGN.md §16).
+
+A ``JobSpec`` is declarative: a command template whose ``{axis}``
+placeholders are filled from the cross product of ``matrix``, plus
+timeout/retry budgets and a list of assert dicts.  Everything validates
+eagerly (``ValueError``, never ``assert`` — specs are user input and must
+survive ``python -O``), so a typo'd assert kind fails at harness build
+time, not three hours into the nightly.
+
+Assert kinds (evaluated against the cell's structured result — see
+``runner.load_result``):
+
+  perf_floor    result[key] >= value
+  perf_ceiling  result[key] <= value
+  savings_gate  result[key] >= result[key_b]   (or >= value)
+  bit_parity    result[key] == result[key_b]   (or == value), exact
+
+``key`` / ``key_b`` are dot-paths into the result JSON and may carry
+``{axis}`` placeholders of their own (e.g.
+``policy_points.{policy}.mean_savings_pct``).  An assert with a
+``when`` dict only attaches to cells whose axes match every pair in it
+(e.g. the horizon dispatch-cut floor only binds at ``horizon=8``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import string
+from typing import Dict, Optional, Sequence, Tuple
+
+ASSERT_KINDS = ("perf_floor", "perf_ceiling", "savings_gate", "bit_parity")
+
+# result formats the runner knows how to load (runner.load_result):
+#   bench_history — result_path is a BENCH_serving.json-style {"history":
+#                   [...]} file; the newest entry is the result
+#   json          — result_path is the result verbatim
+RESULT_KINDS = ("bench_history", "json")
+
+
+def _placeholders(template: str) -> set:
+    return {
+        field for _, field, _, _ in string.Formatter().parse(template)
+        if field
+    }
+
+
+def _check_assert(i: int, a: dict, axes: set) -> None:
+    if not isinstance(a, dict):
+        raise ValueError(f"assert #{i} must be a dict, got {type(a).__name__}")
+    kind = a.get("kind")
+    if kind not in ASSERT_KINDS:
+        raise ValueError(
+            f"assert #{i}: unknown kind {kind!r} (known: {ASSERT_KINDS})"
+        )
+    if not a.get("key"):
+        raise ValueError(f"assert #{i} ({kind}): missing 'key'")
+    has_value = "value" in a
+    has_key_b = "key_b" in a
+    if kind in ("perf_floor", "perf_ceiling") and not has_value:
+        raise ValueError(f"assert #{i} ({kind}): missing 'value'")
+    if kind in ("savings_gate", "bit_parity") and not (has_value or has_key_b):
+        raise ValueError(
+            f"assert #{i} ({kind}): needs 'key_b' or 'value'"
+        )
+    for fld in ("key", "key_b"):
+        if fld in a:
+            unknown = _placeholders(a[fld]) - axes
+            if unknown:
+                raise ValueError(
+                    f"assert #{i} ({kind}): {fld} references unknown "
+                    f"axes {sorted(unknown)}"
+                )
+    when = a.get("when", {})
+    unknown = set(when) - axes
+    if unknown:
+        raise ValueError(
+            f"assert #{i} ({kind}): 'when' references unknown axes "
+            f"{sorted(unknown)}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class JobCell:
+    """One expanded matrix cell: a fully-formatted command + its asserts."""
+
+    job: str
+    axes: Tuple[Tuple[str, str], ...]  # sorted (axis, value) pairs
+    cmd: Tuple[str, ...]
+    env: Tuple[Tuple[str, str], ...]
+    timeout_s: float
+    retries: int
+    backoff_s: float
+    asserts: Tuple[dict, ...]
+    result_path: Optional[str]
+    result_kind: str
+
+    @property
+    def slug(self) -> str:
+        parts = [self.job] + [f"{k}-{v}" for k, v in self.axes]
+        return "_".join(p.replace("/", "-").replace(" ", "") for p in parts)
+
+    @property
+    def axes_dict(self) -> Dict[str, str]:
+        return dict(self.axes)
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """One declarative job: cmd template x matrix -> cells."""
+
+    name: str
+    cmd: Sequence[str]
+    matrix: Dict[str, Sequence[str]] = dataclasses.field(default_factory=dict)
+    env: Dict[str, str] = dataclasses.field(default_factory=dict)
+    timeout_s: float = 600.0
+    retries: int = 0
+    backoff_s: float = 2.0  # sleep backoff_s * 2**attempt between retries
+    asserts: Sequence[dict] = ()
+    # file the runner reads after the cell's command exits 0; asserts
+    # evaluate against its parsed content (required when asserts present)
+    result_path: Optional[str] = None
+    result_kind: str = "bench_history"
+    # axis-dicts that suppress matrix combinations (a cell is dropped when
+    # EVERY (axis, value) pair of an exclude entry matches it)
+    exclude: Sequence[Dict[str, str]] = ()
+    # when set, cells() yields exactly these axis-dicts (each validated
+    # against the matrix) instead of the full cross product — the smoke
+    # decimation hook
+    pinned: Optional[Sequence[Dict[str, str]]] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("job name must be non-empty")
+        self.cmd = tuple(str(c) for c in self.cmd)
+        if not self.cmd:
+            raise ValueError(f"job {self.name}: empty cmd")
+        if self.timeout_s <= 0:
+            raise ValueError(
+                f"job {self.name}: timeout_s must be > 0, got "
+                f"{self.timeout_s} (a zero timeout would kill every cell "
+                f"at spawn)"
+            )
+        if self.retries < 0:
+            raise ValueError(
+                f"job {self.name}: retries must be >= 0, got {self.retries}"
+            )
+        if self.backoff_s < 0:
+            raise ValueError(
+                f"job {self.name}: backoff_s must be >= 0, got "
+                f"{self.backoff_s}"
+            )
+        if self.result_kind not in RESULT_KINDS:
+            raise ValueError(
+                f"job {self.name}: unknown result_kind "
+                f"{self.result_kind!r} (known: {RESULT_KINDS})"
+            )
+        for axis, values in self.matrix.items():
+            if not values:
+                raise ValueError(f"job {self.name}: axis {axis!r} is empty")
+        axes = set(self.matrix)
+        for part in tuple(self.cmd) + tuple(self.env.values()):
+            unknown = _placeholders(part) - axes
+            if unknown:
+                raise ValueError(
+                    f"job {self.name}: cmd/env references unknown axes "
+                    f"{sorted(unknown)} (matrix has {sorted(axes)})"
+                )
+        if self.asserts and self.result_path is None:
+            raise ValueError(
+                f"job {self.name}: asserts need a result_path to read"
+            )
+        for i, a in enumerate(self.asserts):
+            _check_assert(i, a, axes)
+        for ex in self.exclude:
+            unknown = set(ex) - axes
+            if unknown:
+                raise ValueError(
+                    f"job {self.name}: exclude references unknown axes "
+                    f"{sorted(unknown)}"
+                )
+        if self.pinned is not None:
+            for pin in self.pinned:
+                if set(pin) != axes:
+                    raise ValueError(
+                        f"job {self.name}: pinned cell {pin} must bind "
+                        f"every axis {sorted(axes)}"
+                    )
+                for axis, value in pin.items():
+                    if value not in self.matrix[axis]:
+                        raise ValueError(
+                            f"job {self.name}: pinned {axis}={value!r} "
+                            f"not in matrix values {self.matrix[axis]}"
+                        )
+
+    def _excluded(self, axes: Dict[str, str]) -> bool:
+        return any(
+            all(axes.get(k) == v for k, v in ex.items())
+            for ex in self.exclude
+        )
+
+    def cells(self) -> Tuple[JobCell, ...]:
+        keys = sorted(self.matrix)
+        if self.pinned is not None:
+            combos = [dict(p) for p in self.pinned]
+        else:
+            combos = [
+                dict(zip(keys, values))
+                for values in itertools.product(
+                    *(self.matrix[k] for k in keys)
+                )
+            ]
+        out = []
+        for axes in combos:
+            if self._excluded(axes):
+                continue
+            out.append(JobCell(
+                job=self.name,
+                axes=tuple(sorted(axes.items())),
+                cmd=tuple(c.format(**axes) for c in self.cmd),
+                env=tuple(sorted(
+                    (k, v.format(**axes)) for k, v in self.env.items()
+                )),
+                timeout_s=self.timeout_s,
+                retries=self.retries,
+                backoff_s=self.backoff_s,
+                asserts=tuple(
+                    {
+                        k: (v.format(**axes)
+                            if k in ("key", "key_b") and isinstance(v, str)
+                            else v)
+                        for k, v in a.items() if k != "when"
+                    }
+                    for a in self.asserts
+                    if all(axes.get(k) == v
+                           for k, v in a.get("when", {}).items())
+                ),
+                result_path=(
+                    self.result_path.format(**axes)
+                    if self.result_path else None
+                ),
+                result_kind=self.result_kind,
+            ))
+        return tuple(out)

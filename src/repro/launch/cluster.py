@@ -1,0 +1,722 @@
+"""Multi-process cluster serving (DESIGN.md §16).
+
+The serving mesh leaves a single process: a coordinator-side launcher
+spawns N worker processes, each of which calls
+``jax.distributed.initialize`` (real coordinator address / process-id
+wiring — the same call a TPU pod worker makes) and serves a shard of the
+workload on its local data x model mesh.  The cluster-global mesh is
+"data axis across processes x model axis within a process"
+(``launch.mesh.plan_cluster_mesh``): the model axis never crosses a
+process boundary, and the cross-process data axis is realized by
+round-robin request sharding at the host ledger, because the XLA CPU
+backend cannot run one computation across processes ("Multiprocess
+computations aren't implemented on the CPU backend") — on a TPU pod the
+identical (d, m) spec compiles to global SPMD and the host program is
+unchanged.  Token/ledger bit-parity with the single-process batcher is
+guaranteed by the serving stack's B=1 parity contract (a request's
+tokens and NFEs never depend on its co-scheduled neighbours — the
+property the golden fixtures and churn tests pin), and is re-asserted
+end-to-end by ``--parity-fixture``.
+
+The launcher is the CI-friendly stand-in for a pod scheduler (the
+ReFrame k8s launcher shape: create workload resources, wait on them,
+harvest logs, tear down):
+
+* per-worker ``XLA_FLAGS=--xla_force_host_platform_device_count=K``
+  simulated devices, set in the child environment BEFORE jax imports;
+* per-worker log files under the run directory (stdout+stderr merged);
+* supervision with a hard deadline: a worker that exits nonzero or
+  hangs past ``timeout_s`` kills the remaining workers and raises
+  ``ClusterError`` naming the offending worker's log (tail included);
+* result harvest: each worker writes a JSON report; the launcher merges
+  per-request tokens/NFE records and sums the ledger totals, refusing
+  duplicate request ids.
+
+Elasticity (``ElasticPolicy`` + ``run_elastic_rounds``) is round-based:
+between rounds the policy grows/shrinks the data-axis width from the
+offered load (queued requests vs current capacity), and the still-queued
+requests are rebucketed round-robin over the new width — the host-ledger
+fold is the same merge path every round uses, so a width change is
+invisible in the accumulated ledger.
+
+Usage (2 processes x 2 simulated devices, golden parity check):
+
+  PYTHONPATH=src python -m repro.launch.cluster --processes 2 \\
+      --local-devices 2 --golden \\
+      --parity-fixture tests/fixtures/golden_serving.json
+
+Workers are spawned as ``python -m repro.launch.cluster --worker ...``;
+that mode is internal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.launch.mesh import plan_cluster_mesh
+
+_LOG_TAIL_LINES = 20
+
+
+class ClusterError(RuntimeError):
+    """A worker failed, hung, or produced no report.
+
+    ``worker_log`` names the offending worker's log file (the launcher
+    appends its tail to the message); ``worker_logs`` lists every
+    worker's log for artifact upload.
+    """
+
+    def __init__(self, msg: str, worker_log: Optional[str] = None,
+                 worker_logs: Sequence[str] = ()):
+        super().__init__(msg)
+        self.worker_log = worker_log
+        self.worker_logs = list(worker_logs)
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Launcher knobs.  Validation raises ValueError before any spawn."""
+
+    num_processes: int = 2
+    local_devices: int = 2  # simulated devices per worker (XLA_FLAGS)
+    model_axis: int = 1  # model-parallel width WITHIN a process
+    coordinator_port: int = 0  # 0 -> pick a free port at launch
+    timeout_s: float = 600.0  # hard deadline for the whole job
+    run_dir: str = "artifacts/cluster"
+    poll_s: float = 0.2  # supervision poll interval
+    grace_s: float = 5.0  # SIGTERM -> SIGKILL escalation window
+
+    def __post_init__(self):
+        # raises on shapes that do not tile; the launcher must fail
+        # before spawning anything, not in worker 3's traceback
+        self.global_shape, self.worker_shape = plan_cluster_mesh(
+            self.num_processes, self.local_devices, self.model_axis
+        )
+        if self.timeout_s <= 0:
+            raise ValueError(f"timeout_s must be > 0: {self.timeout_s}")
+        if self.poll_s <= 0:
+            raise ValueError(f"poll_s must be > 0: {self.poll_s}")
+
+
+# ---------------------------------------------------------------------------
+# workload (de)serialization — the launcher writes one JSON file, every
+# worker reads it and serves its shard
+
+
+def request_to_json(rid: int, req, arrival_step: int) -> dict:
+    return {
+        "rid": int(rid),
+        "prompt": [int(t) for t in req.prompt],
+        "max_new_tokens": int(req.max_new_tokens),
+        "negative_prompt": (
+            None if req.negative_prompt is None
+            else [int(t) for t in req.negative_prompt]
+        ),
+        "gamma_bar": req.gamma_bar,
+        "guided": bool(req.guided),
+        "linear": bool(req.linear),
+        "policy": req.policy,
+        "arrival_step": int(arrival_step),
+    }
+
+
+def request_from_json(d: dict):
+    import numpy as np
+
+    from repro.serving.engine import Request
+
+    req = Request(
+        prompt=np.asarray(d["prompt"], np.int32),
+        max_new_tokens=d["max_new_tokens"],
+        negative_prompt=(
+            None if d["negative_prompt"] is None
+            else np.asarray(d["negative_prompt"], np.int32)
+        ),
+        gamma_bar=d["gamma_bar"],
+        guided=d["guided"],
+        linear=d["linear"],
+        policy=d["policy"],
+    )
+    return d["rid"], req, d["arrival_step"]
+
+
+def golden_workload() -> dict:
+    """The golden fixture's two-lane churn workload (make_golden
+    ``run_batcher_case``): same prompt seeds, budgets and engine knobs, so
+    a cluster run's per-request tokens/NFEs must match the committed
+    fixture bit-exactly."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.serving.engine import Request
+
+    cfg = get_config("llama3.2-1b").reduced()
+    rng = np.random.default_rng(22)
+    p = [
+        rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (6, 5, 6, 4)
+    ]
+    reqs = [
+        Request(prompt=p[0], max_new_tokens=8),
+        Request(prompt=p[1], max_new_tokens=6),
+        Request(prompt=p[2], max_new_tokens=5, gamma_bar=2.0),
+        Request(prompt=p[3], max_new_tokens=4, guided=False),
+    ]
+    return {
+        "arch": "llama3.2-1b",
+        "reduced": True,
+        "seed": 0,
+        "scale": 1.5,
+        "gamma_bar": 0.0,
+        "max_slots": 2,
+        "buckets": [1, 2],
+        "requests": [
+            request_to_json(i, r, a)
+            for i, (r, a) in enumerate(zip(reqs, [0, 0, 2, 4]))
+        ],
+    }
+
+
+def shard_requests(rids: Sequence[int], width: int) -> List[List[int]]:
+    """Round-robin request shards over the data-axis width (deterministic:
+    shard i gets rids[i::width]); empty shards are kept so shard index ==
+    process id."""
+    if width < 1:
+        raise ValueError(f"data-axis width must be >= 1: {width}")
+    return [list(rids[i::width]) for i in range(width)]
+
+
+# ---------------------------------------------------------------------------
+# worker side
+
+
+def _serve_shard(workload: dict, shard: Sequence[int], mesh) -> dict:
+    """Serve this worker's request shard through the step batcher and
+    return per-request tokens/NFEs + the ledger totals."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.serving import BatcherConfig, EngineConfig, StepBatcher
+
+    cfg = get_config(workload["arch"])
+    if workload["reduced"]:
+        cfg = cfg.reduced()
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(workload["seed"]))
+    ec = EngineConfig(
+        scale=workload["scale"],
+        gamma_bar=workload["gamma_bar"],
+        max_batch=workload["max_slots"],
+    )
+    bat = StepBatcher(
+        api, params, ec,
+        BatcherConfig(
+            max_slots=workload["max_slots"],
+            buckets=tuple(workload["buckets"]) if workload.get("buckets")
+            else None,
+        ),
+        mesh=mesh,
+    )
+    by_rid = {d["rid"]: d for d in workload["requests"]}
+    local_rid = {}  # batcher-local rid -> global rid
+    for grid in shard:
+        _, req, arrival = request_from_json(by_rid[grid])
+        local_rid[bat.submit(req, arrival_step=arrival)] = grid
+    done = bat.run()
+    t = bat.report()["totals"]
+    return {
+        "requests": {
+            str(local_rid[lr]): {
+                "tokens": [int(x) for x in done[lr]["tokens"]],
+                "nfes": done[lr]["nfes"],
+            }
+            for lr in local_rid
+        },
+        "totals": {
+            "nfes_device": t["nfes_device"],
+            "nfes_expected": t["nfes_expected"],
+            "baseline_nfes": t["baseline_nfes"],
+            "mean_savings_pct": t["mean_savings_pct"],
+        },
+    }
+
+
+def worker_main(args) -> int:
+    """Entry point of a spawned worker (``--worker``).  XLA_FLAGS is
+    already set in this process's environment by the launcher (it must
+    precede the first jax import)."""
+    # test-only fault injection: die before any device work, like an OOM-
+    # killed pod — the launcher must detect + tear down within timeout_s
+    if args.self_kill:
+        print(f"[worker {args.process_id}] self-kill requested", flush=True)
+        return 13
+    if args.hang:
+        print(f"[worker {args.process_id}] hanging (timeout test)",
+              flush=True)
+        time.sleep(10 * 60)
+
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=args.coordinator,
+        num_processes=args.num_processes,
+        process_id=args.process_id,
+    )
+    from repro.launch.mesh import make_worker_mesh, plan_cluster_mesh
+
+    with open(args.workload) as f:
+        workload = json.load(f)
+    global_shape, worker_shape = plan_cluster_mesh(
+        args.num_processes, jax.local_device_count(), args.model_axis
+    )
+    want_global = args.num_processes * jax.local_device_count()
+    if jax.device_count() != want_global:
+        raise SystemExit(
+            f"[worker {args.process_id}] global device count "
+            f"{jax.device_count()} != {want_global} "
+            f"({args.num_processes} processes x "
+            f"{jax.local_device_count()} local)"
+        )
+    print(
+        f"[worker {args.process_id}] devices local={jax.local_device_count()} "
+        f"global={jax.device_count()} mesh global={global_shape} "
+        f"worker={worker_shape}",
+        flush=True,
+    )
+    # the model axis lives within this process; a (1, 1) worker shape
+    # means meshless local serving (still under the global device view)
+    mesh = (
+        make_worker_mesh(worker_shape)
+        if worker_shape != (1, 1) or jax.local_device_count() > 1
+        else None
+    )
+    shards = shard_requests(
+        [d["rid"] for d in workload["requests"]], args.num_processes
+    )
+    shard = shards[args.process_id]
+    print(f"[worker {args.process_id}] shard rids={shard}", flush=True)
+    t0 = time.perf_counter()
+    result = _serve_shard(workload, shard, mesh)
+    result.update(
+        process_id=args.process_id,
+        local_devices=jax.local_device_count(),
+        global_devices=jax.device_count(),
+        mesh={"global": list(global_shape), "worker": list(worker_shape)},
+        elapsed_s=time.perf_counter() - t0,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"[worker {args.process_id}] report -> {args.out}", flush=True)
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# launcher side
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _tail(path: str, n: int = _LOG_TAIL_LINES) -> str:
+    try:
+        with open(path, errors="replace") as f:
+            return "".join(f.readlines()[-n:])
+    except OSError:
+        return "<log unreadable>"
+
+
+def default_worker_cmd(cfg: ClusterConfig, coordinator: str,
+                       workload_path: str, process_id: int,
+                       out_path: str, fault: Optional[dict] = None):
+    cmd = [
+        sys.executable, "-m", "repro.launch.cluster", "--worker",
+        "--process-id", str(process_id),
+        "--num-processes", str(cfg.num_processes),
+        "--coordinator", coordinator,
+        "--model-axis", str(cfg.model_axis),
+        "--workload", workload_path,
+        "--out", out_path,
+    ]
+    fault = fault or {}
+    if fault.get("self_kill") == process_id:
+        cmd.append("--self-kill")
+    if fault.get("hang") == process_id:
+        cmd.append("--hang")
+    return cmd
+
+
+def _teardown(procs, logs, grace_s: float) -> None:
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    deadline = time.monotonic() + grace_s
+    for p in procs:
+        while p.poll() is None and time.monotonic() < deadline:
+            time.sleep(0.05)
+        if p.poll() is None:
+            p.kill()
+            p.wait()
+    for f in logs:
+        f.close()
+
+
+def launch_cluster(
+    cfg: ClusterConfig,
+    workload: dict,
+    worker_cmd: Optional[Callable[..., List[str]]] = None,
+    fault: Optional[dict] = None,
+) -> dict:
+    """Spawn the workers, supervise to completion, harvest + merge reports.
+
+    ``worker_cmd(cfg, coordinator, workload_path, process_id, out_path,
+    fault)`` builds each worker's argv (tests inject jax-free fakes to
+    exercise supervision without paying two interpreter+jit starts).
+    Raises ClusterError on nonzero exit, timeout, or a missing report —
+    always after tearing every worker down.
+    """
+    worker_cmd = worker_cmd or default_worker_cmd
+    os.makedirs(cfg.run_dir, exist_ok=True)
+    workload_path = os.path.join(cfg.run_dir, "workload.json")
+    with open(workload_path, "w") as f:
+        json.dump(workload, f, indent=2, sort_keys=True)
+    port = cfg.coordinator_port or _free_port()
+    coordinator = f"127.0.0.1:{port}"
+
+    procs, logs, log_paths, out_paths = [], [], [], []
+    t0 = time.perf_counter()
+    for i in range(cfg.num_processes):
+        log_path = os.path.join(cfg.run_dir, f"worker_{i}.log")
+        out_path = os.path.join(cfg.run_dir, f"worker_{i}.json")
+        if os.path.exists(out_path):
+            os.remove(out_path)  # a stale report must never be harvested
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={cfg.local_devices}"
+        )
+        # the worker must import repro from this checkout
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        log = open(log_path, "w")
+        procs.append(subprocess.Popen(
+            worker_cmd(cfg, coordinator, workload_path, i, out_path, fault),
+            stdout=log, stderr=subprocess.STDOUT, env=env,
+        ))
+        logs.append(log)
+        log_paths.append(log_path)
+        out_paths.append(out_path)
+
+    deadline = time.monotonic() + cfg.timeout_s
+    try:
+        while True:
+            codes = [p.poll() for p in procs]
+            for i, rc in enumerate(codes):
+                if rc is not None and rc != 0:
+                    raise ClusterError(
+                        f"worker {i} exited {rc}; see {log_paths[i]}\n"
+                        f"--- tail of {log_paths[i]} ---\n"
+                        f"{_tail(log_paths[i])}",
+                        worker_log=log_paths[i], worker_logs=log_paths,
+                    )
+            if all(rc == 0 for rc in codes):
+                break
+            if time.monotonic() > deadline:
+                alive = [i for i, rc in enumerate(codes) if rc is None]
+                raise ClusterError(
+                    f"cluster timed out after {cfg.timeout_s:.0f}s; "
+                    f"workers still running: {alive}; see "
+                    f"{[log_paths[i] for i in alive]}",
+                    worker_log=log_paths[alive[0]] if alive else None,
+                    worker_logs=log_paths,
+                )
+            time.sleep(cfg.poll_s)
+    finally:
+        _teardown(procs, logs, cfg.grace_s)
+
+    reports = []
+    for i, path in enumerate(out_paths):
+        if not os.path.exists(path):
+            raise ClusterError(
+                f"worker {i} exited 0 but wrote no report {path}; "
+                f"see {log_paths[i]}",
+                worker_log=log_paths[i], worker_logs=log_paths,
+            )
+        with open(path) as f:
+            reports.append(json.load(f))
+    return merge_reports(cfg, reports, log_paths,
+                         elapsed_s=time.perf_counter() - t0)
+
+
+def merge_reports(cfg: ClusterConfig, reports: List[dict],
+                  log_paths: Sequence[str] = (), elapsed_s: float = 0.0,
+                  ) -> dict:
+    """Fold per-worker reports into the cluster host ledger: union of the
+    per-request records (duplicate rids refused — a rebucketing bug must
+    not silently double-count) and summed NFE totals."""
+    requests: Dict[str, dict] = {}
+    totals = {"nfes_device": 0.0, "nfes_expected": 0.0,
+              "baseline_nfes": 0.0}
+    for rep in reports:
+        for rid, rec in rep["requests"].items():
+            if rid in requests:
+                raise ClusterError(
+                    f"request {rid} reported by two workers "
+                    f"(data-axis rebucketing bug)"
+                )
+            requests[rid] = rec
+        for k in totals:
+            totals[k] += rep["totals"][k]
+    totals["mean_savings_pct"] = (
+        100.0 * (1.0 - totals["nfes_device"] / totals["baseline_nfes"])
+        if totals["baseline_nfes"] > 0 else 0.0
+    )
+    return {
+        "workers": cfg.num_processes,
+        "mesh": {
+            "global": list(cfg.global_shape),
+            "worker": list(cfg.worker_shape),
+        },
+        "requests": requests,
+        "totals": totals,
+        "worker_reports": [
+            {k: r[k] for k in
+             ("process_id", "local_devices", "global_devices", "totals",
+              "elapsed_s") if k in r}
+            for r in reports
+        ],
+        "worker_logs": list(log_paths),
+        "elapsed_s": elapsed_s,
+    }
+
+
+def check_fixture_parity(report: dict, fixture_path: str,
+                         key: str = "batcher") -> dict:
+    """Assert the cluster-merged per-request tokens and NFE ledgers are
+    bit-identical to a single-process golden fixture section.  Returns a
+    small summary dict (recorded by the harness); raises AssertionError
+    naming the first divergent request."""
+    with open(fixture_path) as f:
+        want = json.load(f)[key]["requests"]
+    got = report["requests"]
+    if set(got) != set(want):
+        raise AssertionError(
+            f"cluster served rids {sorted(got)} but the fixture has "
+            f"{sorted(want)}"
+        )
+    for rid in sorted(want):
+        if list(got[rid]["tokens"]) != list(want[rid]["tokens"]):
+            raise AssertionError(
+                f"request {rid}: cluster tokens drifted from the "
+                f"single-process fixture\n  got  {got[rid]['tokens']}\n"
+                f"  want {want[rid]['tokens']}"
+            )
+        if float(got[rid]["nfes"]) != float(want[rid]["nfes"]):
+            raise AssertionError(
+                f"request {rid}: cluster NFE ledger drifted "
+                f"({got[rid]['nfes']} vs {want[rid]['nfes']})"
+            )
+    fixture_nfes = sum(float(w["nfes"]) for w in want.values())
+    if float(report["totals"]["nfes_device"]) != fixture_nfes:
+        raise AssertionError(
+            f"cluster ledger total {report['totals']['nfes_device']} != "
+            f"fixture sum {fixture_nfes}"
+        )
+    return {
+        "golden": True,
+        "requests": len(want),
+        "nfes_device": report["totals"]["nfes_device"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# elasticity: round-based data-axis resizing
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """Grow/shrink the data-axis width between rounds from offered load.
+
+    load = queued / (width * slots_per_worker); above ``grow_at`` the
+    data axis widens by one process, below ``shrink_at`` it narrows by
+    one, always clamped to [min_width, max_width].  Hysteresis comes from
+    the dead band between the two thresholds.
+    """
+
+    min_width: int = 1
+    max_width: int = 8
+    grow_at: float = 1.5
+    shrink_at: float = 0.5
+
+    def __post_init__(self):
+        if not 1 <= self.min_width <= self.max_width:
+            raise ValueError(
+                f"need 1 <= min_width <= max_width: "
+                f"{self.min_width}..{self.max_width}"
+            )
+        if not 0.0 <= self.shrink_at < self.grow_at:
+            raise ValueError(
+                f"need 0 <= shrink_at < grow_at: "
+                f"{self.shrink_at} vs {self.grow_at}"
+            )
+
+    def decide(self, width: int, queued: int, slots_per_worker: int) -> int:
+        load = queued / max(1, width * slots_per_worker)
+        if load > self.grow_at:
+            return min(width + 1, self.max_width)
+        if load < self.shrink_at:
+            return max(width - 1, self.min_width)
+        return width
+
+
+def run_elastic_rounds(
+    runner: Callable[[int, List[List[int]]], List[dict]],
+    rids: Sequence[int],
+    policy: ElasticPolicy,
+    slots_per_worker: int,
+    start_width: int = 1,
+) -> dict:
+    """Serve ``rids`` in rounds, resizing the data axis between rounds.
+
+    ``runner(width, shards) -> [worker result]`` executes one round (the
+    subprocess cluster in production, an in-process fake in tests).  Each
+    round: the policy picks the width from the queue depth, the queue's
+    head is rebucketed round-robin over that width (the same shard map a
+    fresh launch would compute — a shrunk-away shard's requests simply
+    land on surviving workers), and the per-worker ledgers fold into the
+    cumulative host ledger through the same merge the one-shot launcher
+    uses.  Returns the ledger + the width trajectory.
+    """
+    queue = list(rids)
+    width = max(policy.min_width, min(start_width, policy.max_width))
+    ledger = {"nfes_device": 0.0, "nfes_expected": 0.0, "requests": {}}
+    width_history = []
+    while queue:
+        width = policy.decide(width, len(queue), slots_per_worker)
+        take = min(len(queue), width * slots_per_worker)
+        batch, queue = queue[:take], queue[take:]
+        shards = [s for s in shard_requests(batch, width) if s]
+        width_history.append({
+            "width": width, "served": take, "queued_after": len(queue),
+        })
+        for res in runner(len(shards), shards):
+            for rid, rec in res["requests"].items():
+                if rid in ledger["requests"]:
+                    raise ClusterError(
+                        f"request {rid} served twice across elastic rounds"
+                    )
+                ledger["requests"][rid] = rec
+            ledger["nfes_device"] += res["totals"]["nfes_device"]
+            ledger["nfes_expected"] += res["totals"]["nfes_expected"]
+    return {"ledger": ledger, "width_history": width_history}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=2,
+                    help="simulated devices per worker (XLA_FLAGS)")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="model-parallel width within each worker")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    ap.add_argument("--run-dir", default="artifacts/cluster")
+    ap.add_argument("--port", type=int, default=0,
+                    help="coordinator port (0 -> pick a free one)")
+    ap.add_argument("--golden", action="store_true",
+                    help="serve the golden fixture workload "
+                         "(make_golden run_batcher_case)")
+    ap.add_argument("--workload", default=None,
+                    help="serve a workload JSON instead of --golden")
+    ap.add_argument("--parity-fixture", default=None, metavar="PATH",
+                    help="assert merged tokens/NFE ledgers bit-identical "
+                         "to this golden fixture file")
+    ap.add_argument("--parity-key", default="batcher",
+                    help="fixture section for --parity-fixture")
+    ap.add_argument("--kill-process", type=int, default=None,
+                    help="fault injection: this worker self-kills before "
+                         "device work (supervision demo/test)")
+    ap.add_argument("--out", default=None,
+                    help="write the merged cluster report JSON here")
+    # internal: worker mode (spawned by the launcher)
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--process-id", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--self-kill", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--hang", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        return worker_main(args)
+
+    cfg = ClusterConfig(
+        num_processes=args.processes,
+        local_devices=args.local_devices,
+        model_axis=args.model_axis,
+        coordinator_port=args.port,
+        timeout_s=args.timeout,
+        run_dir=args.run_dir,
+    )
+    if args.workload:
+        with open(args.workload) as f:
+            workload = json.load(f)
+    else:
+        workload = golden_workload()
+    fault = (
+        {"self_kill": args.kill_process}
+        if args.kill_process is not None else None
+    )
+    print(f"[cluster] {cfg.num_processes} processes x "
+          f"{cfg.local_devices} devices, global mesh "
+          f"{cfg.global_shape} (worker {cfg.worker_shape}), "
+          f"{len(workload['requests'])} requests")
+    report = launch_cluster(cfg, workload, fault=fault)
+    t = report["totals"]
+    print(f"[cluster] done in {report['elapsed_s']:.1f}s: "
+          f"{len(report['requests'])} requests, NFE ledger "
+          f"{t['nfes_device']:.0f} == expected {t['nfes_expected']:.0f}, "
+          f"savings {t['mean_savings_pct']:.1f}%")
+    for w in report["worker_reports"]:
+        print(f"[cluster]   worker {w['process_id']}: "
+              f"{w['local_devices']} local / {w['global_devices']} global "
+              f"devices, {w['totals']['nfes_device']:.0f} NFEs, "
+              f"{w['elapsed_s']:.1f}s")
+    if t["nfes_device"] != t["nfes_expected"]:
+        raise SystemExit("[cluster] NFE ledger not conserved")
+    if args.parity_fixture:
+        summary = check_fixture_parity(
+            report, args.parity_fixture, key=args.parity_key
+        )
+        report["parity"] = summary
+        print(f"[cluster] parity vs {args.parity_fixture}#"
+              f"{args.parity_key}: OK ({summary['requests']} requests "
+              f"bit-identical)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[cluster] report -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

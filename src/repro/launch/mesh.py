@@ -31,6 +31,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def _check_dxm(shape, n, what):
+    """Validate a (data, model) shape against ``n`` devices; raises the
+    same ValueError contract everywhere a 2-axis mesh is requested."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != 2:
+        raise ValueError(
+            f"{what} wants a (data, model) shape, got {shape}"
+        )
+    if any(s < 1 for s in shape):
+        raise ValueError(f"{what} axes must be >= 1: {shape}")
+    if math.prod(shape) != n:
+        raise ValueError(
+            f"mesh shape {shape} does not tile the {n} available devices"
+        )
+    return shape
+
+
 def make_host_mesh(shape=None):
     """Data x model mesh over whatever devices exist (tests / smoke runs).
 
@@ -44,12 +61,67 @@ def make_host_mesh(shape=None):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1)
-    shape = tuple(int(s) for s in shape)
-    if len(shape) != 2 or math.prod(shape) != n:
-        raise ValueError(
-            f"mesh shape {shape} does not tile the {n} available devices"
-        )
+    shape = _check_dxm(shape, n, "make_host_mesh")
     return make_mesh(shape, ("data", "model"))
+
+
+def make_worker_mesh(shape=None):
+    """Per-process data x model mesh over this process's LOCAL devices.
+
+    The cluster launcher (DESIGN.md §16) runs the serving data axis
+    *across* worker processes and the model axis *within* each: after
+    ``jax.distributed.initialize`` a worker sees the global device set,
+    but the XLA CPU backend cannot run one computation across processes,
+    so each worker compiles against its local slice and the cross-process
+    data axis is realized by request sharding at the host ledger.  On a
+    real TPU pod the same (d, m) spec compiles to global SPMD instead.
+    Defaults to the data-majority ``(n_local, 1)``.
+    """
+    n = len(jax.local_devices())
+    if shape is None:
+        shape = (n, 1)
+    shape = _check_dxm(shape, n, "make_worker_mesh")
+    if hasattr(jax.sharding, "AxisType"):
+        import numpy as np
+
+        devs = np.asarray(jax.local_devices()).reshape(shape)
+        return jax.sharding.Mesh(
+            devs, ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    import numpy as np
+
+    devs = np.asarray(jax.local_devices()).reshape(shape)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def plan_cluster_mesh(num_processes, local_devices, model_axis=1):
+    """Shapes of the cluster-global and per-worker meshes.
+
+    Returns ``(global_shape, worker_shape)`` over ("data", "model"): the
+    model axis lives entirely within one process (``model_axis`` must
+    divide ``local_devices``), the data axis is the concatenation of every
+    process's local data slice — ``num_processes * local_devices //
+    model_axis`` slots wide.  Raises ValueError on shapes that do not
+    tile (the launcher validates BEFORE spawning workers).
+    """
+    num_processes = int(num_processes)
+    local_devices = int(local_devices)
+    model_axis = int(model_axis)
+    if num_processes < 1:
+        raise ValueError(f"num_processes must be >= 1: {num_processes}")
+    if local_devices < 1:
+        raise ValueError(f"local_devices must be >= 1: {local_devices}")
+    if model_axis < 1 or local_devices % model_axis != 0:
+        raise ValueError(
+            f"model axis {model_axis} must divide the {local_devices} "
+            f"local devices (the model axis never crosses a process)"
+        )
+    local_data = local_devices // model_axis
+    return (
+        (num_processes * local_data, model_axis),
+        (local_data, model_axis),
+    )
 
 
 # TPU v5e hardware constants for the roofline (per chip)

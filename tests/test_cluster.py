@@ -1,0 +1,406 @@
+"""Cluster launcher suite (repro.launch.cluster, DESIGN.md §16).
+
+Three tiers, none of which pays a jax-subprocess start:
+
+* mesh planning — ``plan_cluster_mesh`` / ``make_host_mesh`` /
+  ``make_worker_mesh`` edge paths (bad shapes, non-dividing model axis,
+  the axis_types version shim);
+* supervision — ``launch_cluster`` driven by INJECTED jax-free fake
+  workers (the ``worker_cmd`` hook): clean merge, nonzero exit, hang
+  past the deadline, missing report, duplicate request ids.  Every
+  failure must tear the remaining workers down and name the offending
+  worker's log;
+* elasticity — ``ElasticPolicy`` thresholds and ``run_elastic_rounds``
+  with an in-process runner: width trajectory follows offered load and
+  the folded ledger is width-invariant.
+
+The end-to-end 2-process golden-parity run (real workers, simulated
+devices, bit-parity vs tests/fixtures/golden_serving.json) is the
+nightly harness's ``cluster`` cell — too slow for tier-1.
+"""
+import json
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.cluster import (
+    ClusterConfig,
+    ClusterError,
+    ElasticPolicy,
+    check_fixture_parity,
+    golden_workload,
+    launch_cluster,
+    merge_reports,
+    request_from_json,
+    request_to_json,
+    run_elastic_rounds,
+    shard_requests,
+)
+from repro.launch.mesh import (
+    make_host_mesh,
+    make_mesh,
+    make_worker_mesh,
+    plan_cluster_mesh,
+)
+
+# ---------------------------------------------------------------------------
+# mesh planning
+
+
+def test_plan_cluster_mesh_shapes():
+    assert plan_cluster_mesh(2, 2, 1) == ((4, 1), (2, 1))
+    assert plan_cluster_mesh(2, 4, 2) == ((4, 2), (2, 2))
+    assert plan_cluster_mesh(1, 8, 8) == ((1, 8), (1, 8))
+
+
+@pytest.mark.parametrize(
+    "procs,local,model",
+    [(0, 2, 1), (2, 0, 1), (2, 2, 0), (2, 2, 3), (2, 4, 3)],
+)
+def test_plan_cluster_mesh_rejects(procs, local, model):
+    with pytest.raises(ValueError):
+        plan_cluster_mesh(procs, local, model)
+
+
+def test_make_host_mesh_rejects_bad_shapes():
+    with pytest.raises(ValueError, match=r"\(data, model\) shape"):
+        make_host_mesh((2,))
+    with pytest.raises(ValueError, match="does not tile"):
+        make_host_mesh((2, 7919))  # no host has 15838 devices
+    with pytest.raises(ValueError, match=">= 1"):
+        make_host_mesh((0, 1))
+
+
+def test_make_host_mesh_default_is_data_majority():
+    import jax
+
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (len(jax.devices()), 1)
+
+
+def test_make_worker_mesh_local_devices():
+    import jax
+
+    mesh = make_worker_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (len(jax.local_devices()), 1)
+    with pytest.raises(ValueError, match="make_worker_mesh"):
+        make_worker_mesh((0, 1))
+
+
+def test_make_mesh_axis_types_shim(monkeypatch):
+    import jax
+
+    n = len(jax.devices())
+    # new-jax branch (AxisType present on this version)
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = make_mesh((n, 1), ("data", "model"))
+        assert mesh.axis_names == ("data", "model")
+        # old-jax branch: AxisType absent -> plain jax.make_mesh call
+        monkeypatch.delattr(jax.sharding, "AxisType")
+    mesh = make_mesh((n, 1), ("data", "model"))
+    assert mesh.axis_names == ("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# config + workload plumbing
+
+
+def test_cluster_config_validates_before_spawn(tmp_path):
+    cfg = ClusterConfig(num_processes=2, local_devices=4, model_axis=2,
+                        run_dir=str(tmp_path))
+    assert cfg.global_shape == (4, 2)
+    assert cfg.worker_shape == (2, 2)
+    with pytest.raises(ValueError, match="model axis"):
+        ClusterConfig(num_processes=2, local_devices=2, model_axis=3)
+    with pytest.raises(ValueError, match="timeout_s"):
+        ClusterConfig(timeout_s=0)
+    with pytest.raises(ValueError, match="poll_s"):
+        ClusterConfig(poll_s=0)
+
+
+def test_request_json_round_trip():
+    wl = golden_workload()
+    assert [d["rid"] for d in wl["requests"]] == [0, 1, 2, 3]
+    for d in wl["requests"]:
+        rid, req, arrival = request_from_json(
+            json.loads(json.dumps(d))  # through real JSON, like the worker
+        )
+        back = request_to_json(rid, req, arrival)
+        assert back == d
+    # the golden workload pins the fixture's knobs
+    assert wl["max_slots"] == 2 and wl["buckets"] == [1, 2]
+    assert wl["requests"][2]["gamma_bar"] == 2.0
+    assert wl["requests"][3]["guided"] is False
+
+
+def test_shard_requests_round_robin():
+    assert shard_requests([0, 1, 2, 3, 4], 2) == [[0, 2, 4], [1, 3]]
+    # empty shards are kept so shard index == process id
+    assert shard_requests([7], 3) == [[7], [], []]
+    with pytest.raises(ValueError, match="width"):
+        shard_requests([1], 0)
+    # every rid lands exactly once, any width
+    for width in (1, 2, 3, 4):
+        shards = shard_requests(list(range(10)), width)
+        assert sorted(r for s in shards for r in s) == list(range(10))
+
+
+# ---------------------------------------------------------------------------
+# supervision with injected jax-free fake workers
+
+_FAKE_OK = """
+import json, sys
+out, pid = sys.argv[1], int(sys.argv[2])
+print(f"[fake worker {pid}] serving", flush=True)
+json.dump({
+    "requests": {str(2 * pid): {"tokens": [pid, pid], "nfes": 2.0},
+                 str(2 * pid + 1): {"tokens": [pid], "nfes": 1.0}},
+    "totals": {"nfes_device": 3.0, "nfes_expected": 3.0,
+               "baseline_nfes": 6.0},
+    "process_id": pid, "local_devices": 1, "global_devices": 2,
+    "elapsed_s": 0.0,
+}, open(out, "w"))
+"""
+
+_FAKE_DUP = _FAKE_OK.replace('str(2 * pid)', '"0"').replace(
+    'str(2 * pid + 1)', '"1" if pid else "2"')
+
+_FAKE_DIE = """
+import sys
+pid = int(sys.argv[2])
+print(f"[fake worker {pid}] exploding now", flush=True)
+sys.exit(13 if pid == 1 else 0)
+"""
+
+_FAKE_HANG = """
+import json, sys, time
+out, pid = sys.argv[1], int(sys.argv[2])
+if pid == 1:
+    print(f"[fake worker {pid}] hanging", flush=True)
+    time.sleep(600)
+json.dump({"requests": {}, "totals": {"nfes_device": 0.0,
+           "nfes_expected": 0.0, "baseline_nfes": 0.0}}, open(out, "w"))
+"""
+
+_FAKE_NO_REPORT = "pass"
+
+
+def _fake(script):
+    def cmd(cfg, coordinator, workload_path, process_id, out_path, fault):
+        return [sys.executable, "-c", script, out_path, str(process_id)]
+    return cmd
+
+
+def _cfg(tmp_path, **kw):
+    kw.setdefault("num_processes", 2)
+    kw.setdefault("local_devices", 1)
+    kw.setdefault("timeout_s", 60.0)
+    kw.setdefault("poll_s", 0.02)
+    kw.setdefault("grace_s", 2.0)
+    return ClusterConfig(run_dir=str(tmp_path), **kw)
+
+
+def test_launch_cluster_merges_fake_workers(tmp_path):
+    cfg = _cfg(tmp_path)
+    report = launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_OK))
+    assert sorted(report["requests"]) == ["0", "1", "2", "3"]
+    assert report["totals"]["nfes_device"] == 6.0
+    assert report["totals"]["nfes_expected"] == 6.0
+    assert report["totals"]["mean_savings_pct"] == 50.0
+    assert report["mesh"] == {"global": [2, 1], "worker": [1, 1]}
+    assert len(report["worker_logs"]) == 2
+    for i, log in enumerate(report["worker_logs"]):
+        with open(log) as f:
+            assert f"[fake worker {i}] serving" in f.read()
+
+
+def test_launch_cluster_nonzero_exit_names_log(tmp_path):
+    cfg = _cfg(tmp_path)
+    with pytest.raises(ClusterError) as ei:
+        launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_DIE))
+    msg = str(ei.value)
+    assert "worker 1 exited 13" in msg
+    assert "worker_1.log" in msg
+    assert "exploding now" in msg  # log tail is inlined in the error
+    assert ei.value.worker_log.endswith("worker_1.log")
+    assert len(ei.value.worker_logs) == 2
+
+
+def test_launch_cluster_hang_hits_deadline_and_tears_down(tmp_path):
+    cfg = _cfg(tmp_path, timeout_s=1.5, grace_s=1.0)
+    t0 = time.monotonic()
+    with pytest.raises(ClusterError, match="timed out"):
+        launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_HANG))
+    # detected + torn down well within timeout + grace (not the 600s nap)
+    assert time.monotonic() - t0 < 30.0
+    with pytest.raises(ClusterError) as ei:
+        launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_HANG))
+    assert "workers still running: [1]" in str(ei.value)
+
+
+def test_launch_cluster_missing_report(tmp_path):
+    cfg = _cfg(tmp_path)
+    with pytest.raises(ClusterError, match="wrote no report"):
+        launch_cluster(cfg, {"requests": []},
+                       worker_cmd=_fake(_FAKE_NO_REPORT))
+
+
+def test_launch_cluster_refuses_duplicate_rids(tmp_path):
+    cfg = _cfg(tmp_path)
+    with pytest.raises(ClusterError, match="request 0 reported by two"):
+        launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_DUP))
+
+
+def test_launch_cluster_ignores_stale_reports(tmp_path):
+    # a leftover report from a previous run must never be harvested
+    for i in range(2):
+        (tmp_path / f"worker_{i}.json").write_text(
+            json.dumps({"requests": {"99": {"tokens": [9], "nfes": 9.0}},
+                        "totals": {"nfes_device": 9.0, "nfes_expected": 9.0,
+                                   "baseline_nfes": 9.0}})
+        )
+    cfg = _cfg(tmp_path)
+    report = launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_OK))
+    assert "99" not in report["requests"]
+
+
+# ---------------------------------------------------------------------------
+# fixture parity checking (against a synthetic fixture file)
+
+
+def _fake_report():
+    return {
+        "requests": {
+            "0": {"tokens": [5, 6], "nfes": 4.0},
+            "1": {"tokens": [7], "nfes": 2.0},
+        },
+        "totals": {"nfes_device": 6.0},
+    }
+
+
+def _write_fixture(tmp_path, requests):
+    path = tmp_path / "fixture.json"
+    path.write_text(json.dumps({"batcher": {"requests": requests}}))
+    return str(path)
+
+
+def test_check_fixture_parity_ok(tmp_path):
+    path = _write_fixture(tmp_path, _fake_report()["requests"])
+    summary = check_fixture_parity(_fake_report(), path)
+    assert summary == {"golden": True, "requests": 2, "nfes_device": 6.0}
+
+
+def test_check_fixture_parity_names_divergent_request(tmp_path):
+    want = _fake_report()["requests"]
+    want["1"] = {"tokens": [8], "nfes": 2.0}
+    path = _write_fixture(tmp_path, want)
+    with pytest.raises(AssertionError, match="request 1: cluster tokens"):
+        check_fixture_parity(_fake_report(), path)
+
+
+def test_check_fixture_parity_rid_set_and_ledger(tmp_path):
+    want = _fake_report()["requests"]
+    want["2"] = {"tokens": [1], "nfes": 1.0}
+    path = _write_fixture(tmp_path, want)
+    with pytest.raises(AssertionError, match="cluster served rids"):
+        check_fixture_parity(_fake_report(), path)
+    del want["2"]
+    want["1"] = {"tokens": [7], "nfes": 3.0}  # same tokens, drifted ledger
+    path = _write_fixture(tmp_path, want)
+    with pytest.raises(AssertionError, match="NFE ledger drifted"):
+        check_fixture_parity(_fake_report(), path)
+
+
+def test_merge_reports_sums_totals(tmp_path):
+    cfg = _cfg(tmp_path)
+    reports = [
+        {"requests": {"0": {"tokens": [1], "nfes": 2.0}},
+         "totals": {"nfes_device": 2.0, "nfes_expected": 2.0,
+                    "baseline_nfes": 4.0}},
+        {"requests": {"1": {"tokens": [2], "nfes": 1.0}},
+         "totals": {"nfes_device": 1.0, "nfes_expected": 1.0,
+                    "baseline_nfes": 4.0}},
+    ]
+    merged = merge_reports(cfg, reports)
+    assert merged["totals"]["nfes_device"] == 3.0
+    assert merged["totals"]["mean_savings_pct"] == pytest.approx(62.5)
+
+
+# ---------------------------------------------------------------------------
+# elasticity
+
+
+def test_elastic_policy_validates():
+    with pytest.raises(ValueError, match="min_width"):
+        ElasticPolicy(min_width=0)
+    with pytest.raises(ValueError, match="min_width"):
+        ElasticPolicy(min_width=4, max_width=2)
+    with pytest.raises(ValueError, match="shrink_at"):
+        ElasticPolicy(shrink_at=2.0, grow_at=1.0)
+
+
+def test_elastic_policy_decide_thresholds():
+    p = ElasticPolicy(min_width=1, max_width=4, grow_at=1.5, shrink_at=0.5)
+    assert p.decide(1, queued=8, slots_per_worker=2) == 2  # load 4 > 1.5
+    assert p.decide(4, queued=100, slots_per_worker=2) == 4  # clamped
+    assert p.decide(2, queued=1, slots_per_worker=2) == 1  # load .25 < .5
+    assert p.decide(1, queued=0, slots_per_worker=2) == 1  # clamped low
+    assert p.decide(2, queued=4, slots_per_worker=2) == 2  # dead band
+
+
+def test_run_elastic_rounds_resizes_and_folds_ledger():
+    def runner(width, shards):
+        return [
+            {"requests": {str(r): {"tokens": [r], "nfes": 2.0}
+                          for r in shard},
+             "totals": {"nfes_device": 2.0 * len(shard),
+                        "nfes_expected": 2.0 * len(shard)}}
+            for shard in shards
+        ]
+
+    policy = ElasticPolicy(min_width=1, max_width=3, grow_at=1.5,
+                           shrink_at=0.5)
+    out = run_elastic_rounds(runner, list(range(12)), policy,
+                             slots_per_worker=2, start_width=1)
+    # every request served exactly once, ledger width-invariant
+    assert sorted(out["ledger"]["requests"], key=int) == [
+        str(i) for i in range(12)
+    ]
+    assert out["ledger"]["nfes_device"] == 24.0
+    widths = [w["width"] for w in out["width_history"]]
+    # offered load (12 queued vs 2 slots) grows the axis, the drained
+    # tail shrinks it back — the trajectory must actually move
+    assert max(widths) > 1
+    assert sum(w["served"] for w in out["width_history"]) == 12
+
+
+def test_run_elastic_rounds_refuses_double_serve():
+    def runner(width, shards):
+        return [
+            {"requests": {"0": {"tokens": [0], "nfes": 2.0}},
+             "totals": {"nfes_device": 2.0, "nfes_expected": 2.0}}
+            for _ in shards
+        ]
+
+    with pytest.raises(ClusterError, match="served twice"):
+        run_elastic_rounds(
+            runner, [0, 1, 2, 3], ElasticPolicy(max_width=2),
+            slots_per_worker=1, start_width=2,
+        )
+
+
+def test_golden_workload_matches_fixture_requests():
+    # the committed fixture must cover exactly the rids the cluster
+    # golden workload serves (4 requests, budgets 8/6/5/4)
+    with open("tests/fixtures/golden_serving.json") as f:
+        fixture = json.load(f)["batcher"]["requests"]
+    wl = golden_workload()
+    assert {d["rid"] for d in wl["requests"]} == {int(r) for r in fixture}
+    budgets = [d["max_new_tokens"] for d in wl["requests"]]
+    assert budgets == [8, 6, 5, 4]
+    prompts = [np.asarray(d["prompt"]) for d in wl["requests"]]
+    assert [len(p) for p in prompts] == [6, 5, 6, 4]

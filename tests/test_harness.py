@@ -1,0 +1,380 @@
+"""Regression-harness suite (repro.harness, DESIGN.md §16).
+
+* spec — eager ValueError validation (unknown assert kinds, zero
+  timeouts, placeholder typos, pinned cells off the matrix) and cell
+  expansion (cross product, excludes, ``when``-conditional asserts,
+  ``{axis}`` formatting in cmd/env/assert keys);
+* runner — real subprocess cells (tiny ``python -c`` commands): retry
+  exhaustion surfaces the LAST attempt's log, timeouts kill the cell,
+  assert verdicts never raise, JSONL results accumulate per cell;
+* nightly — the declarative matrix builds, the smoke decimation still
+  covers every axis value, and conditional asserts attach to exactly
+  the cells whose axes match;
+* bench compaction — ``--compact`` keeps one comparable entry per
+  config on a synthetic mixed history without changing what the
+  regression gate would read.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+from repro.harness import JobSpec, nightly_jobs, run_cell, run_jobs
+from repro.harness.runner import eval_asserts, load_result, resolve_path
+from repro.harness.spec import JobCell
+
+# ---------------------------------------------------------------------------
+# spec validation
+
+
+def _spec(**kw):
+    kw.setdefault("name", "job")
+    kw.setdefault("cmd", ("echo", "hi"))
+    return JobSpec(**kw)
+
+
+def test_spec_rejects_unknown_assert_kind():
+    with pytest.raises(ValueError, match="unknown kind 'speed_floor'"):
+        _spec(asserts=({"kind": "speed_floor", "key": "a", "value": 1},),
+              result_path="r.json")
+
+
+def test_spec_rejects_zero_timeout():
+    with pytest.raises(ValueError, match="zero timeout would kill"):
+        _spec(timeout_s=0)
+    with pytest.raises(ValueError, match="timeout_s"):
+        _spec(timeout_s=-3)
+
+
+def test_spec_rejects_bad_budgets_and_kinds():
+    with pytest.raises(ValueError, match="retries"):
+        _spec(retries=-1)
+    with pytest.raises(ValueError, match="backoff_s"):
+        _spec(backoff_s=-0.1)
+    with pytest.raises(ValueError, match="result_kind"):
+        _spec(result_kind="yaml")
+    with pytest.raises(ValueError, match="empty cmd"):
+        _spec(cmd=())
+    with pytest.raises(ValueError, match="non-empty"):
+        _spec(name="")
+
+
+def test_spec_rejects_placeholder_typos():
+    with pytest.raises(ValueError, match="unknown axes \\['mush'\\]"):
+        _spec(cmd=("run", "--mesh", "{mush}"), matrix={"mesh": ("1x1",)})
+    with pytest.raises(ValueError, match="unknown axes"):
+        _spec(matrix={"mesh": ("1x1",)}, env={"X": "{policy}"})
+    with pytest.raises(ValueError, match="key references unknown"):
+        _spec(matrix={"mesh": ("1x1",)}, result_path="r.json",
+              asserts=({"kind": "perf_floor", "key": "p.{policy}.x",
+                        "value": 1},))
+    with pytest.raises(ValueError, match="'when' references unknown"):
+        _spec(matrix={"mesh": ("1x1",)}, result_path="r.json",
+              asserts=({"kind": "perf_floor", "key": "x", "value": 1,
+                        "when": {"horizon": "8"}},))
+
+
+def test_spec_rejects_incomplete_asserts():
+    with pytest.raises(ValueError, match="missing 'key'"):
+        _spec(asserts=({"kind": "perf_floor", "value": 1},),
+              result_path="r.json")
+    with pytest.raises(ValueError, match="missing 'value'"):
+        _spec(asserts=({"kind": "perf_floor", "key": "x"},),
+              result_path="r.json")
+    with pytest.raises(ValueError, match="needs 'key_b' or 'value'"):
+        _spec(asserts=({"kind": "bit_parity", "key": "x"},),
+              result_path="r.json")
+    with pytest.raises(ValueError, match="need a result_path"):
+        _spec(asserts=({"kind": "perf_floor", "key": "x", "value": 1},))
+
+
+def test_spec_rejects_bad_matrix_and_pins():
+    with pytest.raises(ValueError, match="axis 'mesh' is empty"):
+        _spec(matrix={"mesh": ()})
+    with pytest.raises(ValueError, match="must bind every axis"):
+        _spec(matrix={"mesh": ("1x1",), "kv": ("paged",)},
+              pinned=({"mesh": "1x1"},))
+    with pytest.raises(ValueError, match="not in matrix values"):
+        _spec(matrix={"mesh": ("1x1",)}, pinned=({"mesh": "9x9"},))
+    with pytest.raises(ValueError, match="exclude references unknown"):
+        _spec(matrix={"mesh": ("1x1",)}, exclude=({"policy": "default"},))
+
+
+# ---------------------------------------------------------------------------
+# cell expansion
+
+
+def test_cells_cross_product_and_formatting():
+    spec = _spec(
+        cmd=("run", "--mesh", "{mesh}", "--kv", "{kv}"),
+        matrix={"mesh": ("1x2", "2x1"), "kv": ("contiguous", "paged")},
+        env={"TAG": "m{mesh}"},
+        result_path="out_{kv}.json",
+        asserts=(
+            {"kind": "perf_floor", "key": "points.{kv}.tps", "value": 1.0},
+            {"kind": "bit_parity", "key": "a", "key_b": "b",
+             "when": {"kv": "paged"}},
+        ),
+    )
+    cells = spec.cells()
+    assert len(cells) == 4
+    paged = [c for c in cells if c.axes_dict["kv"] == "paged"]
+    contig = [c for c in cells if c.axes_dict["kv"] == "contiguous"]
+    c = paged[0]
+    assert c.cmd == ("run", "--mesh", c.axes_dict["mesh"], "--kv", "paged")
+    assert dict(c.env)["TAG"] == f"m{c.axes_dict['mesh']}"
+    assert c.result_path == "out_paged.json"
+    assert c.asserts[0]["key"] == "points.paged.tps"
+    # the when-conditional parity assert attaches only to paged cells
+    assert [len(c.asserts) for c in paged] == [2, 2]
+    assert [len(c.asserts) for c in contig] == [1, 1]
+    # slugs are unique and filesystem-safe
+    slugs = {c.slug for c in cells}
+    assert len(slugs) == 4
+    assert all("/" not in s and " " not in s for s in slugs)
+
+
+def test_cells_exclude_and_pinned():
+    spec = _spec(
+        matrix={"mesh": ("1x2", "2x1"), "kv": ("contiguous", "paged")},
+        exclude=({"mesh": "2x1", "kv": "paged"},),
+    )
+    assert len(spec.cells()) == 3
+    spec = _spec(
+        matrix={"mesh": ("1x2", "2x1"), "kv": ("contiguous", "paged")},
+        pinned=({"mesh": "2x1", "kv": "paged"},),
+    )
+    cells = spec.cells()
+    assert len(cells) == 1
+    assert cells[0].axes_dict == {"mesh": "2x1", "kv": "paged"}
+
+
+# ---------------------------------------------------------------------------
+# runner: result loading + asserts
+
+
+def test_resolve_path_reports_walked_path():
+    assert resolve_path({"a": {"b": 3}}, "a.b") == 3
+    with pytest.raises(KeyError, match="broke at 'a.c'"):
+        resolve_path({"a": {"b": 3}}, "a.c.d")
+
+
+def test_load_result_bench_history_and_empty(tmp_path):
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps({"history": [{"v": 1}, {"v": 2}]}))
+    cell = _cell(result_path=str(path), result_kind="bench_history")
+    assert load_result(cell) == {"v": 2}
+    path.write_text(json.dumps({"history": []}))
+    with pytest.raises(ValueError, match="empty bench history"):
+        load_result(cell)
+
+
+def _cell(cmd=("true",), asserts=(), result_path=None,
+          result_kind="json", timeout_s=30.0, retries=0, backoff_s=0.0):
+    return JobCell(
+        job="t", axes=(("mesh", "1x1"),), cmd=tuple(cmd), env=(),
+        timeout_s=timeout_s, retries=retries, backoff_s=backoff_s,
+        asserts=tuple(asserts), result_path=result_path,
+        result_kind=result_kind,
+    )
+
+
+def test_eval_asserts_verdicts_never_raise():
+    result = {"perf": {"tps": 10.0}, "a": 5, "b": 5}
+    verdicts = eval_asserts(
+        [
+            {"kind": "perf_floor", "key": "perf.tps", "value": 1.0},
+            {"kind": "perf_ceiling", "key": "perf.tps", "value": 1.0},
+            {"kind": "bit_parity", "key": "a", "key_b": "b"},
+            {"kind": "savings_gate", "key": "perf.missing", "value": 0.0},
+        ],
+        result,
+    )
+    assert [v["ok"] for v in verdicts] == [True, False, True, False]
+    assert "broke at" in verdicts[3]["detail"]  # missing path -> detail
+
+
+# ---------------------------------------------------------------------------
+# runner: real subprocess cells
+
+
+def _py(code):
+    return (sys.executable, "-c", code)
+
+
+def test_run_cell_pass_with_asserts(tmp_path):
+    out = tmp_path / "r.json"
+    cell = _cell(
+        cmd=_py(f"import json; json.dump({{'tps': 7}}, open({str(out)!r}, 'w'))"),
+        asserts=({"kind": "perf_floor", "key": "tps", "value": 5},),
+        result_path=str(out),
+    )
+    res = run_cell(cell, str(tmp_path / "logs"), sleep=lambda s: None)
+    assert res.ok and res.status == "pass"
+    assert res.attempts == 1 and res.returncode == 0
+    assert res.asserts[0]["ok"]
+
+
+def test_run_cell_retry_exhaustion_surfaces_last_log(tmp_path):
+    cell = _cell(
+        cmd=_py("import sys; print('boom'); sys.exit(3)"),
+        retries=2, backoff_s=0.5,
+    )
+    slept = []
+    res = run_cell(cell, str(tmp_path), sleep=slept.append)
+    assert res.status == "fail" and res.attempts == 3
+    assert res.returncode == 3 and "exit 3" in res.error
+    # exponential backoff between the three attempts
+    assert slept == [0.5, 1.0]
+    # the recorded log is the LAST attempt's file, and it exists
+    assert res.log.endswith(".try2.log")
+    with open(res.log) as f:
+        assert "boom" in f.read()
+
+
+def test_run_cell_timeout(tmp_path):
+    cell = _cell(cmd=_py("import time; time.sleep(60)"), timeout_s=0.5)
+    res = run_cell(cell, str(tmp_path), sleep=lambda s: None)
+    assert res.status == "timeout"
+    assert "timed out after 0.5s" in res.error
+
+
+def test_run_cell_assert_fail_and_unreadable_result(tmp_path):
+    out = tmp_path / "r.json"
+    cell = _cell(
+        cmd=_py(f"import json; json.dump({{'tps': 1}}, open({str(out)!r}, 'w'))"),
+        asserts=({"kind": "perf_floor", "key": "tps", "value": 5},),
+        result_path=str(out),
+    )
+    res = run_cell(cell, str(tmp_path), sleep=lambda s: None)
+    assert res.status == "assert_fail"
+    assert "tps = 1" in res.error
+    cell = _cell(cmd=("true",), result_path=str(tmp_path / "nope.json"),
+                 asserts=({"kind": "perf_floor", "key": "x", "value": 1},))
+    res = run_cell(cell, str(tmp_path), sleep=lambda s: None)
+    assert res.status == "error"
+    assert "result unreadable" in res.error
+
+
+def test_run_jobs_only_filter_and_jsonl(tmp_path):
+    spec = _spec(
+        cmd=_py("pass") + ("--mesh", "{mesh}"),
+        matrix={"mesh": ("1x2", "2x1")},
+    )
+    results_path = tmp_path / "results.jsonl"
+    echoed = []
+    summary = run_jobs(
+        [spec], str(tmp_path / "logs"), results_path=str(results_path),
+        only={"mesh": "2x1"}, echo=echoed.append, sleep=lambda s: None,
+    )
+    assert summary["passed"] == 1 and summary["failed"] == 0
+    assert summary["cells"][0].axes == {"mesh": "2x1"}
+    assert any("1 of 2 cells kept" in line for line in echoed)
+    lines = [json.loads(line) for line in
+             results_path.read_text().splitlines()]
+    assert len(lines) == 1 and lines[0]["status"] == "pass"
+
+
+# ---------------------------------------------------------------------------
+# the nightly matrix
+
+
+def test_nightly_matrix_shape():
+    serving, serving_two, cluster = nightly_jobs()
+    # lanes(1) x mesh(3) x horizon(2) x policy(3) x kv(2)
+    assert len(serving.cells()) == 36
+    assert len(serving_two.cells()) == 3
+    assert len(cluster.cells()) == 1
+    # the cluster cell runs the golden-parity CLI against the fixture
+    ccmd = " ".join(cluster.cells()[0].cmd)
+    assert "--golden" in ccmd and "golden_serving.json" in ccmd
+
+
+def test_nightly_smoke_covers_every_axis_value():
+    serving, serving_two, cluster = nightly_jobs(smoke=True)
+    cells = serving.cells()
+    assert 1 <= len(cells) < 36  # decimated, not the full product
+    covered = {}
+    for c in cells:
+        for k, v in c.axes_dict.items():
+            covered.setdefault(k, set()).add(v)
+    for axis, values in serving.matrix.items():
+        assert covered[axis] == set(values), f"axis {axis} lost coverage"
+    assert len(serving_two.cells()) == 1
+    assert len(cluster.cells()) == 1
+
+
+def test_nightly_conditional_asserts_attach_by_horizon():
+    serving = nightly_jobs()[0]
+    for c in serving.cells():
+        has_cut = any(a["key"] == "perf.horizon.dispatch_cut"
+                      for a in c.asserts)
+        assert has_cut == (c.axes_dict["horizon"] == "8")
+        # the policy placeholder is formatted into the assert key
+        keys = {a["key"] for a in c.asserts}
+        assert (f"policy_points.{c.axes_dict['policy']}.mean_savings_pct"
+                in keys)
+
+
+# ---------------------------------------------------------------------------
+# bench history compaction (--compact)
+
+
+def _bench_serving_module():
+    path = os.path.join(
+        os.path.dirname(__file__), os.pardir, "benchmarks", "bench_serving.py"
+    )
+    spec = importlib.util.spec_from_file_location("bench_serving_compact", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_compact_history_one_entry_per_comparable_config():
+    bs = _bench_serving_module()
+
+    def entry(i, **cfg):
+        base = {"smoke": True, "arch": "a", "requests": 8, "max_slots": 4,
+                "scale": 1.5, "gamma_bar": -1.0, "linear_window": 2,
+                "seed": 0, "mesh": None, "horizon": 1, "policy": "all",
+                "lanes": "three", "kv": "contiguous"}
+        base.update(cfg)
+        return {"config": base, "i": i,
+                "headline": {"mean_savings_pct": float(i)}}
+
+    history = [
+        entry(0),                       # default config, superseded by 3
+        entry(1, horizon=8),            # horizon cell, superseded by 4
+        entry(2, lanes="two"),          # two-lane cell, survives
+        entry(3),                       # newest default
+        entry(4, horizon=8),            # newest horizon cell
+        {"legacy": True},               # pre-history snapshot, no config
+    ]
+    compacted = bs.compact_history(history)
+    assert [e.get("i") for e in compacted] == [2, 3, 4, None]
+    # gate comparability is unchanged: the baseline the regression gate
+    # reads for each config is identical before and after compaction
+    for cfg in (entry(0)["config"], entry(1, horizon=8)["config"],
+                entry(2, lanes="two")["config"]):
+        assert (bs.previous_smoke_savings(history, cfg)
+                == bs.previous_smoke_savings(compacted, cfg))
+    # idempotent
+    assert bs.compact_history(compacted) == compacted
+
+
+def test_previous_smoke_savings_normalizes_pre_lanes_entries():
+    bs = _bench_serving_module()
+    old = {"config": {"smoke": True, "arch": "a", "requests": 8,
+                      "max_slots": 4, "scale": 1.5, "gamma_bar": -1.0,
+                      "linear_window": 2, "seed": 0, "mesh": None,
+                      "horizon": 1, "policy": "all"},
+           "three_lane_batcher": {"totals": {"mean_savings_pct": 41.0}}}
+    new_cfg = dict(old["config"], lanes="three", kv="contiguous")
+    # a pre-PR entry (no lanes/kv, no headline) still chains as the
+    # baseline for the defaulted three-lane contiguous config
+    assert bs.previous_smoke_savings([old], new_cfg) == 41.0
+    # ...but never for a different ladder depth
+    assert bs.previous_smoke_savings(
+        [old], dict(new_cfg, lanes="two")) is None
