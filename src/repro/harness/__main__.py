@@ -33,6 +33,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="decimate the matrix to the pinned subset that "
                          "still covers every axis value")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the seeded fault-matrix family "
+                         "(launch/chaos.py cells: worker-kill, nan-step, "
+                         "pool-exhaustion x horizon)")
     ap.add_argument("--bench-out", default="BENCH_serving.json",
                     help="bench history file the serving cells append to")
     ap.add_argument("--run-dir", default="artifacts/harness",
@@ -52,11 +56,12 @@ def main(argv=None):
     if not args.nightly:
         ap.error("nothing to do: pass --nightly")
     specs = nightly_jobs(bench_out=args.bench_out, run_dir=args.run_dir,
-                         smoke=args.smoke)
+                         smoke=args.smoke, chaos=args.chaos)
     if args.smoke:
         full = sum(
             len(s.cells()) for s in
-            nightly_jobs(bench_out=args.bench_out, run_dir=args.run_dir)
+            nightly_jobs(bench_out=args.bench_out, run_dir=args.run_dir,
+                         chaos=args.chaos)
         )
         now = sum(len(s.cells()) for s in specs)
         print(f"[harness] --smoke decimation: {now} of {full} cells "

@@ -19,6 +19,13 @@ x {contiguous, paged} grid:
   tokens/NFE ledgers asserted bit-identical to the single-process
   golden fixture.
 
+``--chaos`` adds the seeded fault-matrix family (DESIGN.md §17):
+``launch/chaos.py`` cells over fault {worker-kill, nan-step,
+pool-exhaustion} x horizon {1, 8} (worker-kill runs once — the cluster
+kill has no horizon axis), each asserting zero failed gates, ZERO
+dropped requests, replays >= 1 on the replay faults and degradations
+>= 1 under injected pool pressure.
+
 ``--smoke`` pins a decimated subset that still covers every axis value
 at least once (the runner logs exactly how many cells were dropped —
 no silent caps).
@@ -45,11 +52,17 @@ SMOKE_SERVING = (
      "kv": "contiguous", "lanes": "three"},
 )
 SMOKE_TWO = ({"mesh": "8x1", "lanes": "two"},)
+# decimated --chaos cells: every fault kind + both horizons covered
+SMOKE_CHAOS = (
+    {"fault": "nan-step", "horizon": "1"},
+    {"fault": "pool-exhaustion", "horizon": "8"},
+    {"fault": "worker-kill", "horizon": "1"},
+)
 
 
 def nightly_jobs(bench_out: str = "BENCH_serving.json",
                  run_dir: str = "artifacts/harness",
-                 smoke: bool = False) -> List[JobSpec]:
+                 smoke: bool = False, chaos: bool = False) -> List[JobSpec]:
     serving_asserts = (
         # ledger conservation of the headline point, bit-exact
         {"kind": "bit_parity", "key": "headline.nfes_device",
@@ -133,4 +146,36 @@ def nightly_jobs(bench_out: str = "BENCH_serving.json",
         result_path=cluster_out,
         result_kind="json",
     )
-    return [serving, serving_two, cluster]
+    jobs = [serving, serving_two, cluster]
+    if chaos:
+        chaos_out = f"{run_dir}/chaos_{{fault}}_h{{horizon}}.json"
+        jobs.append(JobSpec(
+            name="chaos",
+            cmd=(sys.executable, "-m", "repro.launch.chaos",
+                 "--fault", "{fault}", "--horizon", "{horizon}",
+                 "--seed", "7", "--run-dir", f"{run_dir}/chaos",
+                 "--out", chaos_out),
+            matrix={
+                "fault": ("worker-kill", "nan-step", "pool-exhaustion"),
+                "horizon": ("1", "8"),
+            },
+            # the cluster kill has no horizon axis: run it once
+            exclude=({"fault": "worker-kill", "horizon": "8"},),
+            timeout_s=1800.0,
+            retries=1,
+            asserts=(
+                # every recovery gate in the cell must hold
+                {"kind": "bit_parity", "key": "failed", "value": 0},
+                # the chaos guarantee: degrade/replay, never drop
+                {"kind": "bit_parity", "key": "dropped_requests",
+                 "value": 0},
+                {"kind": "perf_floor", "key": "replays", "value": 1,
+                 "when": {"fault": "nan-step"}},
+                {"kind": "perf_floor", "key": "degraded_requests",
+                 "value": 1, "when": {"fault": "pool-exhaustion"}},
+            ),
+            result_path=chaos_out,
+            result_kind="json",
+            pinned=SMOKE_CHAOS if smoke else None,
+        ))
+    return jobs

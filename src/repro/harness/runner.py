@@ -27,6 +27,15 @@ from typing import List, Optional, Sequence
 from repro.harness.spec import JobCell, JobSpec
 
 CAT_HARNESS = "harness"
+_LOG_TAIL_LINES = 20
+
+
+def _log_tail(path: str, n: int = _LOG_TAIL_LINES) -> str:
+    try:
+        with open(path, errors="replace") as f:
+            return "".join(f.readlines()[-n:])
+    except OSError:
+        return "<log unreadable>"
 
 
 def resolve_path(result: dict, dotpath: str):
@@ -105,6 +114,9 @@ class CellResult:
     returncode: Optional[int] = None
     asserts: List[dict] = dataclasses.field(default_factory=list)
     error: Optional[str] = None
+    # every attempt's log path, in attempt order — the JSONL record
+    # points at attempt N's log without reconstructing the try{N} names
+    attempt_logs: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -125,7 +137,12 @@ def _attempt(cell: JobCell, log_path: str) -> tuple:
                 env=env, timeout=cell.timeout_s,
             )
         except subprocess.TimeoutExpired:
-            return "timeout", None, [], f"timed out after {cell.timeout_s}s"
+            # the killed cell's partial output is the only clue to WHERE
+            # it hung — surface the tail instead of just the budget
+            return "timeout", None, [], (
+                f"timed out after {cell.timeout_s}s\n"
+                f"--- tail of {log_path} ---\n{_log_tail(log_path)}"
+            )
     if proc.returncode != 0:
         return ("fail", proc.returncode, [],
                 f"exit {proc.returncode}")
@@ -147,10 +164,11 @@ def run_cell(cell: JobCell, log_dir: str, bus=None,
     os.makedirs(log_dir, exist_ok=True)
     t0 = time.perf_counter()
     status, rc, verdicts, error, log_path = "error", None, [], None, None
-    attempts = 0
+    attempts, attempt_logs = 0, []
     for attempt in range(cell.retries + 1):
         attempts = attempt + 1
         log_path = os.path.join(log_dir, f"{cell.slug}.try{attempt}.log")
+        attempt_logs.append(log_path)
         status, rc, verdicts, error = _attempt(cell, log_path)
         if bus is not None:
             bus.publish(
@@ -165,6 +183,7 @@ def run_cell(cell: JobCell, log_dir: str, bus=None,
         job=cell.job, axes=cell.axes_dict, status=status,
         attempts=attempts, duration_s=time.perf_counter() - t0,
         log=log_path, returncode=rc, asserts=verdicts, error=error,
+        attempt_logs=attempt_logs,
     )
     if bus is not None:
         bus.publish(

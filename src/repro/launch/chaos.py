@@ -1,0 +1,282 @@
+"""Chaos driver: seeded fault-matrix runs with recovery gates (§17).
+
+Each invocation runs ONE cell of the chaos matrix — a fault kind x a
+dispatch horizon — against the reduced golden model, and gates the
+outcome on the chaos layer's contracts:
+
+* ``nan-step`` / ``host-error`` — a lane is poisoned mid-run (NaN logit
+  readback / dispatch-time host error); every resident must replay
+  BIT-IDENTICALLY to a fault-free twin run (B=1 parity), with the NFE
+  ledger closing through the replayed column
+  (``nfes_device + replayed_nfes == nfes_expected``), zero dropped
+  requests, and green invariant monitors;
+* ``pool-exhaustion`` — an injected page-pool hold plus an
+  ``OverloadPolicy``: guided admissions must shed guidance into the
+  cond lane (``degraded`` telemetry) instead of queueing forever or
+  dropping, and the pool must drain clean at the end;
+* ``worker-kill`` — the 2-process cluster golden run with worker 1
+  self-killing before device work and a respawn budget of 1: the
+  launcher must respawn it (one-shot fault flags stripped) and the
+  merged report must stay bit-identical to the single-process golden
+  fixture, duplicate-rid-free, with conservation green.
+
+The structured result lands at ``--out`` as JSON the harness's chaos
+cells (and the CI ``chaos-smoke`` job) assert on:
+
+  PYTHONPATH=src python -m repro.launch.chaos --fault nan-step \\
+      --horizon 8 --seed 7 --out artifacts/chaos/nan_step_h8.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+FAULT_KINDS = ("nan-step", "host-error", "pool-exhaustion", "worker-kill")
+
+
+def _golden_model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build
+
+    cfg = get_config("llama3.2-1b").reduced()
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _requests(cfg, seed):
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(1, cfg.vocab_size, size=5)
+                .astype(np.int32),
+                max_new_tokens=8, gamma_bar=2.0),  # never crosses: guided
+        Request(prompt=rng.integers(1, cfg.vocab_size, size=4)
+                .astype(np.int32),
+                max_new_tokens=6),  # crosses at gamma_bar=0 -> cond
+        Request(prompt=rng.integers(1, cfg.vocab_size, size=6)
+                .astype(np.int32),
+                max_new_tokens=5, guided=False),
+    ]
+
+
+def _run(cfg, api, params, horizon, seed, faults=None, overload=None,
+         paged=False):
+    from repro.serving import BatcherConfig, EngineConfig, StepBatcher
+
+    bat = StepBatcher(
+        api, params,
+        EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=3),
+        BatcherConfig(max_slots=3, cache_len=32, horizon=horizon,
+                      paged=paged, page_size=4),
+        faults=faults, overload=overload,
+    )
+    rids = [
+        bat.submit(r, arrival_step=2 * i)
+        for i, r in enumerate(_requests(cfg, seed))
+    ]
+    done = bat.run()
+    return bat, rids, done
+
+
+def run_replay_cell(fault: str, horizon: int, seed: int) -> dict:
+    """Poison a lane mid-run; gate on bit-identical replay + the closed
+    replayed-NFE ledger + zero drops + green monitors."""
+    from repro.serving import FaultPlan, FaultSpec
+
+    kind = {"nan-step": "nan_logits", "host-error": "host_error"}[fault]
+    cfg, api, params = _golden_model()
+    _, crids, clean = _run(cfg, api, params, horizon, seed)
+    rng = np.random.default_rng(seed)
+    at = int(rng.integers(1, 5))  # seeded, inside every request's run
+    plan = FaultPlan(seed=seed,
+                     faults=(FaultSpec(kind=kind, at_step=at),))
+    bat, rids, done = _run(cfg, api, params, horizon, seed, faults=plan)
+    rep = bat.report()
+    t = rep["totals"]
+    checks = {
+        "fault_fired": bool(rep.get("faults")),
+        "zero_drops": sorted(done) == sorted(rids),
+        "bit_identical": all(
+            list(map(int, done[r]["tokens"]))
+            == list(map(int, clean[c]["tokens"]))
+            and done[r]["nfes"] == clean[c]["nfes"]
+            for r, c in zip(rids, crids)
+        ),
+        "conserved": abs(
+            t["nfes_device"] + t["replayed_nfes"] - t["nfes_expected"]
+        ) < 1e-6,
+        "monitors_green": rep["monitors"]["violations"] == [],
+        "replayed": t["num_replays"] >= 1,
+    }
+    return {
+        "fault": fault, "horizon": horizon, "at_step": at,
+        "ok": all(checks.values()), "checks": checks,
+        "replays": t["num_replays"], "replayed_nfes": t["replayed_nfes"],
+        "degraded": t["num_degraded"], "dropped": len(rids) - len(done),
+        "mttr_ms": t["mttr_ms"]["mean"],
+        "shed_rate_pct": t["shed_rate_pct"],
+    }
+
+
+def run_shed_cell(horizon: int, seed: int) -> dict:
+    """Injected pool exhaustion under an OverloadPolicy: every request
+    completes (zero drops), guidance is shed not admissions, the pool
+    drains clean."""
+    from repro.serving import FaultPlan, FaultSpec, OverloadPolicy
+
+    cfg, api, params = _golden_model()
+    rng = np.random.default_rng(seed)
+    pages = int(rng.integers(16, 33))  # seeded hold size
+    plan = FaultPlan(
+        seed=seed,
+        faults=(FaultSpec(kind="pool_exhaust", at_step=1, pages=pages),),
+    )
+    bat, rids, done = _run(
+        cfg, api, params, horizon, seed, faults=plan, paged=True,
+        overload=OverloadPolicy(free_page_frac=0.5),
+    )
+    rep = bat.report()
+    t = rep["totals"]
+    ps = bat.pool_stats()
+    checks = {
+        "fault_fired": bool(rep.get("faults")),
+        "zero_drops": sorted(done) == sorted(rids),
+        "guidance_shed": t["num_degraded"] >= 1,
+        "no_evictions": t["num_evicted"] == 0,
+        "pool_drained": ps["resident"] == 0,
+        "monitors_green": rep["monitors"]["violations"] == [],
+    }
+    return {
+        "fault": "pool-exhaustion", "horizon": horizon,
+        "held_pages": pages, "ok": all(checks.values()), "checks": checks,
+        "replays": t["num_replays"], "replayed_nfes": t["replayed_nfes"],
+        "degraded": t["num_degraded"], "dropped": len(rids) - len(done),
+        "mttr_ms": t["mttr_ms"]["mean"],
+        "shed_rate_pct": t["shed_rate_pct"],
+    }
+
+
+def run_worker_kill_cell(seed: int, run_dir: str, fixture: str) -> dict:
+    """Kill worker 1 pre-device-work in the 2-process golden cluster run;
+    the respawned replacement must bring the merged report back to
+    bit-parity with the single-process golden fixture."""
+    from repro.launch.cluster import (
+        ClusterConfig,
+        ClusterError,
+        check_fixture_parity,
+        golden_workload,
+        launch_cluster,
+    )
+
+    cfg = ClusterConfig(num_processes=2, local_devices=2,
+                        run_dir=run_dir, max_respawns=1,
+                        respawn_backoff_s=0.5)
+    t0 = time.perf_counter()
+    parity_err = None
+    try:
+        report = launch_cluster(cfg, golden_workload(),
+                                fault={"self_kill": 1})
+        try:
+            check_fixture_parity(report, fixture)
+        except AssertionError as e:
+            parity_err = str(e)
+    except ClusterError as e:
+        return {
+            "fault": "worker-kill", "horizon": 1, "ok": False,
+            "checks": {"cluster_completed": False}, "error": str(e),
+            "replays": 0, "replayed_nfes": 0.0, "degraded": 0,
+            "dropped": 4, "mttr_ms": 0.0, "shed_rate_pct": 0.0,
+        }
+    t = report["totals"]
+    checks = {
+        "cluster_completed": True,
+        "respawned": sum(report["respawns"]) >= 1,
+        "golden_parity": parity_err is None,
+        "zero_drops": len(report["requests"]) == 4,
+        "conserved": abs(
+            t["nfes_device"] + t["replayed_nfes"] - t["nfes_expected"]
+        ) < 1e-6,
+    }
+    out = {
+        "fault": "worker-kill", "horizon": 1,
+        "ok": all(checks.values()), "checks": checks,
+        "respawns": report["respawns"],
+        "replays": int(t.get("num_replays", 0)),
+        "replayed_nfes": t["replayed_nfes"],
+        "degraded": int(t.get("num_degraded", 0)),
+        "dropped": 4 - len(report["requests"]),
+        # kill-to-recovered wall time: the whole supervised run is the
+        # upper bound the nightly trend tracks
+        "mttr_ms": 1e3 * (time.perf_counter() - t0),
+        "shed_rate_pct": 0.0,
+    }
+    if parity_err is not None:
+        out["error"] = parity_err
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--fault", required=True, choices=FAULT_KINDS)
+    ap.add_argument("--horizon", type=int, default=1, choices=(1, 8))
+    ap.add_argument("--seed", type=int, default=7,
+                    help="seeds the fault schedule AND the workload")
+    ap.add_argument("--run-dir", default="artifacts/chaos",
+                    help="working dir for the worker-kill cluster run")
+    ap.add_argument("--fixture",
+                    default="tests/fixtures/golden_serving.json",
+                    help="golden fixture for worker-kill parity")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the structured cell result JSON here")
+    args = ap.parse_args(argv)
+
+    print(f"[chaos] fault={args.fault} horizon={args.horizon} "
+          f"seed={args.seed}")
+    if args.fault == "worker-kill":
+        cell = run_worker_kill_cell(
+            args.seed, os.path.join(args.run_dir, "cluster"), args.fixture
+        )
+    elif args.fault == "pool-exhaustion":
+        cell = run_shed_cell(args.horizon, args.seed)
+    else:
+        cell = run_replay_cell(args.fault, args.horizon, args.seed)
+
+    summary = {
+        "fault": args.fault,
+        "horizon": args.horizon,
+        "seed": args.seed,
+        "passed": int(cell["ok"]),
+        "failed": int(not cell["ok"]),
+        "dropped_requests": cell["dropped"],
+        "degraded_requests": cell["degraded"],
+        "replays": cell["replays"],
+        "replayed_nfes": cell["replayed_nfes"],
+        "mttr_ms": cell["mttr_ms"],
+        "shed_rate_pct": cell["shed_rate_pct"],
+        "cells": [cell],
+    }
+    for name, ok in cell["checks"].items():
+        print(f"[chaos]   {name}: {'ok' if ok else 'FAIL'}")
+    print(f"[chaos] {'PASS' if cell['ok'] else 'FAIL'}: "
+          f"{cell['replays']} replays, "
+          f"{cell['replayed_nfes']:.0f} replayed NFEs, "
+          f"{cell['degraded']} degraded, {cell['dropped']} dropped")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"[chaos] result -> {args.out}")
+    return 0 if cell["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

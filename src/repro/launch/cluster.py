@@ -28,6 +28,12 @@ harvest logs, tear down):
 * supervision with a hard deadline: a worker that exits nonzero or
   hangs past ``timeout_s`` kills the remaining workers and raises
   ``ClusterError`` naming the offending worker's log (tail included);
+  with ``max_respawns > 0`` a dead worker is instead respawned with a
+  linear backoff under the same process id (one-shot fault flags
+  stripped from the replacement's argv), so an injected worker-kill
+  chaos run recovers to a bit-identical merged report — the survivor
+  blocks in the ``jax.distributed.initialize`` barrier until the
+  replacement joins;
 * result harvest: each worker writes a JSON report; the launcher merges
   per-request tokens/NFE records and sums the ledger totals, refusing
   duplicate request ids.
@@ -91,6 +97,8 @@ class ClusterConfig:
     run_dir: str = "artifacts/cluster"
     poll_s: float = 0.2  # supervision poll interval
     grace_s: float = 5.0  # SIGTERM -> SIGKILL escalation window
+    max_respawns: int = 0  # respawn budget for dead workers (whole job)
+    respawn_backoff_s: float = 0.5  # base backoff, scaled per respawn
 
     def __post_init__(self):
         # raises on shapes that do not tile; the launcher must fail
@@ -102,6 +110,14 @@ class ClusterConfig:
             raise ValueError(f"timeout_s must be > 0: {self.timeout_s}")
         if self.poll_s <= 0:
             raise ValueError(f"poll_s must be > 0: {self.poll_s}")
+        if self.max_respawns < 0:
+            raise ValueError(
+                f"max_respawns must be >= 0: {self.max_respawns}"
+            )
+        if self.respawn_backoff_s < 0:
+            raise ValueError(
+                f"respawn_backoff_s must be >= 0: {self.respawn_backoff_s}"
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -196,14 +212,23 @@ def shard_requests(rids: Sequence[int], width: int) -> List[List[int]]:
 # worker side
 
 
-def _serve_shard(workload: dict, shard: Sequence[int], mesh) -> dict:
+def _serve_shard(workload: dict, shard: Sequence[int], mesh,
+                 process_id: int = 0) -> dict:
     """Serve this worker's request shard through the step batcher and
-    return per-request tokens/NFEs + the ledger totals."""
+    return per-request tokens/NFEs + the ledger totals.  A workload with
+    a ``fault_plan`` section arms this process's scoped slice of the plan
+    (chaos runs); an ``overload`` section arms the degradation ladder."""
     import jax
 
     from repro.configs import get_config
     from repro.models import build
-    from repro.serving import BatcherConfig, EngineConfig, StepBatcher
+    from repro.serving import (
+        BatcherConfig,
+        EngineConfig,
+        OverloadPolicy,
+        StepBatcher,
+    )
+    from repro.serving.faults import FaultPlan
 
     cfg = get_config(workload["arch"])
     if workload["reduced"]:
@@ -215,6 +240,14 @@ def _serve_shard(workload: dict, shard: Sequence[int], mesh) -> dict:
         gamma_bar=workload["gamma_bar"],
         max_batch=workload["max_slots"],
     )
+    plan = None
+    if workload.get("fault_plan"):
+        plan = FaultPlan.from_json(workload["fault_plan"])
+        plan = plan.for_process(process_id)
+    overload = (
+        OverloadPolicy(**workload["overload"])
+        if workload.get("overload") else None
+    )
     bat = StepBatcher(
         api, params, ec,
         BatcherConfig(
@@ -223,6 +256,8 @@ def _serve_shard(workload: dict, shard: Sequence[int], mesh) -> dict:
             else None,
         ),
         mesh=mesh,
+        faults=plan,
+        overload=overload,
     )
     by_rid = {d["rid"]: d for d in workload["requests"]}
     local_rid = {}  # batcher-local rid -> global rid
@@ -243,6 +278,9 @@ def _serve_shard(workload: dict, shard: Sequence[int], mesh) -> dict:
             "nfes_device": t["nfes_device"],
             "nfes_expected": t["nfes_expected"],
             "baseline_nfes": t["baseline_nfes"],
+            "replayed_nfes": t["replayed_nfes"],
+            "num_replays": t["num_replays"],
+            "num_degraded": t["num_degraded"],
             "mean_savings_pct": t["mean_savings_pct"],
         },
     }
@@ -261,6 +299,12 @@ def worker_main(args) -> int:
         print(f"[worker {args.process_id}] hanging (timeout test)",
               flush=True)
         time.sleep(10 * 60)
+    if args.slow_ms:
+        # straggler injection: delay this worker's start without killing
+        # it — the launcher must keep supervising, not respawn it
+        print(f"[worker {args.process_id}] slow start: {args.slow_ms}ms",
+              flush=True)
+        time.sleep(args.slow_ms / 1000.0)
 
     import jax
 
@@ -303,7 +347,8 @@ def worker_main(args) -> int:
     shard = shards[args.process_id]
     print(f"[worker {args.process_id}] shard rids={shard}", flush=True)
     t0 = time.perf_counter()
-    result = _serve_shard(workload, shard, mesh)
+    result = _serve_shard(workload, shard, mesh,
+                          process_id=args.process_id)
     result.update(
         process_id=args.process_id,
         local_devices=jax.local_device_count(),
@@ -354,7 +399,29 @@ def default_worker_cmd(cfg: ClusterConfig, coordinator: str,
         cmd.append("--self-kill")
     if fault.get("hang") == process_id:
         cmd.append("--hang")
+    if fault.get("slow") == process_id:
+        cmd += ["--slow-ms", str(fault.get("slow_ms", 1000))]
     return cmd
+
+
+# one-shot injected faults: a respawned replacement must run clean, or
+# the supervisor would burn its whole respawn budget re-killing itself
+_ONE_SHOT_FLAGS = ("--self-kill", "--hang")
+
+
+def strip_fault_flags(argv: Sequence[str]) -> List[str]:
+    out, skip = [], False
+    for a in argv:
+        if skip:
+            skip = False
+            continue
+        if a in _ONE_SHOT_FLAGS:
+            continue
+        if a == "--slow-ms":
+            skip = True  # drop the flag and its value
+            continue
+        out.append(a)
+    return out
 
 
 def _teardown(procs, logs, grace_s: float) -> None:
@@ -383,8 +450,16 @@ def launch_cluster(
     ``worker_cmd(cfg, coordinator, workload_path, process_id, out_path,
     fault)`` builds each worker's argv (tests inject jax-free fakes to
     exercise supervision without paying two interpreter+jit starts).
-    Raises ClusterError on nonzero exit, timeout, or a missing report —
-    always after tearing every worker down.
+    Raises ClusterError on nonzero exit past the respawn budget,
+    timeout, or a missing report — always after tearing every worker
+    down.
+
+    Supervision with ``cfg.max_respawns > 0``: a worker that exits
+    nonzero is respawned (same process id, same argv MINUS the one-shot
+    fault flags — ``strip_fault_flags``) after a linear backoff
+    ``respawn_backoff_s * respawn#``; its log continues in the same
+    file so the ClusterError tail stays one artifact per worker.  Only
+    when the job-wide budget is exhausted does a death raise.
     """
     worker_cmd = worker_cmd or default_worker_cmd
     os.makedirs(cfg.run_dir, exist_ok=True)
@@ -394,7 +469,7 @@ def launch_cluster(
     port = cfg.coordinator_port or _free_port()
     coordinator = f"127.0.0.1:{port}"
 
-    procs, logs, log_paths, out_paths = [], [], [], []
+    procs, logs, log_paths, out_paths, argvs, envs = [], [], [], [], [], []
     t0 = time.perf_counter()
     for i in range(cfg.num_processes):
         log_path = os.path.join(cfg.run_dir, f"worker_{i}.log")
@@ -409,27 +484,53 @@ def launch_cluster(
         env["PYTHONPATH"] = "src" + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
         )
+        argv = list(
+            worker_cmd(cfg, coordinator, workload_path, i, out_path, fault)
+        )
         log = open(log_path, "w")
         procs.append(subprocess.Popen(
-            worker_cmd(cfg, coordinator, workload_path, i, out_path, fault),
-            stdout=log, stderr=subprocess.STDOUT, env=env,
+            argv, stdout=log, stderr=subprocess.STDOUT, env=env,
         ))
         logs.append(log)
         log_paths.append(log_path)
         out_paths.append(out_path)
+        argvs.append(argv)
+        envs.append(env)
 
     deadline = time.monotonic() + cfg.timeout_s
+    respawns = [0] * cfg.num_processes
+    respawns_used = 0
     try:
         while True:
-            codes = [p.poll() for p in procs]
-            for i, rc in enumerate(codes):
-                if rc is not None and rc != 0:
+            for i, p in enumerate(procs):
+                rc = p.poll()
+                if rc is None or rc == 0:
+                    continue
+                if respawns_used >= cfg.max_respawns:
                     raise ClusterError(
-                        f"worker {i} exited {rc}; see {log_paths[i]}\n"
+                        f"worker {i} exited {rc} "
+                        f"(respawn budget {respawns_used}/"
+                        f"{cfg.max_respawns} spent); see {log_paths[i]}\n"
                         f"--- tail of {log_paths[i]} ---\n"
                         f"{_tail(log_paths[i])}",
                         worker_log=log_paths[i], worker_logs=log_paths,
                     )
+                respawns_used += 1
+                respawns[i] += 1
+                backoff = cfg.respawn_backoff_s * respawns[i]
+                print(f"[cluster] worker {i} exited {rc}; respawn "
+                      f"#{respawns[i]} (job budget "
+                      f"{respawns_used}/{cfg.max_respawns}) after "
+                      f"{backoff:.1f}s backoff", flush=True)
+                time.sleep(backoff)
+                logs[i].write(f"\n--- respawn #{respawns[i]} "
+                              f"(previous exit {rc}) ---\n")
+                logs[i].flush()
+                procs[i] = subprocess.Popen(
+                    strip_fault_flags(argvs[i]), stdout=logs[i],
+                    stderr=subprocess.STDOUT, env=envs[i],
+                )
+            codes = [p.poll() for p in procs]
             if all(rc == 0 for rc in codes):
                 break
             if time.monotonic() > deadline:
@@ -456,18 +557,22 @@ def launch_cluster(
         with open(path) as f:
             reports.append(json.load(f))
     return merge_reports(cfg, reports, log_paths,
-                         elapsed_s=time.perf_counter() - t0)
+                         elapsed_s=time.perf_counter() - t0,
+                         respawns=respawns)
 
 
 def merge_reports(cfg: ClusterConfig, reports: List[dict],
                   log_paths: Sequence[str] = (), elapsed_s: float = 0.0,
-                  ) -> dict:
+                  respawns: Sequence[int] = ()) -> dict:
     """Fold per-worker reports into the cluster host ledger: union of the
     per-request records (duplicate rids refused — a rebucketing bug must
-    not silently double-count) and summed NFE totals."""
+    not silently double-count) and summed NFE totals.  ``replayed_nfes``
+    defaults to 0 per worker (pre-chaos reports lack the column) so the
+    merged conservation check ``device + replayed == expected`` stays
+    well-defined across report vintages."""
     requests: Dict[str, dict] = {}
     totals = {"nfes_device": 0.0, "nfes_expected": 0.0,
-              "baseline_nfes": 0.0}
+              "baseline_nfes": 0.0, "replayed_nfes": 0.0}
     for rep in reports:
         for rid, rec in rep["requests"].items():
             if rid in requests:
@@ -477,7 +582,7 @@ def merge_reports(cfg: ClusterConfig, reports: List[dict],
                 )
             requests[rid] = rec
         for k in totals:
-            totals[k] += rep["totals"][k]
+            totals[k] += rep["totals"].get(k, 0.0)
     totals["mean_savings_pct"] = (
         100.0 * (1.0 - totals["nfes_device"] / totals["baseline_nfes"])
         if totals["baseline_nfes"] > 0 else 0.0
@@ -497,6 +602,7 @@ def merge_reports(cfg: ClusterConfig, reports: List[dict],
             for r in reports
         ],
         "worker_logs": list(log_paths),
+        "respawns": list(respawns),
         "elapsed_s": elapsed_s,
     }
 
@@ -652,6 +758,28 @@ def main(argv=None):
     ap.add_argument("--kill-process", type=int, default=None,
                     help="fault injection: this worker self-kills before "
                          "device work (supervision demo/test)")
+    ap.add_argument("--slow-process", type=int, default=None,
+                    help="fault injection: this worker delays its start "
+                         "by --slow-process-ms (straggler demo)")
+    ap.add_argument("--slow-process-ms", type=int, default=1000,
+                    help="delay for --slow-process, in milliseconds")
+    ap.add_argument("--max-respawns", type=int, default=0,
+                    help="respawn budget for dead workers (one-shot fault "
+                         "flags are stripped from the replacement's argv)")
+    ap.add_argument("--respawn-backoff", type=float, default=0.5,
+                    help="base respawn backoff in seconds (scales "
+                         "linearly with the worker's respawn count)")
+    ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                    help="arm a seeded FaultPlan JSON inside the workers "
+                         "(each worker takes its process-scoped slice); "
+                         "conservation then closes as device + replayed "
+                         "== expected")
+    ap.add_argument("--degrade-page-frac", type=float, default=None,
+                    help="OverloadPolicy.free_page_frac for the workers")
+    ap.add_argument("--degrade-queue-depth", type=int, default=None,
+                    help="OverloadPolicy.queue_depth for the workers")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="OverloadPolicy.deadline_steps for the workers")
     ap.add_argument("--out", default=None,
                     help="write the merged cluster report JSON here")
     # internal: worker mode (spawned by the launcher)
@@ -664,6 +792,8 @@ def main(argv=None):
     ap.add_argument("--self-kill", action="store_true",
                     help=argparse.SUPPRESS)
     ap.add_argument("--hang", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--slow-ms", type=int, default=0,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
     if args.worker:
@@ -676,16 +806,34 @@ def main(argv=None):
         coordinator_port=args.port,
         timeout_s=args.timeout,
         run_dir=args.run_dir,
+        max_respawns=args.max_respawns,
+        respawn_backoff_s=args.respawn_backoff,
     )
     if args.workload:
         with open(args.workload) as f:
             workload = json.load(f)
     else:
         workload = golden_workload()
-    fault = (
-        {"self_kill": args.kill_process}
-        if args.kill_process is not None else None
-    )
+    if args.fault_plan:
+        from repro.serving.faults import FaultPlan
+
+        workload["fault_plan"] = FaultPlan.load(args.fault_plan).to_json()
+    overload = {
+        k: v for k, v in (
+            ("free_page_frac", args.degrade_page_frac),
+            ("queue_depth", args.degrade_queue_depth),
+            ("deadline_steps", args.deadline_steps),
+        ) if v is not None
+    }
+    if overload:
+        workload["overload"] = overload
+    fault = {}
+    if args.kill_process is not None:
+        fault["self_kill"] = args.kill_process
+    if args.slow_process is not None:
+        fault["slow"] = args.slow_process
+        fault["slow_ms"] = args.slow_process_ms
+    fault = fault or None
     print(f"[cluster] {cfg.num_processes} processes x "
           f"{cfg.local_devices} devices, global mesh "
           f"{cfg.global_shape} (worker {cfg.worker_shape}), "
@@ -694,14 +842,19 @@ def main(argv=None):
     t = report["totals"]
     print(f"[cluster] done in {report['elapsed_s']:.1f}s: "
           f"{len(report['requests'])} requests, NFE ledger "
-          f"{t['nfes_device']:.0f} == expected {t['nfes_expected']:.0f}, "
+          f"{t['nfes_device']:.0f} + replayed {t['replayed_nfes']:.0f} "
+          f"== expected {t['nfes_expected']:.0f}, "
           f"savings {t['mean_savings_pct']:.1f}%")
+    if any(report["respawns"]):
+        print(f"[cluster] respawns per worker: {report['respawns']}")
     for w in report["worker_reports"]:
         print(f"[cluster]   worker {w['process_id']}: "
               f"{w['local_devices']} local / {w['global_devices']} global "
               f"devices, {w['totals']['nfes_device']:.0f} NFEs, "
               f"{w['elapsed_s']:.1f}s")
-    if t["nfes_device"] != t["nfes_expected"]:
+    # conservation under faults: a replayed step's price moved from the
+    # device column to replayed_nfes, so the closed form is a sum
+    if t["nfes_device"] + t["replayed_nfes"] != t["nfes_expected"]:
         raise SystemExit("[cluster] NFE ledger not conserved")
     if args.parity_fixture:
         summary = check_fixture_parity(

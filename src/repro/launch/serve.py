@@ -30,6 +30,18 @@ Guide").  The telemetry report breaks realized savings out per policy:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --policy compress --requests 4 --max-new 16
 
+``--fault-plan PATH`` arms a seeded chaos plan (DESIGN.md §17; implies
+``--continuous``): injected lane faults (NaN readback, dispatch host
+errors, page-pool holds) are recovered by request-level replay, and the
+report's ledger closes as ``device + replayed == expected``.  The
+degradation knobs (``--degrade-page-frac``, ``--degrade-queue-depth``,
+``--deadline-steps``) arm the guidance-aware ``OverloadPolicy``: under
+pressure guided admissions shed to the cond lane (flagged ``degraded``)
+instead of queueing, and past-deadline QUEUED requests are evicted:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \\
+      --paged --fault-plan artifacts/plan.json --degrade-page-frac 0.5
+
 ``--mesh dxm`` serves sharded (DESIGN.md §8): params and lane state are
 partitioned on a (d, m) data x model mesh — e.g. ``--mesh 8x1`` on
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, or a pod slice's
@@ -160,6 +172,25 @@ def main():
                          "a per-request online gap estimate.  Non-default "
                          "policies imply --continuous and disable "
                          "--linear")
+    chaos = ap.add_argument_group(
+        "chaos + graceful degradation (DESIGN.md §17; all imply "
+        "--continuous)")
+    chaos.add_argument("--fault-plan", default=None, metavar="PATH",
+                       help="arm a seeded FaultPlan JSON: injected lane "
+                            "faults are recovered by request-level "
+                            "replay; the ledger then closes as device + "
+                            "replayed == expected")
+    chaos.add_argument("--degrade-page-frac", type=float, default=None,
+                       help="shed guidance (guided -> cond admission) "
+                            "when the free-page fraction drops below "
+                            "this (--paged only)")
+    chaos.add_argument("--degrade-queue-depth", type=int, default=None,
+                       help="shed guidance when more than this many "
+                            "requests are queued behind the admission")
+    chaos.add_argument("--deadline-steps", type=int, default=None,
+                       help="evict still-QUEUED requests older than this "
+                            "many steps (admitted requests always run "
+                            "to completion)")
     obs = ap.add_argument_group(
         "observability (DESIGN.md §14; all imply --continuous)")
     obs.add_argument("--trace", default=None, metavar="PATH.jsonl",
@@ -225,12 +256,16 @@ def main():
 
     obs_on = bool(args.trace or args.trace_chrome or args.metrics_json
                   or args.strict_monitors or args.profile)
+    chaos_on = bool(args.fault_plan or args.degrade_page_frac is not None
+                    or args.degrade_queue_depth is not None
+                    or args.deadline_steps is not None)
     if args.kv_int8_pages:
         from repro import perf_flags
 
         perf_flags.set_flags(kv_int8_pages=True)
     if (args.continuous or args.linear or args.horizon > 1
-            or args.policy != "default" or args.paged or obs_on):
+            or args.policy != "default" or args.paged or obs_on
+            or chaos_on):
         from repro.obs import MetricsFlusher, ObsConfig, write_chrome, write_jsonl
         from repro.serving import BatcherConfig, StepBatcher
 
@@ -239,11 +274,30 @@ def main():
             if args.linear
             else None
         )
+        plan = None
+        if args.fault_plan:
+            from repro.serving import FaultPlan
+
+            plan = FaultPlan.load(args.fault_plan)
+            print(f"[serve] armed fault plan {args.fault_plan} "
+                  f"({len(plan.faults)} faults, seed {plan.seed})")
+        overload = None
+        if (args.degrade_page_frac is not None
+                or args.degrade_queue_depth is not None
+                or args.deadline_steps is not None):
+            from repro.serving import OverloadPolicy
+
+            overload = OverloadPolicy(
+                free_page_frac=args.degrade_page_frac,
+                queue_depth=args.degrade_queue_depth,
+                deadline_steps=args.deadline_steps,
+            )
         bat = StepBatcher(
             api, params, ec,
             BatcherConfig(max_slots=args.requests, horizon=args.horizon,
                           paged=args.paged, page_size=args.page_size),
             coeffs=coeffs, mesh=mesh,
+            faults=plan, overload=overload,
             obs=ObsConfig(
                 monitors=not args.no_monitors,
                 strict=args.strict_monitors,
@@ -297,8 +351,19 @@ def main():
         print(f"  device dispatches/token: {t['dispatches_per_token']:.3f} "
               f"({t['device_dispatches']} launches, "
               f"{t['decode_substeps']} decode substeps)")
-        print(f"  NFE ledger: device {t['nfes_device']:.0f} == "
-              f"expected {t['nfes_expected']:.0f}")
+        if chaos_on:
+            print(f"  chaos: {t['num_replays']} replays "
+                  f"({t['replayed_nfes']:.0f} replayed NFEs, MTTR "
+                  f"{t['mttr_ms']['mean']:.0f} ms), "
+                  f"{t['num_degraded']} degraded "
+                  f"(shed rate {t['shed_rate_pct']:.0f}%), "
+                  f"{t['num_evicted']} evicted")
+            print(f"  NFE ledger: device {t['nfes_device']:.0f} + "
+                  f"replayed {t['replayed_nfes']:.0f} == "
+                  f"expected {t['nfes_expected']:.0f}")
+        else:
+            print(f"  NFE ledger: device {t['nfes_device']:.0f} == "
+                  f"expected {t['nfes_expected']:.0f}")
         if args.paged:
             pp = rep["page_pool"]
             print(f"  page pool: peak {pp['peak_resident']}/"

@@ -48,6 +48,7 @@ from repro.obs.monitors import (
     LedgerConservationMonitor,
     MonitorSuite,
     MonitorViolation,
+    RecoveryMonitor,
     RoundView,
     LaneView,
 )
@@ -79,8 +80,18 @@ class ObsConfig:
     profile_rounds: int = 8
 
     def __post_init__(self):
-        assert self.bus_capacity >= 1
-        assert self.profile_start_round >= 0 and self.profile_rounds >= 1
+        # config validation raises (never asserts): user input, must
+        # survive python -O
+        if self.bus_capacity < 1:
+            raise ValueError(f"bus_capacity must be >= 1: {self.bus_capacity}")
+        if self.profile_start_round < 0:
+            raise ValueError(
+                f"profile_start_round must be >= 0: {self.profile_start_round}"
+            )
+        if self.profile_rounds < 1:
+            raise ValueError(
+                f"profile_rounds must be >= 1: {self.profile_rounds}"
+            )
 
 
 __all__ = [
@@ -107,6 +118,7 @@ __all__ = [
     "MonitorViolation",
     "ObsConfig",
     "ProfilerHooks",
+    "RecoveryMonitor",
     "RoundView",
     "read_jsonl",
     "to_chrome",

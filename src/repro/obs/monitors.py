@@ -87,6 +87,13 @@ class RoundView:
     nfes_device: Mapping[int, float]
     nfes_expected: Mapping[int, float]
     lane_history: Mapping[int, Sequence[str]]
+    # fault-recovery mirrors (DESIGN.md §17): a request's incarnation
+    # bumps each time a fault discards its lane and it is requeued for
+    # replay — the ledger monitor forgets its monotonicity baseline at a
+    # bump (the replayed ledger legitimately restarts at 0).  ``degraded``
+    # lists rids admitted guidance-shed into the cond lane.
+    incarnations: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    degraded: Tuple[int, ...] = ()
 
     def locate(self, rid: int) -> Tuple[Optional[str], Optional[int]]:
         """(lane, slot) currently holding ``rid``, or (None, None)."""
@@ -103,6 +110,7 @@ class LedgerConservationMonitor:
 
     def __init__(self):
         self._prev: Dict[int, float] = {}
+        self._inc: Dict[int, int] = {}
 
     def check(self, view: RoundView) -> List[dict]:
         out = []
@@ -110,6 +118,12 @@ class LedgerConservationMonitor:
             device = view.nfes_device.get(rid)
             if device is None:
                 continue  # not read back yet this round (e.g. idle lane)
+            # a replay legitimately resets the device ledger to 0: drop
+            # the monotonicity baseline when the incarnation bumps
+            inc = view.incarnations.get(rid, 0)
+            if inc != self._inc.get(rid, 0):
+                self._prev.pop(rid, None)
+                self._inc[rid] = inc
             lane, slot = view.locate(rid)
             if abs(device - expected) > LEDGER_ATOL:
                 out.append(
@@ -240,7 +254,72 @@ class CapacityMonitor:
         }
 
 
-DEFAULT_MONITORS = (LedgerConservationMonitor, LaneLadderMonitor, CapacityMonitor)
+class RecoveryMonitor:
+    """Fault-recovery sanity (DESIGN.md §17): incarnations never regress
+    (a replayed request cannot un-replay), replay counts stay bounded,
+    and a guidance-shed (degraded) request lives only in the cond lane
+    with a single-entry history — degradation is an admission-time lane
+    decision, never a mid-ladder jump."""
+
+    name = "recovery"
+    max_incarnations = 8  # far above the batcher's own replay cap
+
+    def __init__(self):
+        self._inc: Dict[int, int] = {}
+
+    def check(self, view: RoundView) -> List[dict]:
+        out = []
+        for rid, inc in view.incarnations.items():
+            prev = self._inc.get(rid, 0)
+            if inc < prev:
+                out.append(
+                    {
+                        "monitor": self.name, "step": view.step, "rid": rid,
+                        "lane": None, "slot": None,
+                        "message": (
+                            f"request {rid}: incarnation regressed "
+                            f"{prev} -> {inc}"
+                        ),
+                    }
+                )
+            if inc > self.max_incarnations:
+                out.append(
+                    {
+                        "monitor": self.name, "step": view.step, "rid": rid,
+                        "lane": None, "slot": None,
+                        "message": (
+                            f"request {rid}: replayed {inc} times "
+                            f"(runaway recovery loop)"
+                        ),
+                    }
+                )
+            self._inc[rid] = max(inc, prev)
+        for rid in view.degraded:
+            lane, slot = view.locate(rid)
+            if lane is None:
+                continue  # queued or completed
+            hist = tuple(view.lane_history.get(rid, ()))
+            if lane != "cond" or hist != ("cond",):
+                out.append(
+                    {
+                        "monitor": self.name, "step": view.step, "rid": rid,
+                        "lane": lane, "slot": slot,
+                        "message": (
+                            f"degraded request {rid} resident in lane "
+                            f"{lane!r} with history {list(hist)} (must be "
+                            f"cond-only)"
+                        ),
+                    }
+                )
+        return out
+
+
+DEFAULT_MONITORS = (
+    LedgerConservationMonitor,
+    LaneLadderMonitor,
+    CapacityMonitor,
+    RecoveryMonitor,
+)
 
 
 class MonitorSuite:

@@ -15,10 +15,21 @@ Layering (DESIGN.md §7, §12):
                   sync at `BatcherConfig(horizon>1)`;
   telemetry     — NFE ledgers, latency, realized savings, dispatch
                   economics (`ServingTelemetry`), folded from the obs
-                  layer's event bus (repro.obs, DESIGN.md §14).
+                  layer's event bus (repro.obs, DESIGN.md §14);
+  faults        — deterministic fault injection (`FaultPlan`,
+                  `FaultInjector`) + the batcher's request-level replay
+                  recovery and the guidance-aware `OverloadPolicy`
+                  degradation ladder (DESIGN.md §17).
 """
 from repro.obs import ObsConfig
-from repro.serving.batcher import BatcherConfig, StepBatcher
+from repro.serving.batcher import BatcherConfig, OverloadPolicy, StepBatcher
+from repro.serving.faults import (
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    seeded_plan,
+)
 from repro.serving.engine import (
     EngineConfig,
     GuidedEngine,
@@ -35,8 +46,13 @@ __all__ = [
     "BatcherConfig",
     "ContinuousScheduler",
     "EngineConfig",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
     "GuidedEngine",
+    "InjectedFault",
     "ObsConfig",
+    "OverloadPolicy",
     "Request",
     "ServingTelemetry",
     "StepBatcher",
@@ -44,4 +60,5 @@ __all__ = [
     "linear_ag_generate",
     "pad_prompts",
     "policy_generate",
+    "seeded_plan",
 ]

@@ -108,6 +108,7 @@ from repro.serving.guided_decode import (
     linear_lane_horizon,
     linear_lane_step,
 )
+from repro.serving.faults import FaultInjector, FaultPlan, InjectedFault
 from repro.serving.telemetry import ServingTelemetry
 from repro.sharding.partition import (
     serving_rules,
@@ -118,6 +119,60 @@ from repro.sharding.partition import (
 
 # ladder rank: transitions must strictly increase (never backwards)
 LANE_ORDER = ("guided", "linear", "cond")
+
+
+@dataclasses.dataclass
+class OverloadPolicy:
+    """Guidance-aware graceful degradation (DESIGN.md §17).
+
+    The NFE ladder gives serving a *quality-aware* shedding axis the
+    usual queue-or-drop tradeoff lacks: under pressure, a guided request
+    can be admitted straight into the cond lane — it still completes,
+    streams tokens, and pays 1 NFE/step (and half the pages), it just
+    loses classifier-free guidance.  Degraded admissions carry an
+    explicit per-request ``degraded`` flag through telemetry.
+
+    Triggers (any that are configured):
+
+    * ``degrade_on_pressure`` — the paged admission gate cannot fit the
+      request's 2-branch worst case but CAN fit the 1-branch one:
+      degrade instead of queueing behind the exhausted pool;
+    * ``free_page_frac`` — pool free fraction below this: degrade every
+      guided admission while pressure lasts;
+    * ``queue_depth`` — pending queue deeper than this: degrade.
+
+    ``deadline_steps`` (eviction) is the last rung: a request still
+    *queued* more than this many steps past its arrival is evicted (it
+    never ran; telemetry marks it ``evicted`` with reason).  None
+    disables eviction — degradation alone never drops a request.
+    """
+
+    degrade_on_pressure: bool = True
+    free_page_frac: Optional[float] = None
+    queue_depth: Optional[int] = None
+    deadline_steps: Optional[int] = None
+
+    def __post_init__(self):
+        if self.free_page_frac is not None and not (
+            0.0 <= self.free_page_frac <= 1.0
+        ):
+            raise ValueError(
+                f"free_page_frac must be in [0, 1]: {self.free_page_frac}"
+            )
+        if self.queue_depth is not None and self.queue_depth < 0:
+            raise ValueError(
+                f"queue_depth must be >= 0: {self.queue_depth}"
+            )
+        if self.deadline_steps is not None and self.deadline_steps < 1:
+            raise ValueError(
+                f"deadline_steps must be >= 1: {self.deadline_steps}"
+            )
+
+    def past_deadline(self, step: int, arrival_step: int) -> bool:
+        return (
+            self.deadline_steps is not None
+            and step - arrival_step > self.deadline_steps
+        )
 
 
 @dataclasses.dataclass
@@ -225,10 +280,42 @@ class StepBatcher:
         coeffs: Optional[WindowCoeffs] = None,
         mesh=None,
         obs: Optional[ObsConfig] = None,
+        faults: Optional[FaultPlan] = None,
+        overload: Optional[OverloadPolicy] = None,
     ):
         self.api = api
         self.config = config
         self.bc = batch_config or BatcherConfig(max_slots=config.max_batch)
+        # Fault injection + recovery (DESIGN.md §17): the injector is
+        # armed ONLY when a plan carries batcher-level faults — every
+        # production seam guards on `self._injector is not None`, so an
+        # unarmed batcher pays nothing and the goldens stay bit-identical.
+        self._injector = (
+            FaultInjector(faults)
+            if faults is not None and faults.batcher_faults
+            else None
+        )
+        self.overload = overload
+        # expected NFEs accrued by discarded (replayed) incarnations; the
+        # `replayed_nfes` ledger column — conservation under faults is
+        # nfes_device + replayed_nfes == nfes_expected
+        self._replayed_nfes: Dict[int, float] = {}
+        # rid -> replay count; bumped by _recover_lane, consumed by the
+        # monitors (the ledger monitor resets its monotonicity baseline
+        # at a bump) and capped to break runaway replay loops
+        self._incarnation: Dict[int, int] = {}
+        self._max_replays = 3
+        self._degraded: set = set()  # rids admitted guidance-shed
+        # replay journal: everything needed to re-admit and bit-identically
+        # replay a request whose lane died (B=1 parity makes the replayed
+        # decode independent of co-scheduled neighbours)
+        self._journal: Dict[int, dict] = {}
+        # With a fault plan armed, horizon>1 runs force synchronous
+        # fetch: the async pipeline keeps a horizon in flight whose
+        # launch snapshot predates the recovery's requeue, and replaying
+        # against in-flight donated buffers is not tractable.  Unarmed
+        # runs keep the configured double-buffering.
+        self._async_fetch = bool(self.bc.async_fetch) and self._injector is None
         # Observability spine (DESIGN.md §14): one event bus carries the
         # full lifecycle/round/compile/monitor stream; telemetry consumes
         # it, monitors check invariants each round over host mirrors, the
@@ -465,30 +552,41 @@ class StepBatcher:
     def submit(self, request: Request, arrival_step: int = 0) -> int:
         """Queue a request; it becomes admissible at ``arrival_step`` (in
         batcher decode steps — the unit of simulated churn)."""
-        if request.linear:
-            assert request.guided, "linear requires a guided request"
-            assert self.coeffs is not None, (
+        # request validation raises (never asserts): submissions are user
+        # input and must survive python -O
+        if request.linear and not request.guided:
+            raise ValueError("Request.linear requires a guided request")
+        if request.linear and self.coeffs is None:
+            raise ValueError(
                 "Request.linear needs WindowCoeffs (pass coeffs= to "
                 "StepBatcher; fit via core.linear_ag.fit_ols_window or load "
                 "the serve-time artifact)"
             )
-        assert request.policy in self._policy_index, (
-            f"unknown guidance policy {request.policy!r}; registered: "
-            f"{tuple(self._policy_index)}"
-        )
+        if request.policy not in self._policy_index:
+            raise ValueError(
+                f"unknown guidance policy {request.policy!r}; registered: "
+                f"{tuple(self._policy_index)}"
+            )
         if request.policy != "default":
-            assert request.guided, (
-                f"policy {request.policy!r} requires guided=True (unguided "
-                "traffic is policy-free conditional decoding)"
-            )
-            assert not request.linear, (
-                "Request.linear belongs to the default ladder; policy "
-                f"{request.policy!r} never enters the LinearAG lane"
-            )
+            if not request.guided:
+                raise ValueError(
+                    f"policy {request.policy!r} requires guided=True "
+                    "(unguided traffic is policy-free conditional decoding)"
+                )
+            if request.linear:
+                raise ValueError(
+                    "Request.linear belongs to the default ladder; policy "
+                    f"{request.policy!r} never enters the LinearAG lane"
+                )
         rid = self._next_rid
         self._next_rid += 1
         self._pending.append(_Pending(rid, request, arrival_step))
         self._reqs[rid] = request
+        # replay journal (DESIGN.md §17): the request spec + arrival is
+        # everything recovery needs to re-admit; decoding is greedy, so
+        # the "RNG key" of the journal is the deterministic argmax rule
+        # and the emitted-token record lives in self._gen
+        self._journal[rid] = {"request": request, "arrival_step": arrival_step}
         self._policy_of[rid] = self._policies[self._policy_index[request.policy]]
         self.telemetry.on_submit(
             rid, len(request.prompt), request.max_new_tokens, request.guided,
@@ -614,14 +712,19 @@ class StepBatcher:
                 self._pool_pages(), self.bc.page_size
             )
 
-    def _page_headroom(self, req: Request, S: int) -> bool:
+    def _page_headroom(
+        self, req: Request, S: int, branches: Optional[int] = None
+    ) -> bool:
         """Conservative admission gate: the pool must hold this request's
         worst-case page demand (no sharing credit) on top of every resident
         request's outstanding worst case, so the pre-dispatch top-ups
         (``_ensure_pages``) can never exhaust mid-flight — exhaustion
-        queues the admission instead."""
+        queues the admission instead.  ``branches`` overrides the request's
+        own branch count so the overload policy can probe the 1-branch
+        (degraded) footprint of a guided request."""
         self._ensure_pool()
-        branches = 2 if req.guided else 1
+        if branches is None:
+            branches = 2 if req.guided else 1
         last = S + max(req.max_new_tokens - 1, 0)  # end of the write range
         need = branches * paged_kv.pages_for(last, self.bc.page_size)
         outstanding = sum(self._reserved.values())
@@ -844,7 +947,43 @@ class StepBatcher:
                 for p in self._pending
             )
 
+    def _evict_pending(self):
+        """Deadline eviction (the overload policy's last rung): a request
+        still *queued* more than ``deadline_steps`` past its arrival is
+        dropped before it ever runs — telemetry marks it evicted with a
+        reason, and it never appears in ``completed``."""
+        if self.overload is None or self.overload.deadline_steps is None:
+            return
+        evicted = [
+            p for p in self._pending
+            if self.overload.past_deadline(self._step_idx, p.arrival_step)
+        ]
+        for p in evicted:
+            self._pending.remove(p)
+            self.telemetry.on_evict(p.rid, self._step_idx, reason="deadline")
+
+    def _should_degrade(self, req: Request) -> bool:
+        """Proactive degradation triggers: queue depth and pool free
+        fraction (the reactive trigger — a failed 2-branch headroom probe
+        — lives inside ``_admit``)."""
+        ov = self.overload
+        if ov is None or not req.guided:
+            return False
+        # depth behind the candidate (it is still in _pending itself)
+        if (
+            ov.queue_depth is not None
+            and len(self._pending) - 1 > ov.queue_depth
+        ):
+            return True
+        if ov.free_page_frac is not None and self._paged:
+            self._ensure_pool()
+            total = self._pool.num_pages - 1  # page 0 is the sentinel
+            if total > 0 and self._pool.free_pages / total < ov.free_page_frac:
+                return True
+        return False
+
     def _admit_pending(self):
+        self._evict_pending()
         admitted = []
         for p in self._pending:
             if (
@@ -853,32 +992,52 @@ class StepBatcher:
             ):
                 continue
             req = p.request
-            assert len(req.prompt) + req.max_new_tokens + 1 <= self.cache_len, (
-                f"request {p.rid} does not fit cache_len={self.cache_len}"
-            )
-            if self._admit(p.rid, req):
+            if len(req.prompt) + req.max_new_tokens + 1 > self.cache_len:
+                raise ValueError(
+                    f"request {p.rid} does not fit cache_len={self.cache_len}"
+                )
+            if self._admit(p.rid, req, degraded=self._should_degrade(req)):
                 admitted.append(p)
         for p in admitted:
             self._pending.remove(p)
 
-    def _admit(self, rid: int, req: Request) -> bool:
+    def _admit(self, rid: int, req: Request, degraded: bool = False) -> bool:
         """Prefill at the request's own prompt length and overwrite the slot
         row wholesale — full-row overwrite (caches AND history) is what
         makes slot reuse safe (no KV or score-history bleed from the
         previous tenant).  Prefill runs before the slot is taken so the
-        first admission can size the history buffers from the logits."""
+        first admission can size the history buffers from the logits.
+
+        ``degraded`` admits a guided request guidance-shed into the cond
+        lane (DESIGN.md §17): it still completes and streams at 1 NFE/step
+        and a 1-branch page footprint, it just loses classifier-free
+        guidance.  A guided request whose 2-branch worst case no longer
+        fits the pool is degraded reactively here (when the overload
+        policy allows) instead of queueing behind the exhausted pool."""
+        guided = req.guided and not degraded
         toks_c, S = pad_prompts([req], use_negative=False)
-        if self._paged and not self._page_headroom(req, S):
-            return False  # pool exhausted: stay queued, retried next step
+        if self._paged:
+            if guided and not self._page_headroom(req, S, branches=2):
+                if (
+                    self.overload is not None
+                    and self.overload.degrade_on_pressure
+                    and self._page_headroom(req, S, branches=1)
+                ):
+                    guided = False
+                    degraded = True
+                else:
+                    return False  # pool exhausted: stay queued, retried
+            elif not guided and not self._page_headroom(req, S, branches=1):
+                return False
         logits_c, ext_c = self._prefill(self.params, toks_c, self.cache_len)
         if self._vocab is None:
             self._vocab = int(logits_c.shape[-1])
         toks_u = ext_u = logits_u = None
-        if req.guided:
+        if guided:
             toks_u, _ = pad_prompts([req], use_negative=True)
             logits_u, ext_u = self._prefill(self.params, toks_u, self.cache_len)
         first = jnp.argmax(logits_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        lane = self.guided if req.guided else self.cond
+        lane = self.guided if guided else self.cond
         slot = self._take_slot(lane)
         if slot is None:
             return False
@@ -888,7 +1047,7 @@ class StepBatcher:
             # pages are acquired), then install prefill pages + tables; the
             # recurrent (non-attention) rows still copy contiguously
             last = S + max(req.max_new_tokens - 1, 0)
-            for br in ("c", "u") if req.guided else ("c",):
+            for br in ("c", "u") if guided else ("c",):
                 self._reserved[(rid, br)] = paged_kv.pages_for(
                     last, self.bc.page_size
                 )
@@ -916,7 +1075,7 @@ class StepBatcher:
         extra = dict(
             warm=st.warm.at[slot].set(0),
             linear_opt=st.linear_opt.at[slot].set(
-                bool(req.linear) and self.coeffs is not None
+                bool(req.linear) and self.coeffs is not None and guided
             ),
         )
         if st.pstate is not None:  # guided lane: per-slot policy rows
@@ -961,6 +1120,9 @@ class StepBatcher:
         self._expected_rid[rid] = 0.0
         self.lane_history[rid] = [lane.name]
         self.telemetry.on_admit(rid, self._step_idx)
+        if degraded:
+            self._degraded.add(rid)
+            self.telemetry.on_degrade(rid, self._step_idx)
         # degenerate budget: the prefill token alone satisfies it
         self._maybe_complete(rid, lane, slot, float(0.0))
         return True
@@ -1115,6 +1277,91 @@ class StepBatcher:
         ):
             self._migrate_to_linear(rid, slot)
 
+    # -- fault recovery (DESIGN.md §17) --------------------------------------
+
+    def _recover_lane(self, lane: _Lane, reason: str, step: Optional[int] = None):
+        """Quarantine a faulted lane and requeue its residents for replay.
+
+        The lane's device state is discarded wholesale — after a mid-
+        dispatch fault its donated buffers may be invalid, so recovery
+        never touches them: page ownership is released on the HOST ledgers
+        only, and ``_ensure_lane`` rebuilds the lane at the same bucket on
+        next use (the one-executable-per-(lane, bucket) invariant holds —
+        the rebuilt state reuses the existing executable).
+
+        Each resident's accrued expectation moves to the ``replayed_nfes``
+        ledger column, so conservation under faults closes as
+        ``nfes_device + replayed_nfes == nfes_expected``; the replayed
+        incarnation restarts its device ledger at 0.  B=1 parity makes the
+        replayed decode bit-identical to the fault-free run."""
+        step = self._step_idx if step is None else step
+        for slot, rid in enumerate(lane.rids):
+            if rid is None:
+                continue
+            if self._paged:
+                for br in ("c", "u"):
+                    self._reserved.pop((rid, br), None)
+                    self._pool.release_owner((rid, br))
+            self._span.pop(rid, None)
+            discarded = self._expected_rid.get(rid, 0.0)
+            self._replayed_nfes[rid] = (
+                self._replayed_nfes.get(rid, 0.0) + discarded
+            )
+            self._expected_rid[rid] = 0.0
+            self._nfes_seen[rid] = 0.0
+            inc = self._incarnation.get(rid, 0) + 1
+            if inc > self._max_replays:
+                raise RuntimeError(
+                    f"request {rid} faulted {inc} times (> max_replays="
+                    f"{self._max_replays}); last fault: {reason}"
+                )
+            self._incarnation[rid] = inc
+            self._gen.pop(rid, None)
+            self._host_crossed.pop(rid, None)
+            self._guided_steps_host.pop(rid, None)
+            self.lane_history.pop(rid, None)
+            j = self._journal[rid]
+            self._pending.append(_Pending(rid, j["request"], j["arrival_step"]))
+            self.telemetry.on_replay(rid, step, discarded, reason=reason)
+        lane.rids = [None] * lane.capacity
+        lane.state = None
+
+    def _dispatch_guard(self, lane: _Lane, fn) -> bool:
+        """Run one lane's dispatch under the recovery net: a due
+        ``host_error`` fault raises at the seam, and any runtime fault
+        (injected or real) quarantines the lane and requeues its residents
+        instead of killing the run.  Returns False when the lane faulted
+        (its state is gone — skip its fetch/postprocess this round)."""
+        try:
+            if self._injector is not None:
+                spec = self._injector.take_host_error(self._step_idx, lane.name)
+                if spec is not None:
+                    raise InjectedFault(spec)
+            fn()
+            return True
+        except (FloatingPointError, RuntimeError) as e:
+            self._recover_lane(lane, f"dispatch:{type(e).__name__}")
+            return False
+
+    def replay_journal(self, rid: int) -> dict:
+        """Plain-data view of one request's replay journal: everything
+        needed to re-admit it plus its live decode record (decoding is
+        greedy/deterministic, so the journal needs no sampler state)."""
+        j = self._journal[rid]
+        req = j["request"]
+        return {
+            "rid": rid,
+            "arrival_step": j["arrival_step"],
+            "prompt": [int(t) for t in np.asarray(req.prompt)],
+            "max_new_tokens": int(req.max_new_tokens),
+            "guided": bool(req.guided),
+            "linear": bool(req.linear),
+            "policy": req.policy,
+            "gamma_bar": req.gamma_bar,
+            "incarnation": self._incarnation.get(rid, 0),
+            "tokens": list(self._gen.get(rid, [])),
+        }
+
     # -- the decode step -----------------------------------------------------
 
     def step(self) -> bool:
@@ -1126,6 +1373,15 @@ class StepBatcher:
         t0 = self.clock()
         compiles0 = self._compiles_total()
         self.profiler.on_round(self._round_idx)
+        if self._injector is not None and self._paged:
+            # fire/expire scheduled pool pressure BEFORE admission so the
+            # overload policy sees it; holding never steals pages already
+            # promised to residents (reserve=outstanding reservations)
+            self._ensure_pool()
+            self._injector.pool_pressure(
+                self._step_idx, self._pool,
+                reserve=sum(self._reserved.values()),
+            )
         self._admit_pending()
         self._ensure_pages()
 
@@ -1163,58 +1419,79 @@ class StepBatcher:
         # the mesh context matters at trace time only (first call per
         # bucket): the lane-state constraints and the model's logical-axis
         # annotations resolve against it and are baked into the executable
-        ran = False
-        dispatches = 0
+        g_ok = l_ok = c_ok = False
         with self._mesh_ctx():
             if g_active:
-                with self._compile_attr("guided", self.guided.capacity):
-                    _, st, _ = self._guided_step(
-                        self.params, self._install_pool(self.guided.state)
-                    )
-                    self.guided.state = self._extract_pool(st)
-                ran = True
-                dispatches += 1
+                def _g():
+                    with self._compile_attr("guided", self.guided.capacity):
+                        _, st, _ = self._guided_step(
+                            self.params, self._install_pool(self.guided.state)
+                        )
+                        self.guided.state = self._extract_pool(st)
+                g_ok = self._dispatch_guard(self.guided, _g)
             if l_active:
-                with self._compile_attr("linear", self.linear.capacity):
-                    _, st, _ = self._linear_step(
-                        self.params,
-                        self._install_pool(self.linear.state),
-                        self._beta,
-                    )
-                    self.linear.state = self._extract_pool(st)
-                ran = True
-                dispatches += 1
+                def _l():
+                    with self._compile_attr("linear", self.linear.capacity):
+                        _, st, _ = self._linear_step(
+                            self.params,
+                            self._install_pool(self.linear.state),
+                            self._beta,
+                        )
+                        self.linear.state = self._extract_pool(st)
+                l_ok = self._dispatch_guard(self.linear, _l)
             if c_active:
-                with self._compile_attr("cond", self.cond.capacity):
-                    _, st = self._cond_step(
-                        self.params, self._install_pool(self.cond.state)
-                    )
-                    self.cond.state = self._extract_pool(st)
-                ran = True
-                dispatches += 1
+                def _c():
+                    with self._compile_attr("cond", self.cond.capacity):
+                        _, st = self._cond_step(
+                            self.params, self._install_pool(self.cond.state)
+                        )
+                        self.cond.state = self._extract_pool(st)
+                c_ok = self._dispatch_guard(self.cond, _c)
+        ran = g_ok or l_ok or c_ok
+        # a faulted dispatch still closes the round: its residents' accrued
+        # expectation was just moved to the replayed column, and on_step
+        # must report this step's expected so the aggregate ledgers agree
+        faulted = (
+            (bool(g_active) and not g_ok)
+            or (bool(l_active) and not l_ok)
+            or (bool(c_active) and not c_ok)
+        )
+        dispatches = int(g_ok) + int(l_ok) + int(c_ok)
 
-        if ran:
-            fetched = jax.device_get(
-                {
-                    "g": (
-                        self.guided.state.tokens,
-                        self.guided.state.crossed,
-                        self.guided.state.nfes,
-                    )
-                    if g_active
-                    else None,
-                    "l": (
-                        self.linear.state.tokens,
-                        self.linear.state.crossed,
-                        self.linear.state.nfes,
-                    )
-                    if l_active
-                    else None,
-                    "c": (self.cond.state.tokens, self.cond.state.nfes)
-                    if c_active
-                    else None,
-                }
-            )
+        if ran or faulted:
+            fetched = {"g": None, "l": None, "c": None}
+            if ran:
+                fetched = jax.device_get(
+                    {
+                        "g": (
+                            self.guided.state.tokens,
+                            self.guided.state.crossed,
+                            self.guided.state.nfes,
+                        )
+                        if g_ok
+                        else None,
+                        "l": (
+                            self.linear.state.tokens,
+                            self.linear.state.crossed,
+                            self.linear.state.nfes,
+                        )
+                        if l_ok
+                        else None,
+                        "c": (self.cond.state.tokens, self.cond.state.nfes)
+                        if c_ok
+                        else None,
+                    }
+                )
+            if self._injector is not None:
+                for key, name in (("g", "guided"), ("l", "linear"),
+                                  ("c", "cond")):
+                    tup = fetched[key]
+                    if tup is not None:
+                        nf = self._injector.corrupt_nfes(
+                            self._step_idx, name, tup[-1]
+                        )
+                        if nf is not tup[-1]:
+                            fetched[key] = tup[:-1] + (nf,)
             dt = self.clock() - t0
             self._postprocess(fetched)
             self.telemetry.on_step(
@@ -1256,6 +1533,8 @@ class StepBatcher:
             nfes_device=dict(self._nfes_seen),
             nfes_expected=dict(self._expected_rid),
             lane_history={k: tuple(v) for k, v in self.lane_history.items()},
+            incarnations=dict(self._incarnation),
+            degraded=tuple(sorted(self._degraded)),
         )
 
     def _check_round(self, step: int) -> None:
@@ -1263,6 +1542,20 @@ class StepBatcher:
             self.monitors.on_round(self._round_view(step))
 
     def _postprocess(self, fetched):
+        # Always-on fault detection (DESIGN.md §17): a non-finite NFE
+        # ledger means the lane's device state is numerically poisoned
+        # (real NaN propagation or an injected nan_logits fault) —
+        # quarantine the lane and replay its residents rather than
+        # streaming corrupt tokens.
+        for key, lane in (
+            ("c", self.cond), ("l", self.linear), ("g", self.guided)
+        ):
+            tup = fetched.get(key)
+            if tup is not None and not np.isfinite(
+                np.asarray(tup[-1], np.float64)
+            ).all():
+                self._recover_lane(lane, "nan_readback")
+                fetched[key] = None
         # Snapshot the slot maps as they were when the step ran: migrations
         # below may hand a freed slot to another request, and that new
         # tenant must not consume the old tenant's fetched token.
@@ -1347,31 +1640,45 @@ class StepBatcher:
         with self._mesh_ctx():
             if rec["g_active"]:
                 beta = (self._beta,) if self._beta is not None else ()
-                with self._compile_attr("guided", self.guided.capacity):
-                    st, tr = self._guided_hor(
-                        self.params, self._install_pool(self.guided.state), *beta
-                    )
-                    self.guided.state = self._extract_pool(st)
-                rec["traces"]["g"] = tr
-                rec["dispatches"] += 1
+
+                def _g():
+                    with self._compile_attr("guided", self.guided.capacity):
+                        st, tr = self._guided_hor(
+                            self.params,
+                            self._install_pool(self.guided.state),
+                            *beta,
+                        )
+                        self.guided.state = self._extract_pool(st)
+                    rec["traces"]["g"] = tr
+
+                if self._dispatch_guard(self.guided, _g):
+                    rec["dispatches"] += 1
             if rec["l_active"]:
-                with self._compile_attr("linear", self.linear.capacity):
-                    st, tr = self._linear_hor(
-                        self.params,
-                        self._install_pool(self.linear.state),
-                        self._beta,
-                    )
-                    self.linear.state = self._extract_pool(st)
-                rec["traces"]["l"] = tr
-                rec["dispatches"] += 1
+
+                def _l():
+                    with self._compile_attr("linear", self.linear.capacity):
+                        st, tr = self._linear_hor(
+                            self.params,
+                            self._install_pool(self.linear.state),
+                            self._beta,
+                        )
+                        self.linear.state = self._extract_pool(st)
+                    rec["traces"]["l"] = tr
+
+                if self._dispatch_guard(self.linear, _l):
+                    rec["dispatches"] += 1
             if rec["c_active"]:
-                with self._compile_attr("cond", self.cond.capacity):
-                    st, tr = self._cond_hor(
-                        self.params, self._install_pool(self.cond.state)
-                    )
-                    self.cond.state = self._extract_pool(st)
-                rec["traces"]["c"] = tr
-                rec["dispatches"] += 1
+
+                def _c():
+                    with self._compile_attr("cond", self.cond.capacity):
+                        st, tr = self._cond_hor(
+                            self.params, self._install_pool(self.cond.state)
+                        )
+                        self.cond.state = self._extract_pool(st)
+                    rec["traces"]["c"] = tr
+
+                if self._dispatch_guard(self.cond, _c):
+                    rec["dispatches"] += 1
         # double buffering: enqueue the D2H copy now, so it lands while the
         # host is postprocessing the previous horizon
         for leaf in jax.tree.leaves(rec["traces"]):
@@ -1388,6 +1695,29 @@ class StepBatcher:
         H = self.bc.horizon
         fetched = jax.device_get(rec["traces"])
         step0 = rec["step0"]
+        if self._injector is not None:
+            # a nan_logits fault due anywhere inside [step0, step0+H)
+            # poisons this horizon's trace for its target lane
+            for key, name in (("g", "guided"), ("l", "linear"), ("c", "cond")):
+                tr = fetched[key]
+                if tr is not None:
+                    nf = self._injector.corrupt_nfes(
+                        step0 + H - 1, name, tr.nfes
+                    )
+                    if nf is not tr.nfes:
+                        fetched[key] = tr._replace(nfes=nf)
+        # always-on fault detection, mirroring the per-step path: a
+        # poisoned horizon is never priced (no expected accrual below) and
+        # its lane's residents are requeued for replay
+        for key, lane in (
+            ("c", self.cond), ("l", self.linear), ("g", self.guided)
+        ):
+            tr = fetched[key]
+            if tr is not None and not np.isfinite(
+                np.asarray(tr.nfes, np.float64)
+            ).all():
+                self._recover_lane(lane, "nan_readback", step=step0)
+                fetched[key] = None
         expected = 0.0
         for h in range(H):
             step = step0 + h
@@ -1487,6 +1817,12 @@ class StepBatcher:
             if not self._pending and self.total_active == 0 and inflight is None:
                 break
             self._ensure_cache_len()
+            if self._injector is not None and self._paged:
+                self._ensure_pool()
+                self._injector.pool_pressure(
+                    self._step_idx, self._pool,
+                    reserve=sum(self._reserved.values()),
+                )
             self._admit_pending()
             self._ensure_pages()
             rec = None
@@ -1494,7 +1830,10 @@ class StepBatcher:
                 rec = self._dispatch_horizon()
             elif inflight is None:
                 self._step_idx += self.bc.horizon  # idle tick toward arrivals
-            if self.bc.async_fetch:
+            # armed runs force synchronous fetch (_async_fetch): recovery
+            # requeues requests the in-flight horizon's launch snapshot
+            # predates, which the double-buffered pipeline cannot replay
+            if self._async_fetch:
                 if inflight is not None:
                     self._postprocess_horizon(inflight)
                 inflight = rec
@@ -1515,6 +1854,9 @@ class StepBatcher:
             return self.completed
         finally:
             self.profiler.close()  # run ended inside an open capture window
+            if self._injector is not None:
+                # return still-held fault pages so pool conservation closes
+                self._injector.release_all(self._pool)
 
     # -- reporting -----------------------------------------------------------
 
@@ -1539,6 +1881,8 @@ class StepBatcher:
                 "rounds_checked": self.monitors.rounds_checked,
                 "violations": list(self.monitors.violations),
             }
+        if self._injector is not None:
+            rep["faults"] = list(self._injector.fired)
         return rep
 
 

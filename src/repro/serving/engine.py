@@ -106,11 +106,12 @@ def pad_prompts(
             src = r.negative_prompt
         else:
             src = r.prompt[:1]  # BOS-only: context-free uncond branch
-        assert len(src) <= S, (
-            f"request {i}: context of length {len(src)} exceeds the batch "
-            f"window S={S} (negative prompts must not outgrow the longest "
-            f"conditional prompt)"
-        )
+        if len(src) > S:
+            raise ValueError(
+                f"request {i}: context of length {len(src)} exceeds the "
+                f"batch window S={S} (negative prompts must not outgrow "
+                f"the longest conditional prompt)"
+            )
         toks[i, S - len(src):] = src
     return jnp.asarray(toks), S
 
@@ -221,7 +222,11 @@ class GuidedEngine:
     def generate(self, requests: Sequence[Request]):
         cfgc = self.config
         B = len(requests)
-        assert B <= cfgc.max_batch
+        if B > cfgc.max_batch:
+            raise ValueError(
+                f"{B} requests exceed EngineConfig.max_batch="
+                f"{cfgc.max_batch}"
+            )
         max_new = max(r.max_new_tokens for r in requests)
         if any(r.policy != "default" for r in requests):
             # Non-default guidance policies decode per request through
@@ -492,7 +497,10 @@ def policy_generate(api, params, request: Request, config: EngineConfig,
     pol = get_policy(request.policy)
     if pol.name == "default":
         if request.linear:
-            assert coeffs is not None, "default-policy linear oracle needs coeffs"
+            if coeffs is None:
+                raise ValueError(
+                    "default-policy linear oracle needs window coeffs"
+                )
             return linear_ag_generate(api, params, request, config, coeffs)
         out = GuidedEngine(api, params, config).generate([request])
         n_guided = int(out["guided_steps_per_request"][0])

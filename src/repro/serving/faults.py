@@ -1,0 +1,278 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md §17).
+
+A chaos run is a *plan*, not a patch: ``FaultPlan`` is a plain-data,
+seeded spec (the same declarative shape as the harness JobSpecs) listing
+``FaultSpec`` entries that fire at existing seams of the stack:
+
+* ``worker_kill`` / ``worker_hang`` / ``worker_slow`` — cluster workers
+  (launch/cluster.py): the launcher maps them onto the worker argv
+  (``--self-kill`` / ``--hang`` / ``--slow-ms``) so the failure happens
+  in a real child process and supervision + respawn recover it;
+* ``host_error`` — a dispatch-time host exception in the batcher
+  (serving/batcher.py), standing in for a failed host callback or a
+  poisoned executable launch;
+* ``nan_logits`` — NaN corruption of one lane's device readback,
+  standing in for numerically-poisoned logits; the batcher's finite
+  check quarantines the lane and replays its residents;
+* ``pool_exhaust`` — page-pool pressure (serving/paged_kv.py): the
+  injector allocates and holds pages so admission headroom vanishes and
+  the overload/degradation path is exercised.
+
+Injection hooks are *pull*-shaped and armed only when a plan exists:
+production call sites guard on ``injector is not None`` and pay nothing
+otherwise — the golden fixtures stay bit-identical with no plan armed.
+Every fired fault is recorded in ``FaultInjector.fired`` so a chaos cell
+can assert the schedule actually executed.
+
+``FaultPlan`` round-trips through JSON so the cluster launcher can embed
+a plan in the workload file and each worker arms only its own slice
+(``plan.for_process``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# batcher-level kinds fire inside StepBatcher; worker-level kinds are
+# consumed by the cluster launcher when building worker argv
+BATCHER_KINDS = ("nan_logits", "host_error", "pool_exhaust")
+WORKER_KINDS = ("worker_kill", "worker_hang", "worker_slow")
+FAULT_KINDS = BATCHER_KINDS + WORKER_KINDS
+
+
+class InjectedFault(RuntimeError):
+    """Raised at a dispatch seam when a ``host_error`` fault fires; the
+    batcher's recovery path treats it exactly like a real runtime fault
+    (the lane's residents are requeued and replayed)."""
+
+    def __init__(self, spec: "FaultSpec"):
+        super().__init__(
+            f"injected {spec.kind} (step {spec.at_step}, "
+            f"target {spec.target!r})"
+        )
+        self.spec = spec
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.  ``at_step`` is a batcher decode-step index
+    for batcher kinds and ignored for worker kinds (those fire at
+    process start, before jax initializes — the seam the respawn path
+    recovers).  ``target`` names a lane ("guided"/"linear"/"cond") for
+    lane-scoped kinds, or None for any lane.  ``process`` scopes the
+    fault to one cluster worker (None = single-process / every worker).
+    ``pages``/``duration`` shape ``pool_exhaust``: hold that many pages
+    from ``at_step`` for ``duration`` steps (None = to end of run).
+    ``slow_ms`` shapes ``worker_slow``."""
+
+    kind: str
+    at_step: int = 0
+    target: Optional[str] = None
+    process: Optional[int] = None
+    once: bool = True
+    pages: int = 0
+    duration: Optional[int] = None
+    slow_ms: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}"
+            )
+        if self.at_step < 0:
+            raise ValueError(f"at_step must be >= 0: {self.at_step}")
+        if self.kind == "pool_exhaust" and self.pages < 1:
+            raise ValueError(
+                f"pool_exhaust needs pages >= 1, got {self.pages}"
+            )
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FaultSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded schedule of faults (plain data, JSON round-trippable)."""
+
+    seed: int = 0
+    faults: Tuple[FaultSpec, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+    @property
+    def batcher_faults(self) -> Tuple[FaultSpec, ...]:
+        return tuple(f for f in self.faults if f.kind in BATCHER_KINDS)
+
+    @property
+    def worker_faults(self) -> Tuple[FaultSpec, ...]:
+        return tuple(f for f in self.faults if f.kind in WORKER_KINDS)
+
+    def for_process(self, process_id: int) -> "FaultPlan":
+        """The slice of this plan one cluster worker should arm: its
+        batcher-level faults, scoped to it (or unscoped)."""
+        return FaultPlan(
+            seed=self.seed,
+            faults=tuple(
+                f for f in self.batcher_faults
+                if f.process is None or f.process == process_id
+            ),
+        )
+
+    def to_json(self) -> dict:
+        return {
+            "seed": self.seed,
+            "faults": [f.to_json() for f in self.faults],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FaultPlan":
+        return cls(
+            seed=d.get("seed", 0),
+            faults=tuple(FaultSpec.from_json(f) for f in d.get("faults", ())),
+        )
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def seeded_plan(
+    seed: int,
+    kinds: Sequence[str],
+    *,
+    max_step: int = 16,
+    targets: Sequence[str] = ("guided", "cond"),
+    pages: int = 4,
+    duration: Optional[int] = 8,
+) -> FaultPlan:
+    """Derive a deterministic fault schedule from a seed: one fault per
+    requested kind, at a pseudorandom step in [1, max_step) with a
+    pseudorandom lane target — the chaos harness's matrix generator.
+    The same (seed, kinds) always produces the same plan."""
+    rng = np.random.default_rng(seed)
+    faults = []
+    for kind in kinds:
+        step = int(rng.integers(1, max(max_step, 2)))
+        target = (
+            str(targets[int(rng.integers(0, len(targets)))])
+            if kind in ("nan_logits", "host_error")
+            else None
+        )
+        faults.append(
+            FaultSpec(
+                kind=kind,
+                at_step=step,
+                target=target,
+                pages=pages if kind == "pool_exhaust" else 0,
+                duration=duration if kind == "pool_exhaust" else None,
+            )
+        )
+    return FaultPlan(seed=seed, faults=tuple(faults))
+
+
+class FaultInjector:
+    """Runtime arm of a :class:`FaultPlan` inside one batcher.
+
+    The batcher calls the three hooks below at its seams; each returns
+    quickly when nothing is due.  Fired faults are appended to
+    ``self.fired`` as plain dicts (kind, step, target) so tests and the
+    chaos report can assert the schedule executed.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.fired: List[dict] = []
+        self._consumed: set = set()
+        # pool_exhaust bookkeeping: spec index -> pages currently held
+        self._held: Dict[int, int] = {}
+
+    @property
+    def armed(self) -> bool:
+        return bool(self.plan.batcher_faults)
+
+    def _due(self, kind: str, step: int, target: Optional[str]):
+        for i, f in enumerate(self.plan.faults):
+            if f.kind != kind or step < f.at_step:
+                continue
+            if f.target is not None and target is not None and f.target != target:
+                continue
+            if f.once and i in self._consumed:
+                continue
+            return i, f
+        return None, None
+
+    def _record(self, i: int, f: FaultSpec, step: int, target) -> FaultSpec:
+        self._consumed.add(i)
+        self.fired.append(
+            {"kind": f.kind, "step": int(step), "target": target}
+        )
+        return f
+
+    def take_host_error(self, step: int, lane: str) -> Optional[FaultSpec]:
+        """Due ``host_error`` for this lane's dispatch, if any (consumed)."""
+        i, f = self._due("host_error", step, lane)
+        return self._record(i, f, step, lane) if f is not None else None
+
+    def corrupt_nfes(self, step: int, lane: str, nfes: np.ndarray):
+        """Apply a due ``nan_logits`` fault to one lane's fetched NFE
+        ledger: returns a NaN-poisoned copy (the batcher's finite check
+        detects it downstream, exactly as it would a real NaN), or the
+        array unchanged."""
+        i, f = self._due("nan_logits", step, lane)
+        if f is None:
+            return nfes
+        self._record(i, f, step, lane)
+        return np.full_like(np.asarray(nfes, np.float32), np.nan)
+
+    def pool_pressure(self, step: int, pool, reserve: int = 0) -> None:
+        """Fire/expire ``pool_exhaust`` faults against a live PagePool:
+        due specs alloc-and-hold ``pages`` pages under a fault-owned
+        table; specs past ``at_step + duration`` release them.  Held
+        pages shrink admission headroom, which is precisely the pressure
+        the overload policy degrades under.  ``reserve`` pages are never
+        taken — the batcher passes its residents' outstanding worst-case
+        reservations, so injected pressure starves *admission*, not the
+        in-flight decode's guaranteed top-ups."""
+        if pool is None:
+            return
+        for i, f in enumerate(self.plan.faults):
+            if f.kind != "pool_exhaust":
+                continue
+            owner = ("__fault__", i)
+            if i in self._held:
+                if f.duration is not None and step >= f.at_step + f.duration:
+                    pool.release_owner(owner)
+                    del self._held[i]
+                continue
+            if i in self._consumed or step < f.at_step:
+                continue
+            held = 0
+            for j in range(f.pages):
+                if pool.free_pages <= reserve or not pool.can_allocate(1):
+                    break
+                pool.assign(owner, j, pool.alloc())
+                held += 1
+            self._held[i] = held
+            self._record(i, f, step, None)
+
+    def release_all(self, pool) -> None:
+        """Return every still-held fault page (end-of-run cleanup so the
+        pool drain/conservation checks can close)."""
+        if pool is None:
+            return
+        for i in list(self._held):
+            pool.release_owner(("__fault__", i))
+            del self._held[i]

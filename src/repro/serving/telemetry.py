@@ -76,7 +76,18 @@ class RequestRecord:
     complete_step: Optional[int] = None
     tokens_out: int = 0
     nfes: float = 0.0  # device ledger at completion (decode NFEs)
-    reason: str = ""  # "budget" | "eos"
+    reason: str = ""  # "budget" | "eos" | "evicted:<why>"
+    # fault recovery (DESIGN.md §17): how many times this request was
+    # requeued after a lane fault, and the expected NFEs its discarded
+    # incarnations had accrued (the `replayed_nfes` ledger column —
+    # conservation closes as nfes_device + replayed_nfes == nfes_expected)
+    replays: int = 0
+    replayed_nfes: float = 0.0
+    # graceful degradation: admitted guidance-shed into the cond lane
+    degraded: bool = False
+    # load shedding: evicted from the queue past its deadline (never ran)
+    evicted: bool = False
+    t_replay: Optional[float] = None  # last replay's timestamp (MTTR start)
     # wall-clock stamps (bus-event timestamps): TTFT/TPOT inputs.  The
     # first token streams at admission (the prefill emits it), so
     # t_first is the admit event's timestamp.
@@ -111,6 +122,15 @@ class RequestRecord:
         if self.tokens_out <= 1:
             return None
         return (self.t_complete - self.t_first) / (self.tokens_out - 1)
+
+    @property
+    def mttr_s(self) -> Optional[float]:
+        """Time from the LAST fault-triggered replay to completion — the
+        request-level mean-time-to-recovery input; None for requests
+        that never replayed or never completed."""
+        if self.t_replay is None or self.t_complete is None:
+            return None
+        return self.t_complete - self.t_replay
 
 
 def _pctl_ms(vals_s: List[float]) -> dict:
@@ -190,6 +210,28 @@ class ServingTelemetry:
             nfes=float(nfes), tokens_out=int(tokens_out), reason=str(reason),
         )
 
+    def on_replay(self, rid, step, replayed_nfes, reason="fault"):
+        """Request requeued for replay after a lane fault discarded its
+        in-flight state; ``replayed_nfes`` is the expected-NFE ledger the
+        discarded incarnation had accrued (DESIGN.md §17)."""
+        self.bus.publish(
+            "replay", cat=CAT_REQUEST, rid=int(rid), step=int(step),
+            replayed_nfes=float(replayed_nfes), reason=str(reason),
+        )
+
+    def on_degrade(self, rid, step):
+        """Guided request admitted guidance-shed into the cond lane."""
+        self.bus.publish(
+            "degrade", cat=CAT_REQUEST, rid=int(rid), step=int(step)
+        )
+
+    def on_evict(self, rid, step, reason="deadline"):
+        """Queued request evicted (load shedding): it never ran."""
+        self.bus.publish(
+            "evict", cat=CAT_REQUEST, rid=int(rid), step=int(step),
+            reason=str(reason),
+        )
+
     # -- per-step accounting (publish side) -----------------------------------
 
     def on_step(
@@ -259,6 +301,29 @@ class ServingTelemetry:
         elif ev.name == "migrate":
             self.requests[a["rid"]].migrated_step = a["step"]
             self.registry.counter("requests.migrated").inc()
+        elif ev.name == "replay":
+            r = self.requests[a["rid"]]
+            r.replays += 1
+            r.replayed_nfes += a["replayed_nfes"]
+            # the replayed incarnation restarts from admission: its
+            # lifecycle steps belong to the discarded run
+            r.crossed_step = None
+            r.linear_step = None
+            r.migrated_step = None
+            r.t_replay = ev.ts
+            self.registry.counter("requests.replayed").inc()
+            self.registry.counter("nfes.replayed").inc(a["replayed_nfes"])
+            self.registry.counter(f"fault.{a['reason']}").inc()
+        elif ev.name == "degrade":
+            r = self.requests[a["rid"]]
+            if not r.degraded:
+                r.degraded = True
+                self.registry.counter("requests.degraded").inc()
+        elif ev.name == "evict":
+            r = self.requests[a["rid"]]
+            r.evicted = True
+            r.reason = f"evicted:{a['reason']}"
+            self.registry.counter("requests.evicted").inc()
         elif ev.name == "complete":
             r = self.requests[a["rid"]]
             r.complete_step = a["step"]
@@ -280,6 +345,10 @@ class ServingTelemetry:
             if r.guided and r.baseline_nfes > 0:
                 self.registry.histogram("request.savings_pct").observe(
                     r.savings_pct
+                )
+            if r.mttr_s is not None:
+                self.registry.histogram("recovery.mttr_ms").observe(
+                    r.mttr_s * 1e3
                 )
         elif ev.name == "round":
             self._consume_round(ev)
@@ -421,6 +490,10 @@ class ServingTelemetry:
                         r.tpot_s * 1e3 if r.tpot_s is not None else None
                     ),
                     "reason": r.reason,
+                    "replays": r.replays,
+                    "replayed_nfes": r.replayed_nfes,
+                    "degraded": r.degraded,
+                    "evicted": r.evicted,
                 }
                 for r in recs
             },
@@ -438,6 +511,29 @@ class ServingTelemetry:
                 "tokens_out": tokens_total,
                 "nfes_device": nfes_total,
                 "nfes_expected": self.nfes_expected,
+                # fault-recovery ledger column (DESIGN.md §17): expected
+                # NFEs accrued by discarded (replayed) incarnations.
+                # Conservation under faults closes as
+                #   nfes_device + replayed_nfes == nfes_expected
+                # (0 with no plan armed, reducing to the plain check).
+                "replayed_nfes": sum(r.replayed_nfes for r in recs),
+                "num_replays": sum(r.replays for r in recs),
+                "num_degraded": sum(1 for r in recs if r.degraded),
+                "num_evicted": sum(1 for r in recs if r.evicted),
+                # shed rate: fraction of submitted requests that lost
+                # guidance (degraded) or never ran (evicted)
+                "shed_rate_pct": (
+                    100.0
+                    * sum(1 for r in recs if r.degraded or r.evicted)
+                    / len(recs)
+                    if recs
+                    else 0.0
+                ),
+                # mean-time-to-recovery: last replay -> completion, over
+                # requests that replayed and completed
+                "mttr_ms": _pctl_ms(
+                    [r.mttr_s for r in done if r.mttr_s is not None]
+                ),
                 "baseline_nfes": base_total,
                 "lane_steps": lane_steps,
                 # every LinearAG slot-step replaced one unconditional network

@@ -37,6 +37,7 @@ from repro.launch.cluster import (
     request_to_json,
     run_elastic_rounds,
     shard_requests,
+    strip_fault_flags,
 )
 from repro.launch.mesh import (
     make_host_mesh,
@@ -120,6 +121,10 @@ def test_cluster_config_validates_before_spawn(tmp_path):
         ClusterConfig(timeout_s=0)
     with pytest.raises(ValueError, match="poll_s"):
         ClusterConfig(poll_s=0)
+    with pytest.raises(ValueError, match="max_respawns"):
+        ClusterConfig(max_respawns=-1)
+    with pytest.raises(ValueError, match="respawn_backoff_s"):
+        ClusterConfig(respawn_backoff_s=-0.5)
 
 
 def test_request_json_round_trip():
@@ -266,6 +271,109 @@ def test_launch_cluster_ignores_stale_reports(tmp_path):
     cfg = _cfg(tmp_path)
     report = launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_OK))
     assert "99" not in report["requests"]
+
+
+# ---------------------------------------------------------------------------
+# respawn supervision (DESIGN.md §17): a dead worker is replaced under
+# the same process id with its one-shot fault flags stripped, so the
+# replacement serves clean — like the real --self-kill worker whose
+# survivor blocks in the jax.distributed.initialize barrier
+
+# dies only when the one-shot fault flag is still in its argv; the
+# respawned replacement (flag stripped by strip_fault_flags) serves a
+# report that carries a replayed_nfes column
+_FAKE_DIE_ONCE = """
+import json, sys
+out, pid = sys.argv[1], int(sys.argv[2])
+if "--self-kill" in sys.argv and pid == 1:
+    print(f"[fake worker {pid}] dying once", flush=True)
+    sys.exit(13)
+print(f"[fake worker {pid}] serving", flush=True)
+json.dump({
+    "requests": {str(2 * pid): {"tokens": [pid, pid], "nfes": 2.0},
+                 str(2 * pid + 1): {"tokens": [pid], "nfes": 1.0}},
+    "totals": {"nfes_device": 3.0, "nfes_expected": 4.0 if pid else 3.0,
+               "baseline_nfes": 6.0,
+               "replayed_nfes": 1.0 if pid else 0.0},
+    "process_id": pid, "local_devices": 1, "global_devices": 2,
+    "elapsed_s": 0.0,
+}, open(out, "w"))
+"""
+
+
+def _fake_faulty(script):
+    # like _fake, but forwards the launcher's fault dict as a one-shot
+    # argv flag the respawn path must strip
+    def cmd(cfg, coordinator, workload_path, process_id, out_path, fault):
+        argv = [sys.executable, "-c", script, out_path, str(process_id)]
+        if (fault or {}).get("self_kill") == process_id:
+            argv.append("--self-kill")
+        return argv
+    return cmd
+
+
+def test_strip_fault_flags_removes_one_shot_faults():
+    argv = ["python", "-m", "repro.launch.cluster", "--worker",
+            "--self-kill", "--hang", "--slow-ms", "500",
+            "--process-id", "1"]
+    assert strip_fault_flags(argv) == [
+        "python", "-m", "repro.launch.cluster", "--worker",
+        "--process-id", "1",
+    ]
+
+
+def test_launch_cluster_respawns_dead_worker(tmp_path):
+    cfg = _cfg(tmp_path, max_respawns=1, respawn_backoff_s=0.0)
+    report = launch_cluster(
+        cfg, {"requests": []},
+        worker_cmd=_fake_faulty(_FAKE_DIE_ONCE),
+        fault={"self_kill": 1},
+    )
+    # the replacement served worker 1's shard: full rid union, no dups
+    assert sorted(report["requests"]) == ["0", "1", "2", "3"]
+    assert report["respawns"] == [0, 1]
+    # replay-aware conservation closes on the merged ledger
+    t = report["totals"]
+    assert t["replayed_nfes"] == 1.0
+    assert t["nfes_device"] + t["replayed_nfes"] == t["nfes_expected"]
+    # both incarnations share one log file (one artifact per worker)
+    with open(report["worker_logs"][1]) as f:
+        log = f.read()
+    assert "dying once" in log
+    assert "respawn #1" in log
+    assert "serving" in log
+
+
+def test_launch_cluster_respawn_budget_exhausted(tmp_path):
+    # a worker that dies on EVERY spawn must still fail the job once the
+    # budget is spent — respawn must not loop forever
+    cfg = _cfg(tmp_path, max_respawns=2, respawn_backoff_s=0.0)
+    with pytest.raises(ClusterError) as ei:
+        launch_cluster(cfg, {"requests": []}, worker_cmd=_fake(_FAKE_DIE))
+    msg = str(ei.value)
+    assert "worker 1 exited 13" in msg
+    assert "respawn budget 2/2 spent" in msg
+    with open(tmp_path / "worker_1.log") as f:
+        log = f.read()
+    assert log.count("respawn #") == 2
+
+
+def test_merge_reports_defaults_missing_replayed_column(tmp_path):
+    # pre-chaos worker reports lack replayed_nfes; the merge must treat
+    # them as 0 instead of KeyError-ing the whole harvest
+    cfg = _cfg(tmp_path)
+    reports = [
+        {"requests": {"0": {"tokens": [1], "nfes": 2.0}},
+         "totals": {"nfes_device": 2.0, "nfes_expected": 2.0,
+                    "baseline_nfes": 4.0}},
+        {"requests": {"1": {"tokens": [2], "nfes": 1.0}},
+         "totals": {"nfes_device": 1.0, "nfes_expected": 3.0,
+                    "baseline_nfes": 4.0, "replayed_nfes": 2.0}},
+    ]
+    merged = merge_reports(cfg, reports, respawns=[1, 0])
+    assert merged["totals"]["replayed_nfes"] == 2.0
+    assert merged["totals"]["nfes_device"] == 3.0
+    assert merged["respawns"] == [1, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,366 @@
+"""Chaos layer: fault injection, request-level replay recovery, and
+guidance-aware graceful degradation (DESIGN.md §17).
+
+Four families of attack:
+
+* **plan plumbing** — ``FaultSpec``/``FaultPlan`` validation, JSON
+  round-trips, deterministic ``seeded_plan`` schedules, per-worker
+  scoping (``for_process``), and the zero-cost guarantee that a plan
+  with no batcher-level faults never arms an injector;
+* **replay parity** — a lane poisoned mid-run (NaN readback or a
+  dispatch-time host error) quarantines, requeues its residents, and
+  replays them BIT-IDENTICALLY to the fault-free run (B=1 parity), with
+  conservation closing through the replayed column:
+  ``nfes_device + replayed_nfes == nfes_expected`` — at horizon 1 and 8;
+* **degradation** — under page-pool pressure (real sizing or injected
+  ``pool_exhaust``) a guided admission sheds guidance into the cond lane
+  (explicit ``degraded`` telemetry flag, tokens equal the unguided twin)
+  instead of queueing or dropping: the chaos cell's zero-drop guarantee;
+* **eviction** — ``deadline_steps`` drops only still-queued requests,
+  with an ``evicted`` flag and reason, and the run still terminates.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import (
+    BatcherConfig,
+    EngineConfig,
+    FaultPlan,
+    FaultSpec,
+    OverloadPolicy,
+    Request,
+    StepBatcher,
+    seeded_plan,
+)
+from repro.serving.faults import FaultInjector
+from repro.serving.paged_kv import PagePool
+from tests._toy_lm import VOCAB, toy_serving
+from tests.make_golden import golden_model
+
+# -- plan plumbing -----------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="meteor_strike")
+    with pytest.raises(ValueError, match="at_step"):
+        FaultSpec(kind="nan_logits", at_step=-1)
+    with pytest.raises(ValueError, match="pages"):
+        FaultSpec(kind="pool_exhaust", pages=0)
+
+
+def test_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(
+        seed=3,
+        faults=(
+            FaultSpec(kind="nan_logits", at_step=4, target="guided"),
+            FaultSpec(kind="worker_kill", process=1),
+            FaultSpec(kind="pool_exhaust", at_step=2, pages=6, duration=5),
+        ),
+    )
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    path = tmp_path / "plan.json"
+    plan.dump(str(path))
+    assert FaultPlan.load(str(path)) == plan
+
+
+def test_seeded_plan_deterministic():
+    kinds = ["nan_logits", "host_error", "pool_exhaust", "worker_kill"]
+    a, b = seeded_plan(11, kinds), seeded_plan(11, kinds)
+    assert a == b
+    assert seeded_plan(12, kinds) != a
+    assert [f.kind for f in a.faults] == kinds
+
+
+def test_for_process_scopes_batcher_faults():
+    plan = FaultPlan(
+        faults=(
+            FaultSpec(kind="nan_logits", at_step=1, process=0),
+            FaultSpec(kind="host_error", at_step=1, process=1),
+            FaultSpec(kind="pool_exhaust", at_step=1, pages=2),  # unscoped
+            FaultSpec(kind="worker_kill", process=0),  # launcher-level
+        )
+    )
+    p0 = plan.for_process(0)
+    assert [f.kind for f in p0.faults] == ["nan_logits", "pool_exhaust"]
+    p1 = plan.for_process(1)
+    assert [f.kind for f in p1.faults] == ["host_error", "pool_exhaust"]
+
+
+def test_worker_only_plan_never_arms_injector():
+    api, params = toy_serving()
+    bat = StepBatcher(
+        api, params, EngineConfig(max_batch=1), BatcherConfig(max_slots=1),
+        faults=FaultPlan(faults=(FaultSpec(kind="worker_kill"),)),
+    )
+    assert bat._injector is None  # zero-cost: no batcher-level faults
+    bat2 = StepBatcher(
+        api, params, EngineConfig(max_batch=1), BatcherConfig(max_slots=1),
+        faults=FaultPlan(faults=(FaultSpec(kind="nan_logits", at_step=1),)),
+    )
+    assert bat2._injector is not None and bat2._injector.armed
+
+
+def test_pool_pressure_respects_reserve():
+    pool = PagePool(8, 4)  # 7 usable pages
+    inj = FaultInjector(
+        FaultPlan(faults=(FaultSpec(kind="pool_exhaust", pages=20),))
+    )
+    inj.pool_pressure(0, pool, reserve=3)
+    assert pool.free_pages == 3  # held everything above the reserve
+    assert inj.fired[0]["kind"] == "pool_exhaust"
+    inj.release_all(pool)
+    assert pool.free_pages == 7
+    pool.check_conservation()
+
+
+# -- replay parity -----------------------------------------------------------
+
+
+def _toy_reqs(seed=5):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(1, VOCAB, size=5).astype(np.int32),
+                max_new_tokens=10, gamma_bar=2.0),  # never crosses: guided
+        Request(prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+                max_new_tokens=8),  # crosses at gamma_bar=0 -> cond
+        Request(prompt=rng.integers(1, VOCAB, size=6).astype(np.int32),
+                max_new_tokens=7, guided=False),
+    ]
+
+
+def _toy_run(faults=None, horizon=1, overload=None, arrivals=(0, 0, 2)):
+    api, params = toy_serving()
+    bat = StepBatcher(
+        api, params,
+        EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=3),
+        BatcherConfig(max_slots=3, cache_len=32, horizon=horizon),
+        faults=faults, overload=overload,
+    )
+    rids = [
+        bat.submit(r, arrival_step=a)
+        for r, a in zip(_toy_reqs(), arrivals)
+    ]
+    done = bat.run()
+    return bat, rids, done
+
+
+def _assert_conserved(rep):
+    t = rep["totals"]
+    assert t["nfes_device"] + t["replayed_nfes"] == pytest.approx(
+        t["nfes_expected"]
+    ), (
+        f"conservation broke: device={t['nfes_device']} + "
+        f"replayed={t['replayed_nfes']} != expected={t['nfes_expected']}"
+    )
+
+
+@pytest.mark.parametrize("horizon", [1, 8])
+@pytest.mark.parametrize("kind,target", [
+    ("nan_logits", "guided"),
+    ("nan_logits", "cond"),
+    ("host_error", "guided"),
+    ("host_error", "cond"),
+])
+def test_fault_replay_bit_identical(kind, target, horizon):
+    """The tentpole guarantee: kill a lane mid-run; every resident replays
+    to the exact tokens/NFEs of the fault-free run, the replayed ledger
+    column closes conservation, and the monitors stay green."""
+    _, crids, clean = _toy_run(horizon=horizon)
+    plan = FaultPlan(faults=(FaultSpec(kind=kind, at_step=3, target=target),))
+    bat, rids, done = _toy_run(faults=plan, horizon=horizon)
+    rep = bat.report()
+    assert rep["faults"], f"scheduled {kind} fault never fired"
+    assert sorted(done) == sorted(rids), "a request was dropped"
+    for rid, crid in zip(rids, crids):
+        np.testing.assert_array_equal(
+            done[rid]["tokens"], clean[crid]["tokens"],
+            err_msg=f"replay after {kind}@{target} changed tokens",
+        )
+        assert done[rid]["nfes"] == clean[crid]["nfes"]
+    _assert_conserved(rep)
+    t = rep["totals"]
+    assert t["num_replays"] >= 1
+    if horizon == 1:
+        # per-step mode accrues the failed step's price pre-dispatch, so
+        # the discarded incarnation always carries NFEs; horizon mode
+        # never prices a poisoned horizon, so a fault in a request's
+        # FIRST horizon legitimately discards zero accrued NFEs
+        assert t["replayed_nfes"] > 0
+    assert rep["monitors"]["violations"] == []
+    # per-request records carry the replay/degraded/evicted columns
+    replayed = [r for r in rep["requests"].values() if r["replays"]]
+    assert replayed
+
+
+def test_unarmed_plan_keeps_run_identical():
+    """A fault plan with no due batcher faults must not perturb anything:
+    same tokens, zero replays, no replayed NFEs."""
+    _, crids, clean = _toy_run()
+    plan = FaultPlan(faults=(FaultSpec(kind="worker_hang", process=3),))
+    bat, rids, done = _toy_run(faults=plan)
+    for rid, crid in zip(rids, crids):
+        np.testing.assert_array_equal(done[rid]["tokens"],
+                                      clean[crid]["tokens"])
+    t = bat.report()["totals"]
+    assert t["num_replays"] == 0 and t["replayed_nfes"] == 0.0
+    assert t["nfes_device"] == pytest.approx(t["nfes_expected"])
+
+
+def test_runaway_fault_loop_raises():
+    """A lane that faults on every incarnation must crash loudly at the
+    replay cap, not loop forever."""
+    plan = FaultPlan(
+        faults=tuple(
+            FaultSpec(kind="host_error", at_step=0, target="guided")
+            for _ in range(8)
+        )
+    )
+    with pytest.raises(RuntimeError, match="max_replays"):
+        _toy_run(faults=plan)
+
+
+# -- degradation (guidance shedding) -----------------------------------------
+
+
+def _paged_bat(num_pages, overload=None, faults=None, max_slots=2,
+               horizon=1):
+    cfg, api, params = golden_model()
+    return StepBatcher(
+        api, params,
+        EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=max_slots),
+        BatcherConfig(max_slots=max_slots, cache_len=32, paged=True,
+                      page_size=4, num_pages=num_pages, horizon=horizon),
+        overload=overload, faults=faults,
+    )
+
+
+def test_pressure_degrades_guided_to_cond():
+    """A guided request whose 2-branch worst case cannot fit the pool is
+    admitted guidance-shed into the cond lane (not queued forever): its
+    tokens equal the unguided twin's, telemetry flags it degraded, and
+    the ladder history is cond-only."""
+    cfg, _, _ = golden_model()
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(1, cfg.vocab_size, size=6).astype(np.int32)
+    req = Request(prompt=prompt, max_new_tokens=6)  # needs 3 pages/branch
+    # num_pages=5 -> 4 usable: 2-branch (6) fails, 1-branch (3) fits
+    bat = _paged_bat(num_pages=5, overload=OverloadPolicy())
+    rid = bat.submit(req)
+    done = bat.run()
+    rep = bat.report()
+    assert rid in done
+    twin = _paged_bat(num_pages=5)
+    trid = twin.submit(Request(prompt=prompt, max_new_tokens=6, guided=False))
+    tdone = twin.run()
+    np.testing.assert_array_equal(done[rid]["tokens"], tdone[trid]["tokens"])
+    rec = rep["requests"][str(rid)]
+    assert rec["degraded"] and bat.lane_history[rid] == ["cond"]
+    assert rep["totals"]["num_degraded"] == 1
+    assert rep["totals"]["shed_rate_pct"] == pytest.approx(100.0)
+    assert rep["monitors"]["violations"] == []
+    assert done[rid]["guided_steps"] == 0
+
+
+def test_no_degradation_without_overload_policy():
+    """Without an OverloadPolicy the pressure path is unchanged: the
+    admission queues (legacy behaviour) instead of degrading."""
+    cfg, _, _ = golden_model()
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(1, cfg.vocab_size, size=6).astype(np.int32)
+    bat = _paged_bat(num_pages=5)
+    rid = bat.submit(Request(prompt=prompt, max_new_tokens=6))
+    for _ in range(4):
+        bat.step()
+    assert rid not in bat.completed and len(bat._pending) == 1
+
+
+@pytest.mark.parametrize("horizon", [1, 8])
+def test_injected_pool_exhaustion_sheds_not_drops(horizon):
+    """The chaos-cell guarantee: under injected pool pressure every
+    request still completes (zero drops) — guided admissions shed
+    guidance while the pressure lasts, and the pool drains clean."""
+    cfg, api, params = golden_model()
+    rng = np.random.default_rng(23)
+    reqs = [
+        Request(
+            prompt=rng.integers(1, cfg.vocab_size, size=5).astype(np.int32),
+            max_new_tokens=6,
+        )
+        for _ in range(3)
+    ]
+    plan = FaultPlan(
+        faults=(FaultSpec(kind="pool_exhaust", at_step=1, pages=20),)
+    )
+    bat = _paged_bat(num_pages=None,
+                     overload=OverloadPolicy(free_page_frac=0.5),
+                     faults=plan, max_slots=2, horizon=horizon)
+    rids = [bat.submit(r, arrival_step=i * 2) for i, r in enumerate(reqs)]
+    done = bat.run()
+    rep = bat.report()
+    assert sorted(done) == sorted(rids), "pool pressure dropped a request"
+    assert rep["faults"] and rep["faults"][0]["kind"] == "pool_exhaust"
+    assert rep["totals"]["num_degraded"] >= 1, (
+        "injected exhaustion never exercised the degradation path"
+    )
+    assert rep["totals"]["num_evicted"] == 0
+    ps = bat.pool_stats()  # conservation + drained fault pages
+    assert ps["resident"] == 0
+    assert rep["monitors"]["violations"] == []
+
+
+def test_queue_depth_trigger_degrades():
+    """The proactive queue-depth trigger sheds guidance without any page
+    pool at all (contiguous toy batcher)."""
+    api, params = toy_serving()
+    bat = StepBatcher(
+        api, params, EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=1),
+        BatcherConfig(max_slots=1, cache_len=32),
+        overload=OverloadPolicy(queue_depth=0),
+    )
+    rng = np.random.default_rng(3)
+    rids = [
+        bat.submit(
+            Request(prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+                    max_new_tokens=5, gamma_bar=2.0)
+        )
+        for _ in range(2)
+    ]
+    done = bat.run()
+    rep = bat.report()
+    assert sorted(done) == sorted(rids)
+    # first admission saw 1 queued behind it -> degraded; the last one
+    # admitted from an empty queue keeps guidance
+    recs = rep["requests"]
+    assert recs[str(rids[0])]["degraded"]
+    assert not recs[str(rids[1])]["degraded"]
+    assert rep["monitors"]["violations"] == []
+
+
+# -- eviction ----------------------------------------------------------------
+
+
+def test_deadline_evicts_only_queued_requests():
+    api, params = toy_serving()
+    bat = StepBatcher(
+        api, params, EngineConfig(scale=1.5, gamma_bar=0.0, max_batch=1),
+        BatcherConfig(max_slots=1, cache_len=32),
+        overload=OverloadPolicy(deadline_steps=2),
+    )
+    rng = np.random.default_rng(4)
+    first = bat.submit(
+        Request(prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+                max_new_tokens=10, gamma_bar=2.0)
+    )
+    starved = bat.submit(
+        Request(prompt=rng.integers(1, VOCAB, size=4).astype(np.int32),
+                max_new_tokens=5)
+    )
+    done = bat.run()
+    rep = bat.report()
+    assert first in done and starved not in done
+    recs = rep["requests"]
+    assert recs[str(starved)]["evicted"]
+    assert recs[str(starved)]["reason"] == "evicted:deadline"
+    assert not recs[str(first)]["evicted"]
+    assert rep["totals"]["num_evicted"] == 1

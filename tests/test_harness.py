@@ -241,6 +241,36 @@ def test_run_cell_timeout(tmp_path):
     assert "timed out after 0.5s" in res.error
 
 
+def test_run_cell_timeout_surfaces_log_tail(tmp_path):
+    # a killed cell's partial output is the only clue to WHERE it hung:
+    # the timeout error must inline the log tail, not just the budget
+    cell = _cell(
+        cmd=_py("print('entering slow phase', flush=True); "
+                "import time; time.sleep(60)"),
+        timeout_s=1.0,
+    )
+    res = run_cell(cell, str(tmp_path), sleep=lambda s: None)
+    assert res.status == "timeout"
+    assert "tail of" in res.error
+    assert "entering slow phase" in res.error
+
+
+def test_run_cell_records_every_attempt_log(tmp_path):
+    # the JSONL record must name attempt N's log directly, in order
+    cell = _cell(cmd=_py("import sys; sys.exit(3)"), retries=2)
+    res = run_cell(cell, str(tmp_path), sleep=lambda s: None)
+    assert res.attempts == 3
+    assert [os.path.basename(p) for p in res.attempt_logs] == [
+        f"{cell.slug}.try{i}.log" for i in range(3)
+    ]
+    assert res.log == res.attempt_logs[-1]
+    for p in res.attempt_logs:
+        assert os.path.exists(p)
+    # the serialized record (what lands in results.jsonl) carries them
+    line = json.loads(json.dumps(res.to_dict()))
+    assert line["attempt_logs"] == res.attempt_logs
+
+
 def test_run_cell_assert_fail_and_unreadable_result(tmp_path):
     out = tmp_path / "r.json"
     cell = _cell(
@@ -316,6 +346,43 @@ def test_nightly_conditional_asserts_attach_by_horizon():
         keys = {a["key"] for a in c.asserts}
         assert (f"policy_points.{c.axes_dict['policy']}.mean_savings_pct"
                 in keys)
+
+
+def test_nightly_chaos_family():
+    # off by default: the 3-spec unpack every caller does keeps working
+    assert len(nightly_jobs()) == 3
+    specs = nightly_jobs(chaos=True)
+    assert len(specs) == 4
+    chaos = specs[3]
+    cells = chaos.cells()
+    # fault(3) x horizon(2) minus the excluded worker-kill@8 (the
+    # cluster kill has no horizon axis)
+    assert len(cells) == 5
+    combos = {(c.axes_dict["fault"], c.axes_dict["horizon"])
+              for c in cells}
+    assert ("worker-kill", "8") not in combos
+    assert ("worker-kill", "1") in combos
+    for c in cells:
+        cmd = " ".join(c.cmd)
+        assert "repro.launch.chaos" in cmd
+        assert f"--fault {c.axes_dict['fault']}" in cmd
+        keys = {a["key"] for a in c.asserts}
+        # every cell gates zero failures AND zero dropped requests
+        assert {"failed", "dropped_requests"} <= keys
+        # conditional recovery floors attach to the right fault kinds
+        assert (("replays" in keys)
+                == (c.axes_dict["fault"] == "nan-step"))
+        assert (("degraded_requests" in keys)
+                == (c.axes_dict["fault"] == "pool-exhaustion"))
+    # smoke decimation still covers every fault kind and both horizons
+    smoke_cells = nightly_jobs(chaos=True, smoke=True)[3].cells()
+    covered = {}
+    for c in smoke_cells:
+        for k, v in c.axes_dict.items():
+            covered.setdefault(k, set()).add(v)
+    assert covered["fault"] == {"worker-kill", "nan-step",
+                                "pool-exhaustion"}
+    assert covered["horizon"] == {"1", "8"}
 
 
 # ---------------------------------------------------------------------------

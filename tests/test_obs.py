@@ -400,9 +400,9 @@ def test_profiler_failure_never_raises(monkeypatch):
 
 
 def test_obs_config_validation():
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         ObsConfig(bus_capacity=0)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         ObsConfig(profile_rounds=0)
 
 

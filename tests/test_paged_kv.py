@@ -24,6 +24,7 @@ here: the serving bench's savings gate must never compare entries across
 mismatched mesh/horizon/policy configurations.
 """
 import importlib.util
+import json
 import os
 
 import numpy as np
@@ -31,7 +32,19 @@ import pytest
 
 from repro.serving import BatcherConfig, EngineConfig, Request, StepBatcher
 from repro.serving.paged_kv import PageExhausted, PagePool, pages_for
-from tests.make_golden import golden_model
+from tests.make_golden import FIXTURE, golden_model
+
+
+def _fixture_coeffs():
+    """The golden fixture's fitted window coefficients (no re-solve)."""
+    from repro.core.linear_ag import WindowCoeffs
+
+    with open(FIXTURE) as f:
+        g = json.load(f)
+    return WindowCoeffs(
+        K=int(g["coeffs"]["K"]),
+        beta=np.asarray(g["coeffs"]["beta"], np.float32),
+    )
 
 # -- config validation (ValueError, not assert) ------------------------------
 
@@ -301,6 +314,82 @@ def test_pool_exhaustion_queues_admission():
         )
     ps = bat.pool_stats()
     assert ps["resident"] == 0
+
+
+def test_exhaustion_races_mid_horizon_linear_cond_migration():
+    """Pool exhaustion racing the three-lane ladder through fused
+    horizons: a pool sized for exactly one 2-branch worst case keeps the
+    neighbour admission queued until the linear request's guided->linear
+    hop frees its uncond pages (``release_owner``) — the fresh
+    resident's prefill + ``_ensure_pages`` top-ups then land at the very
+    boundary that freed them, with the gamma_bar crossing already
+    detected mid-horizon and the linear->cond ownership move still
+    ahead.  The interleaving must neither corrupt nor drop: token/NFE
+    parity with the contiguous twin, a conserved ledger, a drained
+    pool."""
+    cfg, api, params = golden_model()
+    coeffs = _fixture_coeffs()
+    p = _prompts(23, [6, 5, 6])
+    reqs = [
+        Request(prompt=p[0], max_new_tokens=18, linear=True),
+        Request(prompt=p[1], max_new_tokens=4),
+    ]
+    # gamma_bar=0.8 puts p[0]'s crossing at step 9 — inside the second
+    # fused horizon, after the warmup but before the migration boundary,
+    # so the full guided -> linear -> cond ladder runs under pressure
+    ec = EngineConfig(scale=1.5, gamma_bar=0.8, max_batch=2)
+    H = 8
+
+    def run(paged, num_pages=None):
+        bat = StepBatcher(
+            api, params, ec,
+            BatcherConfig(
+                max_slots=2, cache_len=32, paged=paged, page_size=4,
+                num_pages=num_pages, horizon=H,
+            ),
+            coeffs=coeffs,
+        )
+        rids = [bat.submit(r, arrival_step=0) for r in reqs]
+        return bat, rids, bat.run()
+
+    # worst case for the linear request: 2 branches * pages_for(6+17, 4)
+    # = 12 pages; +1 sentinel -> the pool admits it and nothing else
+    # until its uncond branch is released
+    bat, rids, done = run(True, num_pages=13)
+    rep = bat.report()["requests"]
+    r0, r1 = rep[str(rids[0])], rep[str(rids[1])]
+    # the linear request walked the full ladder, crossing mid-horizon
+    assert bat.lane_history[rids[0]] == ["guided", "linear", "cond"]
+    assert r0["migrated_step"] is not None
+    assert r0["crossed_step"] % H != 0, (
+        f"crossing at step {r0['crossed_step']} landed on a horizon "
+        f"boundary; the race under test is the mid-horizon detection"
+    )
+    # the neighbour was back-pressured until the guided->linear hop's
+    # release_owner freed the uncond pages, then admitted at exactly
+    # that boundary (the contiguous twin admits it at step 0)
+    assert r1["admit_step"] > r1["submit_step"], (
+        "second request admitted on arrival: the pool never exhausted"
+    )
+    assert r1["admit_step"] >= r0["linear_step"], (
+        f"admitted at {r1['admit_step']} before the uncond release at "
+        f"linear_step {r0['linear_step']}"
+    )
+    # decode under the race stays bit-identical to the contiguous twin
+    cbat, crids, cdone = run(False)
+    assert cbat.report()["requests"][str(crids[1])]["admit_step"] == 0, (
+        "twin also queued the neighbour: the delay above is not the "
+        "pool's back-pressure"
+    )
+    for rid, crid in zip(rids, crids):
+        np.testing.assert_array_equal(
+            done[rid]["tokens"], cdone[crid]["tokens"],
+            err_msg="exhaustion x migration race changed decoded tokens",
+        )
+        assert done[rid]["nfes"] == cdone[crid]["nfes"]
+    ps = bat.pool_stats()  # runs check_conservation internally
+    assert ps["allocated_total"] == ps["freed_total"] + ps["resident"]
+    assert ps["resident"] == 0, "pages leaked after the migration race"
 
 
 # -- churn conservation property ---------------------------------------------

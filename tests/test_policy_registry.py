@@ -185,10 +185,10 @@ def test_non_default_policy_requires_guided_lane():
     bat = StepBatcher(
         api, params, EngineConfig(max_batch=1), BatcherConfig(max_slots=1)
     )
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         bat.submit(Request(prompt=np.array([1, 2], np.int32),
                            max_new_tokens=4, guided=False, policy="compress"))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         bat.submit(Request(prompt=np.array([1, 2], np.int32),
                            max_new_tokens=4, policy="unregistered"))
 

@@ -100,7 +100,7 @@ def test_pad_prompts_bos_only_path():
 def test_pad_prompts_rejects_oversized_negative():
     reqs = [Request(prompt=np.array([1, 2], np.int32), max_new_tokens=4,
                     negative_prompt=np.array([3, 4, 5], np.int32))]
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         pad_prompts(reqs, use_negative=True)
 
 
